@@ -1,0 +1,104 @@
+"""Shared benchmark machinery: trace cache, method runners, CSV emit.
+
+Every figure benchmark replays the SAME seeded synthetic traces (paper
+§V.A setup, see repro.traces.synthetic.paper_trace and EXPERIMENTS.md for
+the deviation analysis vs the proprietary Kaggle dumps) through the method
+set of Fig. 5:
+
+  no_packing / dp_greedy (offline 2-pack) / packcache (online 2-pack) /
+  akpc_base (w/o CS, w/o ACM) / akpc (proposed) / opt (lower bound)
+
+Costs are reported relative to OPT (paper convention, OPT = 1).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    AKPCConfig,
+    CostParams,
+    opt_lower_bound,
+    run_akpc,
+    run_akpc_variant,
+    run_dp_greedy,
+    run_no_packing,
+    run_packcache2,
+)
+from repro.traces import paper_trace
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "experiments/results")
+N_REQUESTS = int(os.environ.get("REPRO_BENCH_REQUESTS", "150000"))
+N_SWEEP = int(os.environ.get("REPRO_BENCH_SWEEP_REQUESTS", "40000"))
+
+@functools.lru_cache(maxsize=8)
+def get_trace(kind: str, n_requests: int, seed: int = 0):
+    return paper_trace(kind, n_requests=n_requests, seed=seed)
+
+
+def t_cg_for(trace, params: CostParams | None = None) -> float:
+    """Clique-generation period: a small multiple of the cache TTL dt —
+    long enough to observe co-access, short enough to track drift.
+    (Regenerating much faster than dt churns partitions and loses cached
+    presence; see EXPERIMENTS.md §Fig5 notes.)"""
+    dt = (params or CostParams()).dt
+    span = float(trace.times[-1] - trace.times[0])
+    return float(min(max(0.3 * dt, span / 50.0), max(span / 4.0, 1e-6)))
+
+
+def run_methods(trace, params: CostParams, methods=None, top_frac: float = 1.0):
+    """Returns {method: {total, transfer, caching, seconds}}."""
+    t_cg = t_cg_for(trace, params)
+    out = {}
+
+    def record(name, fn):
+        if methods is not None and name not in methods:
+            return
+        t0 = time.perf_counter()
+        res = fn()
+        dt = time.perf_counter() - t0
+        costs = res.costs if hasattr(res, "costs") else res
+        out[name] = {
+            "total": costs.total,
+            "transfer": costs.transfer,
+            "caching": costs.caching,
+            "seconds": round(dt, 2),
+        }
+        if hasattr(res, "clique_sizes"):
+            sizes = res.clique_sizes
+            out[name]["clique_sizes"] = np.bincount(sizes).tolist()
+
+    record("no_packing", lambda: run_no_packing(trace, params))
+    record("dp_greedy", lambda: run_dp_greedy(trace, params, top_frac=top_frac))
+    record("packcache", lambda: run_packcache2(trace, params, t_cg=t_cg,
+                                               top_frac=top_frac))
+    record("akpc_base", lambda: run_akpc_variant(
+        trace, params, split=False, approx_merge=False, t_cg=t_cg,
+        top_frac=top_frac))
+    record("akpc", lambda: run_akpc(trace, AKPCConfig(
+        params=params, t_cg=t_cg, top_frac=top_frac)))
+    record("opt", lambda: opt_lower_bound(trace, params))
+    return out
+
+
+def relative_to_opt(res: dict) -> dict:
+    opt = res["opt"]["total"]
+    return {k: round(v["total"] / opt, 4) for k, v in res.items()}
+
+
+def emit(rows: list[tuple]) -> None:
+    """CSV to stdout: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path

@@ -1,0 +1,30 @@
+"""Fig. 5 — total cost of every method vs OPT on both traces (stacked
+transfer/caching components)."""
+from __future__ import annotations
+
+from .common import N_REQUESTS, emit, get_trace, relative_to_opt, run_methods, save_json
+from repro.core import CostParams
+
+
+def main() -> list[tuple]:
+    params = CostParams()                     # Table II base values
+    rows, payload = [], {}
+    for kind in ("netflix", "spotify"):
+        tr = get_trace(kind, N_REQUESTS)
+        res = run_methods(tr, params)
+        rel = relative_to_opt(res)
+        payload[kind] = {"raw": res, "relative": rel}
+        for m, v in rel.items():
+            ct = res[m]["transfer"] / res["opt"]["total"]
+            rows.append((f"fig5/{kind}/{m}", int(res[m]["seconds"] * 1e6),
+                         f"rel_total={v};rel_transfer={round(ct, 4)}"))
+        akpc_vs_pc = 1 - res["akpc"]["total"] / res["packcache"]["total"]
+        rows.append((f"fig5/{kind}/akpc_vs_packcache_saving", 0,
+                     f"{round(100 * akpc_vs_pc, 1)}%"))
+    save_json("fig5_cost_comparison", payload)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

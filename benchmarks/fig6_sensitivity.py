@@ -1,0 +1,37 @@
+"""Fig. 6 — sensitivity to (a) discount factor alpha, (b) cost ratio
+rho = lambda/mu (the paper reuses the symbol gamma for this; we keep rho)."""
+from __future__ import annotations
+
+import dataclasses
+
+from .common import N_SWEEP, emit, get_trace, relative_to_opt, run_methods, save_json
+from repro.core import CostParams
+
+ALPHAS = [0.6, 0.7, 0.8, 0.85, 0.9, 1.0]
+RHOS = [1.0, 2.0, 4.0, 6.0, 10.0]
+METHODS = ("no_packing", "packcache", "akpc", "opt")
+
+
+def main() -> list[tuple]:
+    rows, payload = [], {"alpha": {}, "rho": {}}
+    for kind in ("netflix", "spotify"):
+        tr = get_trace(kind, N_SWEEP)
+        for a in ALPHAS:
+            res = run_methods(tr, CostParams(alpha=a), methods=METHODS)
+            rel = relative_to_opt(res)
+            payload["alpha"].setdefault(kind, {})[a] = rel
+            rows.append((f"fig6a/{kind}/alpha={a}", 0,
+                         ";".join(f"{m}={rel[m]}" for m in METHODS)))
+        for r in RHOS:
+            res = run_methods(tr, CostParams(rho=r), methods=METHODS)
+            rel = relative_to_opt(res)
+            payload["rho"].setdefault(kind, {})[r] = rel
+            rows.append((f"fig6b/{kind}/rho={r}", 0,
+                         ";".join(f"{m}={rel[m]}" for m in METHODS)))
+    save_json("fig6_sensitivity", payload)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Fig. 8 — scalability: (a) #servers, (b) #data points, (c) batch size.
+
+Batch size maps to requests per T_CG window (the paper batches 200 requests;
+larger windows expose more co-access to the clique miner)."""
+from __future__ import annotations
+
+from .common import N_SWEEP, emit, relative_to_opt, run_methods, save_json, t_cg_for
+from repro.core import AKPCConfig, CostParams, opt_lower_bound, run_akpc
+from repro.traces import SynthConfig, synth_trace
+
+SERVERS = [60, 150, 300, 600, 1200]
+ITEMS = [60, 240, 960, 3600]
+BATCHES = [50, 100, 200, 500]
+METHODS = ("akpc", "no_packing", "opt")
+
+
+def _trace(n_items=60, n_servers=600, seed=0):
+    return synth_trace(SynthConfig(
+        kind="netflix", n_items=n_items, n_servers=n_servers,
+        n_requests=N_SWEEP, t_max=6.0 * N_SWEEP / 100_000.0,
+        bundle_cover=1.0, bundle_zipf=0.7, server_affinity=2, seed=seed))
+
+
+def main() -> list[tuple]:
+    rows, payload = [], {"servers": {}, "items": {}, "batch": {}}
+    params = CostParams()
+    base_total = None
+    for m in SERVERS:
+        tr = _trace(n_servers=m)
+        res = run_methods(tr, params, methods=METHODS)
+        rel = relative_to_opt(res)
+        payload["servers"][m] = {"rel": rel, "akpc_abs": res["akpc"]["total"]}
+        if base_total is None:
+            base_total = res["akpc"]["total"]
+        rows.append((f"fig8a/servers={m}", 0,
+                     f"akpc_rel={rel['akpc']};abs_vs_60={round(res['akpc']['total']/base_total,2)}"))
+    base_total = None
+    for n in ITEMS:
+        tr = _trace(n_items=n)
+        res = run_methods(tr, params, methods=METHODS)
+        rel = relative_to_opt(res)
+        payload["items"][n] = {"rel": rel, "akpc_abs": res["akpc"]["total"]}
+        if base_total is None:
+            base_total = res["akpc"]["total"]
+        rows.append((f"fig8b/items={n}", 0,
+                     f"akpc_rel={rel['akpc']};abs_vs_60={round(res['akpc']['total']/base_total,2)}"))
+    tr = _trace()
+    for b in BATCHES:
+        # batch size -> clique-gen window of b requests on average
+        span = float(tr.times[-1] - tr.times[0])
+        t_cg = span * b / tr.n_requests
+        res = run_akpc(tr, AKPCConfig(params=params, t_cg=t_cg, top_frac=1.0))
+        opt = opt_lower_bound(tr, params)
+        rel = res.total / opt.total
+        payload["batch"][b] = rel
+        rows.append((f"fig8c/batch={b}", 0, f"akpc_rel={round(rel,4)}"))
+    save_json("fig8_scalability", payload)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

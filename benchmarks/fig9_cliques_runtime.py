@@ -1,0 +1,60 @@
+"""Fig. 9 — (a) clique-size distribution across AKPC variants,
+(b) clique-generation wall time vs number of data items (up to 10k)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import N_SWEEP, emit, get_trace, save_json, t_cg_for
+from repro.core import AKPCConfig, CostParams, run_akpc, run_akpc_variant
+from repro.core.crm import build_window_crm
+from repro.core.cliques import generate_cliques
+from repro.traces import SynthConfig, synth_trace
+
+RUNTIME_ITEMS = [100, 1000, 4000, 10000]
+
+
+def main() -> list[tuple]:
+    rows, payload = [], {"dist": {}, "runtime": {}}
+    params = CostParams()
+    for kind in ("netflix", "spotify"):
+        tr = get_trace(kind, N_SWEEP)
+        t_cg = t_cg_for(tr, params)
+        variants = {
+            "akpc": run_akpc(tr, AKPCConfig(params=params, t_cg=t_cg, top_frac=1.0)),
+            "akpc_no_acm": run_akpc_variant(tr, params, split=True,
+                                            approx_merge=False, t_cg=t_cg,
+                                            top_frac=1.0),
+            "akpc_base": run_akpc_variant(tr, params, split=False,
+                                          approx_merge=False, t_cg=t_cg,
+                                          top_frac=1.0),
+        }
+        for name, res in variants.items():
+            sizes = np.concatenate(res.size_history) if res.size_history else np.array([])
+            hist = np.bincount(sizes.astype(int), minlength=11)[:11].tolist() if sizes.size else []
+            mean = float(sizes.mean()) if sizes.size else 0.0
+            payload["dist"].setdefault(kind, {})[name] = {
+                "hist": hist, "mean": round(mean, 2)}
+            rows.append((f"fig9a/{kind}/{name}", 0,
+                         f"mean_size={round(mean,2)};hist={hist}"))
+
+    # (b) clique-generation runtime: one window over n items (top-10% mined)
+    for n in RUNTIME_ITEMS:
+        tr = synth_trace(SynthConfig(
+            kind="spotify", n_items=n, n_servers=100, n_requests=20000,
+            t_max=20.0, bundle_cover=1.0, bundle_zipf=0.7, seed=0))
+        t0 = time.perf_counter()
+        crm = build_window_crm(tr.items, n, theta=0.2, top_frac=0.1)
+        part = generate_cliques(None, None, crm, n, omega=5, gamma=0.85)
+        dt = time.perf_counter() - t0
+        payload["runtime"][n] = round(dt, 4)
+        rows.append((f"fig9b/items={n}", int(dt * 1e6),
+                     f"seconds={round(dt,3)};cliques={sum(1 for c in part.cliques if len(c)>1)}"))
+    save_json("fig9_cliques_runtime", payload)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun.jsonl)."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit, save_json
+
+DRYRUN = os.environ.get("REPRO_DRYRUN", "experiments/dryrun.jsonl")
+
+
+def load_records(path=DRYRUN):
+    recs = []
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    recs.append(json.loads(line))
+                except json.JSONDecodeError:
+                    pass
+    return recs
+
+
+def main() -> list[tuple]:
+    rows = []
+    recs = [r for r in load_records() if r.get("mesh") == "single"]
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}", 0,
+            f"dom={r['dominant']};compute_s={r['compute_s']:.3g};"
+            f"memory_s={r['memory_s']:.3g};collective_s={r['collective_s']:.3g};"
+            f"useful={r['useful_flops_ratio']};frac={r['roofline_fraction']};"
+            f"fits={r['fits_hbm']}"
+        ))
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    for r in skipped:
+        rows.append((f"roofline/{r['arch']}/{r['shape']}", 0, "N/A(sub-quadratic-only)"))
+    save_json("roofline_report", {"n_ok": len(ok), "n_skipped": len(skipped)})
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Table I — transfer/caching costs for packed vs unpacked bundles."""
+from __future__ import annotations
+
+from .common import emit, save_json
+from repro.core import CostParams
+
+
+def main() -> list[tuple]:
+    p = CostParams()
+    rows, payload = [], {}
+    for k in (1, 2, 3, 5):
+        unp = p.transfer_cost(k, packed=False)
+        pkd = p.transfer_cost(k, packed=True)
+        cache = p.caching_cost(k, p.dt)
+        payload[k] = {"unpacked": unp, "packed": pkd, "caching": cache}
+        rows.append((f"table1/k={k}", 0,
+                     f"unpacked={unp};packed={round(pkd,3)};caching={cache}"))
+    save_json("table1_cost_model", payload)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Full paper-style CDN simulation: both traces, all methods, hyper-param
+sensitivity mini-sweep — a compact reproduction of Figs. 5-7.
+
+    PYTHONPATH=src python examples/cdn_simulation.py
+"""
+from repro.core import AKPCConfig, CostParams, opt_lower_bound, run_akpc, \
+    run_no_packing, run_packcache2
+from repro.traces import paper_trace
+
+
+def main():
+    for kind in ("netflix", "spotify"):
+        tr = paper_trace(kind, n_requests=40_000)
+        print(f"\n=== {kind} ===")
+        for alpha in (0.6, 0.8, 1.0):
+            params = CostParams(alpha=alpha)
+            t_cg = 0.3 * params.dt
+            akpc = run_akpc(tr, AKPCConfig(params=params, t_cg=t_cg,
+                                           top_frac=1.0)).costs.total
+            pc = run_packcache2(tr, params, t_cg=t_cg, top_frac=1.0).total
+            nop = run_no_packing(tr, params).total
+            opt = opt_lower_bound(tr, params).total
+            print(f"alpha={alpha}: AKPC {akpc/opt:.2f}x  PackCache "
+                  f"{pc/opt:.2f}x  NoPacking {nop/opt:.2f}x  (vs OPT=1)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: AKPC vs every baseline on a synthetic Netflix-like trace.
+
+    PYTHONPATH=src python examples/quickstart.py [--requests 50000]
+"""
+import argparse
+
+from repro.core import (
+    AKPCConfig, CostParams, opt_lower_bound, run_akpc, run_akpc_variant,
+    run_dp_greedy, run_no_packing, run_packcache2,
+)
+from repro.traces import paper_trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=50_000)
+    ap.add_argument("--kind", default="netflix", choices=["netflix", "spotify"])
+    args = ap.parse_args()
+
+    params = CostParams()                      # paper Table II
+    tr = paper_trace(args.kind, n_requests=args.requests)
+    print(f"trace: {tr.name}  {tr.n_requests} requests, "
+          f"{tr.n} items, {tr.m} servers")
+
+    t_cg = 0.3 * params.dt
+    rows = {
+        "No Packing": run_no_packing(tr, params),
+        "DP_Greedy (offline 2-pack)": run_dp_greedy(tr, params, top_frac=1.0),
+        "PackCache (online 2-pack)": run_packcache2(tr, params, t_cg=t_cg,
+                                                    top_frac=1.0),
+        "AKPC w/o CS, w/o ACM": run_akpc_variant(
+            tr, params, split=False, approx_merge=False, t_cg=t_cg,
+            top_frac=1.0).costs,
+        "AKPC (proposed)": run_akpc(tr, AKPCConfig(
+            params=params, t_cg=t_cg, top_frac=1.0)).costs,
+        "OPT (lower bound)": opt_lower_bound(tr, params),
+    }
+    opt = rows["OPT (lower bound)"].total
+    print(f"\n{'method':<28s} {'C_T':>10s} {'C_P':>10s} {'total':>10s} {'vs OPT':>7s}")
+    for name, c in rows.items():
+        print(f"{name:<28s} {c.transfer:>10.0f} {c.caching:>10.0f} "
+              f"{c.total:>10.0f} {c.total / opt:>7.3f}")
+    akpc = rows["AKPC (proposed)"].total
+    pc = rows["PackCache (online 2-pack)"].total
+    print(f"\nAKPC saves {100 * (1 - akpc / pc):.1f}% vs the best prior "
+          f"online method (PackCache).")
+
+
+if __name__ == "__main__":
+    main()

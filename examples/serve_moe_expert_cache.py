@@ -1,0 +1,54 @@
+"""Serve a (reduced) MoE model with batched requests; the AKPC expert cache
+observes routing outcomes, packs co-activated experts into cliques and
+reports the transfer-cost saving vs per-expert fetching.
+
+    PYTHONPATH=src python examples/serve_moe_expert_cache.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.api import build_model
+from repro.serving import BatchedServer, ExpertCacheManager, Request
+
+
+def main():
+    cfg = get_smoke_config("granite_moe_3b_a800m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mgr = ExpertCacheManager(n_experts=cfg.moe.n_experts, n_hosts=2, t_cg=24.0)
+
+    # routing tap: recompute the router's top-k for the served tokens
+    router0 = np.asarray(params["layers"]["mlp"]["router"][0], np.float32)
+    embed = np.asarray(params["embed"], np.float32)
+
+    def tap(p, tokens):
+        x = embed[tokens[:, 0]]
+        logits = x @ router0
+        topk = np.argsort(-logits, axis=-1)[:, : cfg.moe.top_k]
+        mgr.observe(topk, host=0)
+
+    srv = BatchedServer(model, params, batch_size=4, cache_len=64,
+                        routing_tap=tap)
+    rng = np.random.default_rng(0)
+    for rid in range(24):
+        prompt = rng.integers(0, cfg.vocab, size=rng.integers(2, 6)).tolist()
+        srv.submit(Request(rid=rid, prompt=prompt, max_new=8))
+    done = srv.run(max_steps=500)
+    print(f"served {len(done)} requests in {srv.steps} decode steps")
+
+    stats = mgr.stats()
+    print(f"expert-cache: {stats.n_observations} routing observations, "
+          f"{len(stats.cliques)} expert cliques: {stats.cliques[:6]}")
+    print(f"AKPC packed-expert cost {stats.akpc_total:.1f} vs per-expert "
+          f"{stats.nopack_total:.1f}  ->  {stats.saving_pct:.1f}% saved")
+
+    # pack the expert weights per clique for single-DMA gathers
+    wi0 = np.asarray(params["layers"]["mlp"]["wi"][0], np.float32)
+    table, where = mgr.packed_tables(wi0.reshape(wi0.shape[0], -1))
+    print(f"packed table: {table.shape} (cliques x omega x flattened expert)")
+
+
+if __name__ == "__main__":
+    main()

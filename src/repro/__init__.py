@@ -1,0 +1,4 @@
+"""repro: Adaptive K-PackCache (AKPC) — faithful reproduction + production
+multi-pod JAX framework.  See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

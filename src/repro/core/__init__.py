@@ -1,0 +1,40 @@
+"""AKPC core: the paper's contribution (Algorithms 1-6, Theorems 1-2)."""
+from .akpc import AKPC, AKPCConfig, AKPCResult, run_akpc, run_akpc_variant
+from .baselines import (
+    greedy_pair_matching,
+    opt_lower_bound,
+    run_dp_greedy,
+    run_no_packing,
+    run_packcache2,
+)
+from .cliques import CliquePartition, generate_cliques
+from .competitive import adversarial_trace, per_request_ratio_check, replay_adversary
+from .cost import CostBreakdown, CostParams, competitive_bound, competitive_bound_corrected
+from .crm import WindowCRM, build_window_crm
+from .engine import CacheState, ReplayEngine
+
+__all__ = [
+    "AKPC",
+    "AKPCConfig",
+    "AKPCResult",
+    "CacheState",
+    "CliquePartition",
+    "CostBreakdown",
+    "CostParams",
+    "ReplayEngine",
+    "WindowCRM",
+    "adversarial_trace",
+    "build_window_crm",
+    "competitive_bound",
+    "competitive_bound_corrected",
+    "generate_cliques",
+    "greedy_pair_matching",
+    "opt_lower_bound",
+    "per_request_ratio_check",
+    "replay_adversary",
+    "run_akpc",
+    "run_akpc_variant",
+    "run_dp_greedy",
+    "run_no_packing",
+    "run_packcache2",
+]

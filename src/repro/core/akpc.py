@@ -1,0 +1,149 @@
+"""AKPC orchestrator (paper Alg. 1): the three modules wired together.
+
+* Event 1 (every T_CG): Clique Generation Module — Alg. 2 (CRM), Alg. 4
+  (adjust previous cliques), Alg. 3 (split oversized + approximate merge);
+* Event 2 (per request): Data Request Handling — Alg. 5 via ReplayEngine;
+* Event 3 (expiry): Alg. 6 last-copy keepalive — folded into the engine's
+  anchor invariant (see engine.py docstring).
+
+Ablation variants of the paper (Fig. 5/7/9):
+* ``AKPC``                     split=True,  approx_merge=True
+* ``AKPC w/o ACM``             split=True,  approx_merge=False
+* ``AKPC w/o CS, w/o ACM``     split=False, approx_merge=False  (omega unused)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Callable
+
+import numpy as np
+
+from ..traces.loader import Trace
+from .cliques import CliquePartition, generate_cliques
+from .cost import CostBreakdown, CostParams
+from .crm import WindowCRM, build_window_crm
+from .engine import CachingCharge, ReplayEngine
+
+
+@dataclasses.dataclass
+class AKPCConfig:
+    params: CostParams = dataclasses.field(default_factory=CostParams)
+    t_cg: float = 50.0               # clique-generation period (Fig. 3)
+    top_frac: float = 0.1            # CRM restricted to top-10% items (§V.A)
+    enable_split: bool = True        # CS  module
+    enable_approx_merge: bool = True # ACM module
+    caching_charge: CachingCharge = "requested"
+    seed_new_cliques: bool = True
+    # accelerated hooks (Pallas kernel wrappers); None = numpy oracles
+    crm_matmul: Callable | None = None
+    pair_edges: Callable | None = None
+
+
+@dataclasses.dataclass
+class AKPCResult:
+    costs: CostBreakdown
+    clique_sizes: np.ndarray         # sizes of all cliques, final window
+    size_history: list[np.ndarray]   # per-window non-singleton size arrays
+    n_windows: int
+    cg_seconds: float                # total clique-generation wall time
+    config: AKPCConfig
+
+    @property
+    def total(self) -> float:
+        return self.costs.total
+
+
+class AKPC:
+    """Adaptive K-PackCache (the paper's proposed online algorithm)."""
+
+    def __init__(self, n: int, m: int, cfg: AKPCConfig):
+        self.cfg = cfg
+        self.engine = ReplayEngine(
+            n,
+            m,
+            cfg.params,
+            caching_charge=cfg.caching_charge,
+            seed_new_cliques=cfg.seed_new_cliques,
+        )
+        self._prev_crm: WindowCRM | None = None
+        self._partition: CliquePartition | None = None
+        self.size_history: list[np.ndarray] = []
+        self.cg_seconds = 0.0
+        self.n_windows = 0
+
+    # -- Event 1: clique generation on a window of requests -----------------
+    def _generate(self, items: np.ndarray, servers: np.ndarray, now: float):
+        del servers, now
+        cfg = self.cfg
+        t0 = _time.perf_counter()
+        n = self.engine.n
+        crm = build_window_crm(
+            items, n, cfg.params.theta, cfg.top_frac, crm_matmul=cfg.crm_matmul
+        )
+        omega = cfg.params.omega if cfg.enable_split else n
+        part = generate_cliques(
+            self._partition,
+            self._prev_crm,
+            crm,
+            n,
+            omega,
+            cfg.params.gamma,
+            pair_edges=cfg.pair_edges,
+            enable_split=cfg.enable_split,
+            enable_approx_merge=cfg.enable_approx_merge,
+        )
+        self._prev_crm = crm
+        self._partition = part
+        self.cg_seconds += _time.perf_counter() - t0
+        self.n_windows += 1
+        sizes = part.sizes()
+        self.size_history.append(sizes[sizes > 1])
+        return part
+
+    def run(self, trace: Trace) -> AKPCResult:
+        costs = self.engine.replay(
+            trace, clique_generator=self._generate, t_cg=self.cfg.t_cg
+        )
+        final = (
+            self._partition.sizes()
+            if self._partition is not None
+            else np.ones(self.engine.n, dtype=np.int32)
+        )
+        return AKPCResult(
+            costs=costs,
+            clique_sizes=final,
+            size_history=self.size_history,
+            n_windows=self.n_windows,
+            cg_seconds=self.cg_seconds,
+            config=self.cfg,
+        )
+
+
+def run_akpc(trace: Trace, cfg: AKPCConfig | None = None) -> AKPCResult:
+    cfg = cfg or AKPCConfig()
+    return AKPC(trace.n, trace.m, cfg).run(trace)
+
+
+def run_akpc_variant(
+    trace: Trace,
+    params: CostParams,
+    *,
+    split: bool = True,
+    approx_merge: bool = True,
+    t_cg: float = 50.0,
+    top_frac: float = 0.1,
+    caching_charge: CachingCharge = "requested",
+) -> AKPCResult:
+    """Convenience wrapper for the paper's ablation variants."""
+    return run_akpc(
+        trace,
+        AKPCConfig(
+            params=params,
+            t_cg=t_cg,
+            top_frac=top_frac,
+            enable_split=split,
+            enable_approx_merge=approx_merge,
+            caching_charge=caching_charge,
+        ),
+    )

@@ -1,0 +1,351 @@
+"""Disjoint clique construction with reuse, splitting and approximate merging.
+
+Implements the paper's Clique Generation Module:
+
+* Alg. 4  — incremental adjustment of the previous window's cliques from the
+            binary-CRM edge diff (remove -> split along the edge, add -> merge
+            when the union stays a valid clique);
+* Alg. 3  — splitting of cliques larger than omega along weakest
+            co-utilisation edges, and APPROXIMATE merging: two cliques are
+            merged when their union has size exactly omega and edge density
+            >= gamma (near-cliques are accepted);
+
+Every item always belongs to exactly one clique (singleton by default), so a
+clique set is a partition of [0, n).  This makes the cache bookkeeping dense
+and vectorisable: cliques are rows of an (k, m) expiry matrix.
+
+The all-pairs merge scoring used by Alg. 3 lines 4-10 is, in matrix form,
+``X = M A M^T`` with M the (k, n) clique membership matrix and A the binary
+CRM — two matmuls, which is what ``repro.kernels.clique_density`` computes on
+the MXU.  The numpy implementation below is the oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .crm import WindowCRM
+
+Edge = tuple[int, int]
+
+
+@dataclasses.dataclass
+class CliquePartition:
+    """Partition of items [0, n) into disjoint cliques.
+
+    ``cliques``    list of sorted int tuples (includes singletons)
+    ``clique_of``  (n,) int32: item id -> clique index
+    """
+
+    n: int
+    cliques: list[tuple[int, ...]]
+    clique_of: np.ndarray
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def singletons(cls, n: int) -> "CliquePartition":
+        return cls(
+            n=n,
+            cliques=[(i,) for i in range(n)],
+            clique_of=np.arange(n, dtype=np.int32),
+        )
+
+    @classmethod
+    def from_cliques(cls, n: int, groups: list[tuple[int, ...]]) -> "CliquePartition":
+        clique_of = np.full(n, -1, dtype=np.int32)
+        cliques: list[tuple[int, ...]] = []
+        for g in groups:
+            g = tuple(sorted(g))
+            idx = len(cliques)
+            cliques.append(g)
+            for d in g:
+                if clique_of[d] != -1:
+                    raise ValueError(f"item {d} in two cliques")
+                clique_of[d] = idx
+        for d in range(n):
+            if clique_of[d] == -1:
+                clique_of[d] = len(cliques)
+                cliques.append((d,))
+        return cls(n=n, cliques=cliques, clique_of=clique_of)
+
+    # -- views -------------------------------------------------------------
+    @property
+    def k(self) -> int:
+        return len(self.cliques)
+
+    def sizes(self) -> np.ndarray:
+        return np.array([len(c) for c in self.cliques], dtype=np.int32)
+
+    def membership_matrix(self) -> np.ndarray:
+        """(k, n) float32 0/1 membership matrix M."""
+        M = np.zeros((self.k, self.n), dtype=np.float32)
+        for i, c in enumerate(self.cliques):
+            M[i, list(c)] = 1.0
+        return M
+
+    def non_singletons(self) -> list[tuple[int, ...]]:
+        return [c for c in self.cliques if len(c) > 1]
+
+    def canonical(self) -> list[tuple[int, ...]]:
+        return sorted(self.non_singletons())
+
+
+# ---------------------------------------------------------------------------
+# weight lookup helpers: CRM matrices are restricted to hot items, items
+# outside get weight 0 / no edge.
+# ---------------------------------------------------------------------------
+class _CrmView:
+    """Global-id view over a WindowCRM (cold items have no edges)."""
+
+    def __init__(self, crm: WindowCRM, n: int):
+        self._lut = np.full(n, -1, dtype=np.int32)
+        self._lut[crm.hot_items] = np.arange(crm.n_hot, dtype=np.int32)
+        self._norm = crm.norm
+        self._bin = crm.binary
+
+    def weight(self, u: int, v: int) -> float:
+        a, b = self._lut[u], self._lut[v]
+        if a < 0 or b < 0:
+            return 0.0
+        return float(self._norm[a, b])
+
+    def connected(self, u: int, v: int) -> bool:
+        a, b = self._lut[u], self._lut[v]
+        if a < 0 or b < 0:
+            return False
+        return bool(self._bin[a, b])
+
+    def edges_within(self, group: tuple[int, ...]) -> int:
+        idx = self._lut[list(group)]
+        idx = idx[idx >= 0]
+        if idx.size < 2:
+            return 0
+        sub = self._bin[np.ix_(idx, idx)]
+        return int(np.triu(sub, k=1).sum())
+
+    def fully_connected(self, group: tuple[int, ...]) -> bool:
+        g = len(group)
+        return self.edges_within(group) == g * (g - 1) // 2
+
+
+# ---------------------------------------------------------------------------
+# Alg. 4 — adjust previous cliques from the edge diff
+# ---------------------------------------------------------------------------
+def split_clique_on_edge(
+    clique: tuple[int, ...], u: int, v: int, view: _CrmView
+) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Split ``clique`` into two groups seeded at the removed edge (u, v).
+
+    Each remaining member joins the side it is more strongly co-utilised
+    with (sum of normalised CRM weights) — the "two newly formed cliques
+    generated from removing edge (u, v)" of Alg. 4 line 7.
+    """
+    left = [u]
+    right = [v]
+    for d in clique:
+        if d == u or d == v:
+            continue
+        wl = sum(view.weight(d, x) for x in left)
+        wr = sum(view.weight(d, x) for x in right)
+        (left if wl >= wr else right).append(d)
+    return tuple(sorted(left)), tuple(sorted(right))
+
+
+def adjust_previous_cliques(
+    prev: CliquePartition,
+    added: set[Edge],
+    removed: set[Edge],
+    view: _CrmView,
+    omega: int,
+) -> list[tuple[int, ...]]:
+    """Alg. 4: reuse the previous partition, patching it edge by edge."""
+    groups: list[set[int]] = [set(c) for c in prev.cliques]
+    of = prev.clique_of.copy()
+
+    def _replace(idx: int, parts: list[set[int]]) -> None:
+        groups[idx] = parts[0]
+        for d in parts[0]:
+            of[d] = idx
+        for p in parts[1:]:
+            j = len(groups)
+            groups.append(p)
+            for d in p:
+                of[d] = j
+
+    for (u, v) in sorted(removed):
+        cu = int(of[u])
+        if cu == int(of[v]) and len(groups[cu]) > 1:
+            a, b = split_clique_on_edge(tuple(sorted(groups[cu])), u, v, view)
+            _replace(cu, [set(a), set(b)])
+
+    for (u, v) in sorted(added):
+        cu, cv = int(of[u]), int(of[v])
+        if cu == cv:
+            continue
+        union = groups[cu] | groups[cv]
+        if len(union) <= omega and view.fully_connected(tuple(sorted(union))):
+            # a new exact clique is formed (Alg. 4 lines 8-9)
+            keep, drop = (cu, cv) if cu < cv else (cv, cu)
+            groups[keep] = union
+            groups[drop] = set()
+            for d in union:
+                of[d] = keep
+
+    return [tuple(sorted(g)) for g in groups if g]
+
+
+# ---------------------------------------------------------------------------
+# Alg. 3 lines 2-3 — recursive weakest-edge splitting of oversized cliques
+# ---------------------------------------------------------------------------
+def split_oversized(
+    group: tuple[int, ...], omega: int, view: _CrmView
+) -> list[tuple[int, ...]]:
+    """Recursively split ``group`` until every part has size <= omega.
+
+    The cut is seeded at the weakest co-utilisation edge of the group
+    (paper: "using weakest co-utilization edges from CRM_Norm(W)").
+    """
+    if len(group) <= omega:
+        return [group]
+    # find the weakest (possibly zero-weight) pair
+    best: tuple[float, int, int] | None = None
+    for i in range(len(group)):
+        for j in range(i + 1, len(group)):
+            w = view.weight(group[i], group[j])
+            if best is None or w < best[0]:
+                best = (w, group[i], group[j])
+    assert best is not None
+    _, u, v = best
+    a, b = split_clique_on_edge(group, u, v, view)
+    return split_oversized(a, omega, view) + split_oversized(b, omega, view)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 3 lines 4-10 — approximate clique merging
+# ---------------------------------------------------------------------------
+def hot_membership(
+    groups: list[tuple[int, ...]], view: _CrmView
+) -> np.ndarray:
+    """(k, h) 0/1 membership matrix restricted to the hot index space."""
+    h = view._norm.shape[0]
+    M = np.zeros((len(groups), h), dtype=np.float32)
+    for i, g in enumerate(groups):
+        idx = view._lut[list(g)]
+        idx = idx[idx >= 0]
+        M[i, idx] = 1.0
+    return M
+
+
+def merge_scores(
+    groups: list[tuple[int, ...]],
+    view: _CrmView,
+    omega: int,
+    pair_edges=None,
+) -> np.ndarray:
+    """Density of every pairwise union with |U| == omega; -1 elsewhere.
+
+    Matrix form of the Alg.-3 scan: with M (k, h) hot membership and A the
+    binary CRM, ``X = M A M^T`` holds cross-edge counts off-diagonal and
+    2x within-edge counts on the diagonal, so
+    ``E_U(i, j) = X[i,i]/2 + X[j,j]/2 + X[i,j]``.
+    ``pair_edges``: optional accelerated ``(M, A) -> M A M^T`` callable (the
+    Pallas ``clique_density`` wrapper); defaults to numpy matmuls.
+    """
+    k = len(groups)
+    M = hot_membership(groups, view)
+    A = view._bin.astype(np.float32)
+    if pair_edges is None:
+        X = M @ A @ M.T
+    else:
+        X = np.asarray(pair_edges(M, A))
+    within = np.diag(X) / 2.0
+    e_u = within[:, None] + within[None, :] + X
+    sizes = np.array([len(g) for g in groups], dtype=np.int64)
+    ok = (sizes[:, None] + sizes[None, :]) == omega
+    np.fill_diagonal(ok, False)
+    e_max = omega * (omega - 1) / 2.0
+    dens = np.where(ok, e_u / e_max, -1.0).astype(np.float32)
+    assert dens.shape == (k, k)
+    return dens
+
+
+def _mergeable_split(
+    groups: list[tuple[int, ...]], view: _CrmView, omega: int, gamma: float
+) -> tuple[list[tuple[int, ...]], list[tuple[int, ...]]]:
+    """Split groups into (merge candidates, pass-through).
+
+    A group with no hot member has zero CRM edges; its union with any partner
+    of size <= omega-1 has at most (omega-1)(omega-2)/2 edges, so for
+    gamma > (omega-2)/omega it can never reach the density bar and is excluded
+    from the O(k^2) scan (exact pruning, see tests).
+    """
+    if omega <= 2 or gamma <= (omega - 2) / omega:
+        return list(groups), []
+    cand, rest = [], []
+    for g in groups:
+        if any(view._lut[d] >= 0 for d in g):
+            cand.append(g)
+        else:
+            rest.append(g)
+    return cand, rest
+
+
+def approximate_merge(
+    groups: list[tuple[int, ...]],
+    view: _CrmView,
+    omega: int,
+    gamma: float,
+    pair_edges=None,
+) -> list[tuple[int, ...]]:
+    """Greedy best-density-first merging of clique pairs with |U| == omega."""
+    cand, rest = _mergeable_split(list(groups), view, omega, gamma)
+    while len(cand) >= 2:
+        dens = merge_scores(cand, view, omega, pair_edges=pair_edges)
+        dens = np.where(dens >= gamma, dens, -1.0)
+        if dens.max() < 0:
+            break
+        i, j = np.unravel_index(int(np.argmax(dens)), dens.shape)
+        if i > j:
+            i, j = j, i
+        merged = tuple(sorted(cand[i] + cand[j]))
+        cand = [g for t, g in enumerate(cand) if t not in (i, j)]
+        cand.append(merged)
+    return cand + rest
+
+
+# ---------------------------------------------------------------------------
+# full Alg. 3 pipeline
+# ---------------------------------------------------------------------------
+def generate_cliques(
+    prev: CliquePartition | None,
+    prev_crm: WindowCRM | None,
+    crm: WindowCRM,
+    n: int,
+    omega: int,
+    gamma: float,
+    pair_edges=None,
+    enable_split: bool = True,
+    enable_approx_merge: bool = True,
+) -> CliquePartition:
+    """One clique-generation event: adjust -> split -> approximate-merge.
+
+    ``enable_split`` / ``enable_approx_merge`` implement the paper's ablation
+    variants (AKPC w/o CS, w/o ACM).
+    """
+    from .crm import edge_diff
+
+    view = _CrmView(crm, n)
+    if prev is None:
+        prev = CliquePartition.singletons(n)
+    added, removed = edge_diff(prev_crm, crm)
+    groups = adjust_previous_cliques(prev, added, removed, view, omega)
+    if enable_split:
+        out: list[tuple[int, ...]] = []
+        for g in groups:
+            out.extend(split_oversized(g, omega, view))
+    else:
+        out = list(groups)
+    if enable_approx_merge:
+        out = approximate_merge(out, view, omega, gamma, pair_edges=pair_edges)
+    return CliquePartition.from_cliques(n, out)

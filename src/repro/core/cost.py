@@ -1,0 +1,120 @@
+"""Cost model of the K-PackCache problem (paper §III.C, Table I, eqs. 1-5).
+
+Two cost components paid by the CDN operator:
+
+* transfer cost  C_T : paid to the network provider per transfer event.
+    unpacked  p items : p * lambda
+    packed    p items : (1 + (p-1) * alpha) * lambda          (Table I)
+* caching  cost  C_P : storage rental, ``items * mu`` per unit time; every
+  access extends the expiry of the cached unit to ``t + dt`` where
+  ``dt = rho * lambda / mu``  (Alg. 6 line 1).
+
+``alpha in [0, 1]`` is the packing discount: for alpha < 1 packed transfer is
+always cheaper than individual transfers.
+
+The paper's pseudocode (Alg. 5 line 11) literally charges ``alpha*mu*|c|`` for
+a packed transfer, which is inconsistent with its own Table I and with the
+competitive proof (both use ``(1+(|c|-1)*alpha)*lambda``).  We default to the
+Table-I form (``cost_mode="consistent"``) and keep the literal pseudocode form
+available (``cost_mode="paper_literal"``) for reproduction of the raw
+pseudocode.  See DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+CostMode = Literal["consistent", "paper_literal"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    """All scalar knobs of the cost model + AKPC hyper-parameters (Table II)."""
+
+    lam: float = 1.0          # base transfer cost (lambda)
+    mu: float = 1.0           # caching cost per item per unit time
+    rho: float = 1.0          # cost ratio; dt = rho * lam / mu
+    alpha: float = 0.8        # packing discount factor  (Table II: 0.8)
+    omega: int = 5            # max (and target) clique size  (Table II: 5)
+    theta: float = 0.2        # CRM binarisation threshold  (Table II: 0.2)
+    gamma: float = 0.85       # approximate-merge density threshold (Table II)
+    cost_mode: CostMode = "consistent"
+
+    @property
+    def dt(self) -> float:
+        """Cache lifetime extension Delta-t = rho * lambda / mu (Alg. 6)."""
+        return self.rho * self.lam / self.mu
+
+    def transfer_cost(self, p: int, *, packed: bool) -> float:
+        """Transfer cost of moving ``p`` items in one event (Table I)."""
+        if p <= 0:
+            return 0.0
+        if not packed or p == 1:
+            return p * self.lam
+        if self.cost_mode == "paper_literal":
+            # Alg. 5 line 11 (literal):  C_T += alpha * mu * |c|
+            return self.alpha * self.mu * p
+        return (1.0 + (p - 1) * self.alpha) * self.lam
+
+    def caching_cost(self, n_items: int, duration: float) -> float:
+        """Rental cost of keeping ``n_items`` cached for ``duration`` time."""
+        if duration <= 0.0 or n_items <= 0:
+            return 0.0
+        return n_items * self.mu * duration
+
+
+@dataclasses.dataclass
+class CostBreakdown:
+    """Mutable cost accumulator shared by every engine/baseline."""
+
+    transfer: float = 0.0         # C_T
+    caching: float = 0.0          # C_P
+    keepalive_rent: float = 0.0   # hypothetical rent of Alg.6 last-copy
+    n_requests: int = 0
+    n_item_requests: int = 0      # sum |D_i|
+    n_misses: int = 0             # clique-transfer events
+    n_hits: int = 0
+    items_transferred: int = 0    # includes unrequested clique members
+
+    @property
+    def total(self) -> float:
+        return self.transfer + self.caching
+
+    def merge(self, other: "CostBreakdown") -> "CostBreakdown":
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["total"] = self.total
+        return d
+
+
+def competitive_bound(S: int, omega: int, alpha: float) -> float:
+    """Theorem 1's bound AS STATED: (2 + (omega-1)*alpha*S) / (1 + (S-1)*alpha).
+
+    NOTE (paper erratum, see DESIGN.md §7): the paper's own case analysis
+    derives C_AKPC = S*(2+(omega-1)*alpha)*lam and C_OPT = (1+(S-1)*alpha)*lam
+    but then mis-simplifies the ratio — S*(2+(omega-1)*alpha) was written as
+    2+(omega-1)*alpha*S, dropping S from the "2" term (they agree only at
+    S=1).  The bound that actually follows from the analysis (and that the
+    Thm-2 adversary realises EXACTLY — see tests/test_competitive.py) is
+    ``competitive_bound_corrected``.
+    """
+    if S < 1:
+        raise ValueError("S must be >= 1")
+    return (2.0 + (omega - 1) * alpha * S) / (1.0 + (S - 1) * alpha)
+
+
+def competitive_bound_corrected(S: int, omega: int, alpha: float) -> float:
+    """The tight bound implied by the paper's case analysis:
+
+        S * (2 + (omega-1)*alpha) / (1 + (S-1)*alpha).
+
+    Matches Thm 1 at S=1; for S>1 it is the ratio the paper's own adversary
+    (Thm 2) enforces, hence tight.
+    """
+    if S < 1:
+        raise ValueError("S must be >= 1")
+    return S * (2.0 + (omega - 1) * alpha) / (1.0 + (S - 1) * alpha)

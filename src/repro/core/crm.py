@@ -1,0 +1,130 @@
+"""Normalised co-access correlation matrix (paper Alg. 2).
+
+For every request window ``W`` (the requests of the last ``T_CG`` period), the
+CDN builds a raw co-occurrence matrix ``CRM[i1, i2] = #requests containing
+both i1 and i2``, min-max normalises it and binarises at threshold ``theta``.
+
+To bound the cost of this (the paper limits the matrix to the top-x% hottest
+items of the window) we map the window's hot items into a compact index space
+first; items outside the hot set never receive CRM edges and therefore stay
+singleton cliques.
+
+TPU path: counting co-occurrences is a rank-B update ``CRM += H^T @ H`` with
+``H`` the one-hot request/item incidence matrix, i.e. a matmul, which is what
+``repro.kernels.crm_update`` implements on the MXU.  The numpy path below is
+the oracle used by the simulator and the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowCRM:
+    """CRM of one window restricted to that window's hot items."""
+
+    hot_items: np.ndarray       # (h,) int32 global item ids, sorted
+    raw: np.ndarray             # (h, h) int32 co-occurrence counts
+    norm: np.ndarray            # (h, h) float32 min-max normalised
+    binary: np.ndarray          # (h, h) bool   norm > theta
+
+    @property
+    def n_hot(self) -> int:
+        return int(self.hot_items.shape[0])
+
+    def edge_set(self) -> set[tuple[int, int]]:
+        """Binary edges as a set of (global_u, global_v), u < v."""
+        iu, iv = np.nonzero(np.triu(self.binary, k=1))
+        gu = self.hot_items[iu]
+        gv = self.hot_items[iv]
+        return {(int(a), int(b)) for a, b in zip(gu, gv)}
+
+
+def incidence_matrix(items: np.ndarray, n: int) -> np.ndarray:
+    """One-hot request/item incidence H (B, n) from padded item ids.
+
+    ``items``: (B, d_max) int32, padded with -1.
+    """
+    B = items.shape[0]
+    H = np.zeros((B, n), dtype=np.float32)
+    req_idx, col = np.nonzero(items >= 0)
+    H[req_idx, items[req_idx, col]] = 1.0
+    return H
+
+
+def cooccurrence_counts(items: np.ndarray, n: int) -> np.ndarray:
+    """Raw CRM(W): symmetric co-occurrence counts with zero diagonal.
+
+    Exactly Alg. 2 lines 1-4: for every request, every unordered item pair
+    increments both symmetric entries once.
+    """
+    H = incidence_matrix(items, n)
+    crm = (H.T @ H).astype(np.int64)
+    np.fill_diagonal(crm, 0)
+    return crm
+
+
+def minmax_normalise(crm: np.ndarray) -> np.ndarray:
+    """Min-max scaling to [0, 1] (Alg. 2 line 5)."""
+    lo = crm.min()
+    hi = crm.max()
+    if hi <= lo:
+        return np.zeros_like(crm, dtype=np.float32)
+    return ((crm - lo) / (hi - lo)).astype(np.float32)
+
+
+def hot_items_of_window(
+    items: np.ndarray, n: int, top_frac: float
+) -> np.ndarray:
+    """ids of the ``top_frac`` most frequently accessed items of the window."""
+    flat = items[items >= 0]
+    counts = np.bincount(flat, minlength=n)
+    n_hot = max(1, int(round(n * top_frac)))
+    order = np.argsort(-counts, kind="stable")
+    hot = order[:n_hot]
+    hot = hot[counts[hot] > 0]          # never include never-accessed items
+    return np.sort(hot).astype(np.int32)
+
+
+def build_window_crm(
+    items: np.ndarray,
+    n: int,
+    theta: float,
+    top_frac: float = 0.1,
+    crm_matmul=None,
+) -> WindowCRM:
+    """Alg. 2 end to end for one window.
+
+    ``crm_matmul``: optional accelerated ``(H) -> H^T H`` implementation
+    (e.g. the Pallas kernel wrapper); defaults to numpy.
+    """
+    hot = hot_items_of_window(items, n, top_frac)
+    h = hot.shape[0]
+    # remap window items into the compact hot index space; cold items -> -1
+    lut = np.full(n, -1, dtype=np.int32)
+    lut[hot] = np.arange(h, dtype=np.int32)
+    compact = np.where(items >= 0, lut[np.clip(items, 0, n - 1)], -1)
+    if crm_matmul is None:
+        raw = cooccurrence_counts(compact, h)
+    else:
+        H = incidence_matrix(compact, h)
+        raw = np.asarray(crm_matmul(H)).astype(np.int64)
+        np.fill_diagonal(raw, 0)
+    norm = minmax_normalise(raw)
+    binary = norm > theta
+    np.fill_diagonal(binary, False)
+    return WindowCRM(hot_items=hot, raw=raw, norm=norm, binary=binary)
+
+
+def edge_diff(
+    prev: WindowCRM | None, cur: WindowCRM
+) -> tuple[set[tuple[int, int]], set[tuple[int, int]]]:
+    """Delta-E between consecutive binary CRMs in GLOBAL item ids (Alg. 4 input).
+
+    Returns (added_edges, removed_edges).
+    """
+    cur_edges = cur.edge_set()
+    prev_edges = prev.edge_set() if prev is not None else set()
+    return cur_edges - prev_edges, prev_edges - cur_edges

@@ -1,0 +1,257 @@
+"""Cache replay engine shared by AKPC and every baseline (Alg. 1, 5, 6).
+
+State per clique c and edge storage server (ESS) j:
+
+* ``E[c, j]``  nominal expiry of the packed copy of c at j (0 = never cached)
+* ``anchor[c]`` the server whose copy Alg. 6 keeps alive:  when a copy
+  expires and it is the system's last alive copy (G[c] == 1), its expiry is
+  extended by dt — recursively, so the copy with the LATEST nominal expiry
+  ratchets forever until some other server fetches a fresher copy.  Hence at
+  any time the alive set is ``{j : E[c,j] > t} ∪ {argmax_j E[c,j]}`` and we
+  only need to remember the argmax ("anchor").  See DESIGN.md §2.
+
+Cost accounting (Alg. 5 made consistent — see cost.py):
+
+* miss at j   ->  C_T += transfer_cost(|c|, packed=|c|>1)
+* every access->  C_P += n_charged * mu * ((t + dt) - max(E_eff, t))
+  where ``n_charged`` is |D_i ∩ c| under the paper's accounting (the
+  competitive proof and Alg. 5 line 5 charge rent for requested items only),
+  or |c| under "stored" accounting (rent for what is actually stored).
+* afterwards  ->  E[c, j] = t + dt
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Literal
+
+import numpy as np
+
+from .cliques import CliquePartition
+from .cost import CostBreakdown, CostParams
+
+CachingCharge = Literal["requested", "stored"]
+
+
+@dataclasses.dataclass
+class CacheState:
+    """Dense per-(clique, server) cache bookkeeping."""
+
+    partition: CliquePartition
+    E: np.ndarray               # (k, m) float64 nominal expiries
+    anchor: np.ndarray          # (k,) int32, -1 if clique never cached
+    m: int
+
+    @classmethod
+    def fresh(cls, partition: CliquePartition, m: int) -> "CacheState":
+        k = partition.k
+        return cls(
+            partition=partition,
+            E=np.zeros((k, m), dtype=np.float64),
+            anchor=np.full(k, -1, dtype=np.int32),
+            m=m,
+        )
+
+    # -- aliveness ---------------------------------------------------------
+    def is_alive(self, c: int, j: int, t: float) -> bool:
+        if self.E[c, j] > t:
+            return True
+        return self.anchor[c] == j and self.E[c, j] > 0.0
+
+    def ratcheted_expiry(self, c: int, j: int, t: float, dt: float) -> float:
+        """Effective expiry of an alive copy at time t (Alg. 6 ratcheting)."""
+        e = self.E[c, j]
+        if e > t:
+            return e
+        # anchor copy whose nominal expiry lapsed: extended in dt steps
+        steps = np.ceil((t - e) / dt)
+        r = e + steps * dt
+        if r <= t:                       # t exactly on a step boundary
+            r += dt
+        return float(r)
+
+    def alive_copies(self, c: int, t: float) -> int:
+        """G[c]: number of alive copies of clique c."""
+        g = int((self.E[c] > t).sum())
+        a = self.anchor[c]
+        if a >= 0 and self.E[c, a] <= t and self.E[c, a] > 0.0:
+            g += 1
+        return g
+
+    def touch(self, c: int, j: int, new_expiry: float) -> None:
+        self.E[c, j] = new_expiry
+        a = self.anchor[c]
+        if a < 0 or new_expiry >= self.E[c, a]:
+            self.anchor[c] = j
+
+
+@dataclasses.dataclass
+class RequestOutcome:
+    """Per-request outcome (used by tests and the competitive checker)."""
+
+    cliques: list[int]
+    misses: list[int]
+    transfer: float
+    caching: float
+    caching_miss: float = 0.0     # caching charged on missed cliques
+    n_missed_items: int = 0       # |D_i| items whose clique was not cached (S)
+
+
+class ReplayEngine:
+    """Replays a request trace against an evolving clique partition."""
+
+    def __init__(
+        self,
+        n: int,
+        m: int,
+        params: CostParams,
+        caching_charge: CachingCharge = "requested",
+        seed_new_cliques: bool = True,
+    ):
+        self.n = n
+        self.m = m
+        self.params = params
+        self.caching_charge = caching_charge
+        self.seed_new_cliques = seed_new_cliques
+        self.state = CacheState.fresh(CliquePartition.singletons(n), m)
+        self.costs = CostBreakdown()
+
+    # ------------------------------------------------------------------
+    # Alg. 1 Event 1 — install a freshly generated partition
+    # ------------------------------------------------------------------
+    def install_partition(
+        self,
+        partition: CliquePartition,
+        now: float,
+        window_items: np.ndarray | None = None,
+        window_servers: np.ndarray | None = None,
+    ) -> None:
+        """Translate cache state onto the new partition.
+
+        * cliques identical to a previous clique keep their row (and anchor);
+        * changed cliques are present at j iff EVERY member was nominally
+          alive at j (presence = min of member expiries);
+        * newly formed multi-item cliques are seeded with one packed copy at
+          the server that accessed their members most during the window
+          (Alg. 1 line 5), free of charge (packing runs in the background,
+          §III.C).
+        """
+        old = self.state
+        old_index: dict[tuple[int, ...], int] = {
+            c: i for i, c in enumerate(old.partition.cliques)
+        }
+        # nominal per-item expiry under the old partition
+        item_E = old.E[old.partition.clique_of]          # (n, m)
+        k = partition.k
+        E = np.zeros((k, self.m), dtype=np.float64)
+        anchor = np.full(k, -1, dtype=np.int32)
+
+        seed_counts = None
+        if (
+            self.seed_new_cliques
+            and window_items is not None
+            and window_servers is not None
+        ):
+            # item -> per-server access counts over the window
+            seed_counts = np.zeros((self.n, self.m), dtype=np.int64)
+            reps = (window_items >= 0).sum(axis=1)
+            srv = np.repeat(window_servers, reps)
+            itm = window_items[window_items >= 0]
+            np.add.at(seed_counts, (itm, srv), 1)
+
+        for i, c in enumerate(partition.cliques):
+            prev_i = old_index.get(c)
+            if prev_i is not None:
+                E[i] = old.E[prev_i]
+                anchor[i] = old.anchor[prev_i]
+                continue
+            members = list(c)
+            rows = item_E[members]                       # (|c|, m)
+            present = (rows > now).all(axis=0)
+            E[i] = np.where(present, rows.min(axis=0), 0.0)
+            if E[i].max() > 0:
+                anchor[i] = int(np.argmax(E[i]))
+            elif len(c) > 1 and seed_counts is not None:
+                j = int(np.argmax(seed_counts[members].sum(axis=0)))
+                E[i, j] = now + self.params.dt
+                anchor[i] = j
+        self.state = CacheState(partition=partition, E=E, anchor=anchor, m=self.m)
+
+    # ------------------------------------------------------------------
+    # Alg. 5 — request handling
+    # ------------------------------------------------------------------
+    def handle_request(
+        self, items: Iterable[int], server: int, t: float
+    ) -> RequestOutcome:
+        p = self.params
+        st = self.state
+        items = [int(d) for d in items if d >= 0]
+        cids: dict[int, int] = {}                 # clique id -> |D_i ∩ c|
+        for d in items:
+            c = int(st.partition.clique_of[d])
+            cids[c] = cids.get(c, 0) + 1
+        out = RequestOutcome(cliques=sorted(cids), misses=[], transfer=0.0, caching=0.0)
+        for c, n_req in sorted(cids.items()):
+            size = len(st.partition.cliques[c])
+            alive = st.is_alive(c, server, t)
+            if not alive:
+                ct = p.transfer_cost(size, packed=size > 1)
+                out.transfer += ct
+                out.misses.append(c)
+                out.n_missed_items += n_req
+                self.costs.n_misses += 1
+                self.costs.items_transferred += size
+                e_eff = t
+            else:
+                self.costs.n_hits += 1
+                e_eff = st.ratcheted_expiry(c, server, t, p.dt)
+                if st.E[c, server] <= t:          # lazily account Alg.6 rent
+                    self.costs.keepalive_rent += p.caching_cost(
+                        size, e_eff - st.E[c, server]
+                    )
+            n_charged = n_req if self.caching_charge == "requested" else size
+            new_e = t + p.dt
+            ccost = p.caching_cost(n_charged, max(0.0, new_e - max(e_eff, t)))
+            out.caching += ccost
+            if not alive:
+                out.caching_miss += ccost
+            st.touch(c, server, new_e)
+        self.costs.transfer += out.transfer
+        self.costs.caching += out.caching
+        self.costs.n_requests += 1
+        self.costs.n_item_requests += len(items)
+        return out
+
+    # ------------------------------------------------------------------
+    def replay(
+        self,
+        trace,
+        clique_generator: Callable[[np.ndarray, np.ndarray, float], CliquePartition | None]
+        | None = None,
+        t_cg: float | None = None,
+        progress: Callable[[int], None] | None = None,
+    ) -> CostBreakdown:
+        """Replay a full trace.
+
+        ``clique_generator(window_items, window_servers, now)`` is invoked at
+        every T_CG boundary with the PREVIOUS window's requests (Alg. 1
+        Event 1, Fig. 3 timeline) and returns the new partition (or None to
+        keep the current one).
+        """
+        times, servers, items = trace.times, trace.servers, trace.items
+        next_cg = times[0] + t_cg if (t_cg is not None) else np.inf
+        win_start = 0
+        for i in range(times.shape[0]):
+            t = float(times[i])
+            if clique_generator is not None and t >= next_cg:
+                w_it = items[win_start:i]
+                w_sv = servers[win_start:i]
+                part = clique_generator(w_it, w_sv, t)
+                if part is not None:
+                    self.install_partition(part, t, w_it, w_sv)
+                win_start = i
+                while next_cg <= t:
+                    next_cg += t_cg
+            self.handle_request(items[i], int(servers[i]), t)
+            if progress is not None and (i & 0xFFFF) == 0:
+                progress(i)
+        return self.costs

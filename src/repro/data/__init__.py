@@ -1,0 +1,3 @@
+from .pipeline import PackedDataPipeline, ShardStore, TokenBatcher
+
+__all__ = ["PackedDataPipeline", "ShardStore", "TokenBatcher"]

@@ -1,0 +1,13 @@
+from .fault_tolerance import (
+    FailureInjector,
+    StragglerPolicy,
+    TrainController,
+    WorkerFailure,
+)
+
+__all__ = [
+    "FailureInjector",
+    "StragglerPolicy",
+    "TrainController",
+    "WorkerFailure",
+]

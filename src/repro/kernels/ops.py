@@ -1,0 +1,36 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU-only container the kernels run with interpret=True (the Pallas
+body executed in Python, validating logic + BlockSpecs); on a real TPU the
+same call sites compile to Mosaic.  ``INTERPRET`` flips automatically.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from .clique_density import clique_pair_edges
+from .crm_update import crm_update
+from .packed_lookup import packed_lookup, unpacked_lookup
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def crm_matmul(H):
+    """Accelerated CRM accumulation hook for repro.core.crm.build_window_crm:
+    H (B, n) one-hot -> (n, n) counts (zero diagonal)."""
+    return np.asarray(crm_update(H, interpret=INTERPRET))
+
+
+def pair_edges(M, A):
+    """Accelerated merge-score hook for repro.core.cliques.merge_scores:
+    membership (k, h) x binary CRM (h, h) -> (k, k) union edge counts."""
+    return np.asarray(clique_pair_edges(M, A, interpret=INTERPRET))
+
+
+def gather_packed(table, ids):
+    return packed_lookup(table, ids, interpret=INTERPRET)
+
+
+def gather_unpacked(items, ids):
+    return unpacked_lookup(items, ids, interpret=INTERPRET)

@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init.  512 host devices back both production meshes
+# (single-pod 16x16 uses the first 256).
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+  jit(step).lower(**input_specs).compile()
+must succeed on the single-pod (data=16, model=16) mesh AND the 2-pod
+(pod=2, data=16, model=16) mesh.  We record memory_analysis (fits-in-HBM
+proof), our HLO-walk cost analysis (FLOPs / HBM bytes / collective wire
+bytes — see hlo_analysis.py) and the derived roofline terms into a JSONL
+file consumed by EXPERIMENTS.md and benchmarks/roofline_report.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --out experiments/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k --mesh single
+"""
+import argparse
+import json
+import time
+import traceback
+
+HBM_PER_CHIP = 16e9       # TPU v5e
+
+
+def model_flops_for(cfg, shape_name: str) -> float:
+    from ..configs import SHAPES
+
+    sh = SHAPES[shape_name]
+    n_act = cfg.param_count(active_only=True) - cfg.vocab * cfg.d_model
+    tokens = sh["global_batch"] * (sh["seq_len"] if sh["kind"] != "decode" else 1)
+    mult = 6.0 if sh["kind"] == "train" else 2.0
+    return mult * n_act * tokens
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
+    import jax
+
+    from ..configs import SHAPES, get_config, shape_applicable
+    from ..launch.hlo_analysis import analyze_hlo, make_roofline
+    from ..launch.mesh import make_production_mesh
+    from ..launch.specs import build_cell, lower_cell
+
+    cfg = get_config(arch)
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_kind}
+    if not shape_applicable(cfg, shape):
+        rec.update(status="skipped",
+                   reason="long_500k needs sub-quadratic attention "
+                          "(DESIGN.md §4)")
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape, mesh)
+        lowered = lower_cell(cell, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        per_dev = ma.argument_size_in_bytes + ma.temp_size_in_bytes
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        st = analyze_hlo(txt, n_dev)
+        rl = make_roofline(st, n_dev, model_flops_for(cfg, shape))
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            static=cell.static,
+            arg_bytes=ma.argument_size_in_bytes,
+            temp_bytes=ma.temp_size_in_bytes,
+            out_bytes=ma.output_size_in_bytes,
+            alias_bytes=ma.alias_size_in_bytes,
+            live_bytes_per_dev=per_dev - ma.alias_size_in_bytes,
+            fits_hbm=bool(per_dev - ma.alias_size_in_bytes
+                          + ma.output_size_in_bytes < HBM_PER_CHIP),
+            xla_flops_once=float(ca.get("flops", 0.0)),
+            flops_per_dev=st.flops,
+            hbm_bytes_per_dev=st.hbm_bytes,
+            coll_bytes_per_dev=st.coll_wire_bytes,
+            coll_by_kind={k: round(v) for k, v in st.coll_bytes_by_kind.items()},
+            coll_counts={k: int(v) for k, v in st.coll_counts.items()},
+            compute_s=rl.compute_s,
+            memory_s=rl.memory_s,
+            collective_s=rl.collective_s,
+            dominant=rl.dominant,
+            model_flops=rl.model_flops,
+            useful_flops_ratio=round(rl.useful_flops_ratio, 4),
+            roofline_fraction=round(rl.roofline_fraction, 4),
+        )
+    except Exception as e:  # noqa: BLE001 — the record IS the result
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   tb=traceback.format_exc()[-2000:],
+                   seconds=round(time.time() - t0, 1))
+    return rec
+
+
+def main() -> None:
+    from ..configs import ARCHS, SHAPES, resolve
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    ap.add_argument("--redo", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [resolve(args.arch)]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out) and not args.redo:
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, mesh_kind)
+                if key in done:
+                    print(f"[skip-done] {key}", flush=True)
+                    continue
+                print(f"[run] {arch} x {shape} x {mesh_kind}", flush=True)
+                rec = run_cell(arch, shape, mesh_kind)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                msg = rec.get("status")
+                if msg == "ok":
+                    print(
+                        f"  ok: compile {rec['compile_s']}s, "
+                        f"live/dev {(rec['live_bytes_per_dev'])/1e9:.2f}GB, "
+                        f"fits={rec['fits_hbm']}, dom={rec['dominant']}, "
+                        f"frac={rec['roofline_fraction']}", flush=True)
+                else:
+                    print(f"  {msg}: {rec.get('reason', rec.get('error'))}",
+                          flush=True)
+
+
+if __name__ == "__main__":
+    main()

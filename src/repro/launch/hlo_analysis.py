@@ -1,0 +1,311 @@
+"""Post-SPMD HLO analysis: FLOPs, HBM bytes, collective wire bytes, roofline.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis counts while-loop
+bodies ONCE, so a 60-layer ``lax.scan`` model looks 60x cheaper than it is
+(verified empirically — see tests/test_hlo_analysis.py).  We therefore walk
+the partitioned HLO text ourselves:
+
+* computations are parsed into (name -> ops) with a symbol table of result
+  shapes so operand shapes can be resolved;
+* every ``while`` op propagates its ``known_trip_count`` as a multiplier to
+  its body/condition computations (nested loops multiply);
+* FLOPs: 2 * prod(output dims) * prod(contracting dims) per ``dot``;
+* HBM bytes: operands + results of MATERIALISING ops only (dot, conv,
+  gather/scatter, dynamic slices, reduce, concat, sort, copy, collectives).
+  Elementwise/broadcast/convert/select chains are treated as fused (free),
+  approximating the TPU fusion behaviour that the unfused CPU HLO lacks.
+  This is a structural estimate — good for identifying the dominant
+  roofline term and for measuring optimisation deltas, not a cycle-accurate
+  simulator (DESIGN.md §7);
+* collective wire bytes per device under ring algorithms:
+      all-gather         out/g * (g-1)
+      reduce-scatter     out * (g-1)          (out is the shard)
+      all-reduce         2 * out/g * (g-1)
+      all-to-all         out * (g-1)/g
+      collective-permute out
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "u4": 1, "s4": 1,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^()]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS_RE = re.compile(r"(?:body|calls|to_apply|condition)=%?([\w\.\-]+)")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,\s]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([0-9,]+)\]<=\[")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "domain", "partition-id", "replica-id", "iota"}
+# ops that actually materialise HBM traffic on TPU (everything elementwise
+# is assumed fused into its producer/consumer)
+_MATERIALIZING = {
+    "dot", "convolution", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "concatenate", "sort", "copy",
+    "transpose", "reduce-window", "cholesky", "triangular-solve",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            total += _shape_elems(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:                                  # {{0,1},{2,3},...}: first group
+        return max(1, m.group(1).count(",") + 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:                                  # [n_groups, group_size]<=[N]
+        dims = m.group(1).split(",")
+        return int(dims[-1]) if dims else default
+    return default
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    out: str
+    kind: str
+    rest: str
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float                     # per device
+    hbm_bytes: float                 # per device
+    coll_wire_bytes: float           # per device
+    coll_bytes_by_kind: dict
+    coll_counts: dict
+
+
+def parse_hlo(text: str) -> dict[str, list[Op]]:
+    comps: dict[str, list[Op]] = {}
+    cur: list[Op] | None = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = comps.setdefault(mc.group(1), [])
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            cur.append(Op(mo.group(1), mo.group(2), mo.group(3), mo.group(4)))
+    return comps
+
+
+def _multipliers(comps: dict[str, list[Op]], entry: str) -> dict[str, float]:
+    mult: dict[str, float] = {entry: 1.0}
+    stack = [entry]
+    while stack:
+        c = stack.pop()
+        m = mult[c]
+        for op in comps.get(c, []):
+            callees = _CALLS_RE.findall(op.rest)
+            if not callees:
+                continue
+            k = 1.0
+            if op.kind == "while":
+                t = _TRIP_RE.search(op.rest)
+                k = float(t.group(1)) if t else 1.0
+            for callee in callees:
+                if callee in comps:
+                    prev = mult.get(callee, 0.0)
+                    nm = m * k
+                    if nm > prev:
+                        mult[callee] = nm
+                        stack.append(callee)
+    return mult
+
+
+def _fusion_bodies(comps: dict[str, list[Op]]) -> set[str]:
+    """Computations called by fusion ops (and reducers) — interiors are free."""
+    out: set[str] = set()
+    for ops in comps.values():
+        for op in ops:
+            if op.kind in ("fusion", "reduce", "scatter", "reduce-window",
+                           "sort", "map", "reduce-scatter", "all-reduce"):
+                out.update(_CALLS_RE.findall(op.rest))
+    return out
+
+
+def analyze_hlo(text: str, n_devices: int) -> HloStats:
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:                       # fall back: main-ish computation
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else ""
+    mult = _multipliers(comps, entry)
+    fusion_bodies = _fusion_bodies(comps)
+
+    # symbol table: op name -> output type text (per computation is fine
+    # since names are unique module-wide in dumped HLO)
+    sym: dict[str, str] = {}
+    for ops in comps.values():
+        for op in ops:
+            sym[op.name] = op.out
+
+    flops = 0.0
+    hbm = 0.0
+    coll_b: dict[str, float] = {}
+    coll_c: dict[str, float] = {}
+
+    for cname, ops in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for op in ops:
+            if op.kind in COLLECTIVES or (
+                op.kind.endswith("-start") and op.kind[:-6] in COLLECTIVES
+            ):
+                kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+                ob = _bytes_of(op.out)
+                # XLA:CPU promotes bf16 collectives to f32 (all-reduce via
+                # AllReducePromotion, all-gathers because CPU computes bf16
+                # dots in f32 and sinks the convert below the collective).
+                # A TPU moves these in bf16 — count them at native width.
+                if "_promoted" in op.rest or (
+                    op.out.lstrip("(").startswith("f32")
+                    and re.match(r"\s*%\w*convert", op.rest)
+                ):
+                    ob //= 2
+                g = _group_size(op.rest, n_devices)
+                if g > 1:
+                    if kind == "all-gather":
+                        wire = ob * (g - 1) / g
+                    elif kind == "reduce-scatter":
+                        wire = ob * (g - 1)
+                    elif kind == "all-reduce":
+                        wire = 2.0 * ob * (g - 1) / g
+                    elif kind == "all-to-all":
+                        wire = ob * (g - 1) / g
+                    else:
+                        wire = ob
+                    coll_b[kind] = coll_b.get(kind, 0.0) + wire * m
+                    coll_c[kind] = coll_c.get(kind, 0) + m
+                    hbm += 2.0 * ob * m          # collectives read+write HBM
+                continue
+            if in_fusion:
+                continue
+            if op.kind == "dot":
+                out_elems = sum(
+                    _shape_elems(d) for _, d in _SHAPE_RE.findall(op.out)
+                )
+                cm = _CONTRACT_RE.search(op.rest)
+                contract = 1
+                # first operand name -> its shape -> contracting dim sizes
+                first = re.match(r"\s*%([\w\.\-]+)", op.rest)
+                if cm and first and first.group(1) in sym:
+                    lhs_dims = _SHAPE_RE.findall(sym[first.group(1)])
+                    if lhs_dims:
+                        dims = [int(x) for x in lhs_dims[0][1].split(",") if x]
+                        for ci in cm.group(1).split(","):
+                            if ci and int(ci) < len(dims):
+                                contract *= dims[int(ci)]
+                flops += 2.0 * out_elems * contract * m
+            if op.kind not in _MATERIALIZING:
+                continue
+            # HBM traffic: operands + result of materialising ops
+            b = _bytes_of(op.out)
+            for oname in re.findall(r"%([\w\.\-]+)", op.rest):
+                if oname in sym:
+                    b += _bytes_of(sym[oname])
+            hbm += b * m
+
+    return HloStats(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_wire_bytes=float(sum(coll_b.values())),
+        coll_bytes_by_kind=coll_b,
+        coll_counts=coll_c,
+    )
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops: float
+    n_devices: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_dev * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """(MODEL_FLOPS / chips / peak) / bound  — 'score' of the cell."""
+        if self.bound_s <= 0:
+            return 0.0
+        ideal = self.model_flops / self.n_devices / PEAK_FLOPS
+        return ideal / self.bound_s
+
+
+def make_roofline(stats: HloStats, n_devices: int, model_flops: float) -> Roofline:
+    return Roofline(
+        compute_s=stats.flops / PEAK_FLOPS,
+        memory_s=stats.hbm_bytes / HBM_BW,
+        collective_s=stats.coll_wire_bytes / LINK_BW,
+        flops_per_dev=stats.flops,
+        hbm_bytes_per_dev=stats.hbm_bytes,
+        coll_bytes_per_dev=stats.coll_wire_bytes,
+        model_flops=model_flops,
+        n_devices=n_devices,
+    )

@@ -1,0 +1,36 @@
+"""Production mesh builders.  FUNCTIONS ONLY — importing this module never
+touches jax device state (required by the dry-run contract)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(n_devices: int | None = None):
+    """Small mesh for CPU tests: (data=2, model=n/2)."""
+    n = n_devices or len(jax.devices())
+    auto = (jax.sharding.AxisType.Auto,) * 2
+    if n == 1:
+        return jax.make_mesh((1, 1), ("data", "model"), axis_types=auto)
+    return jax.make_mesh((2, n // 2), ("data", "model"), axis_types=auto)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Axes that carry data parallelism (pod folds into DP)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh) -> int:
+    s = 1
+    for a in dp_axes(mesh):
+        s *= mesh.shape[a]
+    return s

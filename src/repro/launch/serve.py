@@ -1,0 +1,52 @@
+"""Serving launcher: production-mesh prefill/decode step builders + a local
+CPU driver for the reduced configs.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --dry
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-3b-a800m --local
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--dry", action="store_true",
+                    help="lower+compile the serve step on the production mesh")
+    ap.add_argument("--local", action="store_true",
+                    help="run the reduced config on local devices")
+    args = ap.parse_args()
+
+    if args.dry:
+        # production-mesh path shares the dry-run machinery (single source
+        # of truth for shapes/shardings)
+        from .dryrun import run_cell
+
+        rec = run_cell(args.arch, args.shape, "single")
+        print({k: rec[k] for k in ("status", "dominant", "roofline_fraction",
+                                   "fits_hbm") if k in rec})
+        return
+
+    import jax
+    import numpy as np
+
+    from ..configs import get_smoke_config
+    from ..models.api import build_model
+    from ..serving import BatchedServer, Request
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    srv = BatchedServer(model, params, batch_size=4, cache_len=128)
+    rng = np.random.default_rng(0)
+    for rid in range(8):
+        srv.submit(Request(rid=rid, prompt=rng.integers(
+            0, cfg.vocab, size=4).tolist(), max_new=8))
+    done = srv.run(max_steps=400)
+    print(f"{cfg.name}: served {len(done)} requests in {srv.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,269 @@
+"""Sharding rules: parameters (FSDP x TP), optimizer state, KV/SSM caches,
+batches.
+
+Scheme (DESIGN.md §5):
+* TP ("model" axis):  attention head / ffn / expert / vocab dims;
+* FSDP ("data" axis): the d_model-ish contraction dim of every large matrix
+  (params are 2-D sharded: deepseek-v2's 472 GB of bf16 weights become
+  1.8 GB/chip on a 16x16 mesh); gradients reduce-scatter, params all-gather
+  at use — XLA SPMD derives both from these specs;
+* the "pod" axis extends data parallelism only (params REPLICATED across
+  pods, gradient all-reduce crosses DCN once per step);
+* decode caches shard the SEQUENCE dim over "model" (flash-decoding style),
+  batch over DP when divisible — a 512k-token KV cache fits one v5e chip.
+
+Every rule falls back to replication when a dim is not divisible by the
+axis size, so any (arch x mesh) combination lowers.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+# params whose TP dim is the LAST axis (column-parallel): y = x @ W
+_COL = {"wq", "wk", "wv", "wi", "wg", "up", "wx", "wr", "in_proj", "wq_b",
+        "wkv_b", "ffn_wi", "w_if", "bq", "bk", "bv"}
+# params whose TP dim is the SECOND-TO-LAST axis (row-parallel): y = x @ W
+_ROW = {"wo", "down", "out_proj", "ffn_wo"}
+# small projections: FSDP only
+_FSDP_ONLY = {"wq_a", "wkv_a", "router", "patch_proj", "conv_w"}
+_REPL = {"norm", "norm1", "norm2", "norm3", "q_norm", "kv_norm", "gate_norm",
+         "out_norm", "final_norm", "enc_final", "dec_final", "A_log",
+         "dt_bias", "D", "scale", "bias", "shared_norm1", "shared_norm2",
+         "ffn_norm", "step"}
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _axis(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _path_has(path, *names) -> bool:
+    keys = {str(getattr(e, "key", getattr(e, "name", ""))) for e in path}
+    return any(n in keys for n in names)
+
+
+def param_spec(path, leaf, mesh, serving: bool = False) -> P:
+    """PartitionSpec for one parameter.
+
+    ``serving=True`` (decode cells): expert weights switch to the
+    WEIGHT-STATIONARY layout (ff over `data` instead of d) so tiny decode
+    batches never all-gather expert weights — the paper-era practice of
+    disaggregated prefill/decode serving with distinct checkpoint layouts
+    (EXPERIMENTS.md §Perf iteration D2)."""
+    name = _leaf_name(path)
+    shape = leaf.shape
+    nd = len(shape)
+    dsz, msz = _axis(mesh, "data"), _axis(mesh, "model")
+    if name in _REPL or nd <= 1:
+        return P()
+    spec: list[Any] = [None] * nd
+    is_expert = _path_has(path, "mlp") and nd == 4          # (L, E, d, ff)
+
+    if serving and is_expert and name in ("wi", "wg"):       # (L, E, d, ff)
+        if _div(shape[1], msz):
+            spec[1] = "model"
+        if _div(shape[3], dsz):
+            spec[3] = "data"
+        return P(*spec)
+    if serving and is_expert and name == "wo":               # (L, E, ff, d)
+        if _div(shape[1], msz):
+            spec[1] = "model"
+        if _div(shape[2], dsz):
+            spec[2] = "data"
+        return P(*spec)
+
+    if name == "embed":                                      # (V, d)
+        if _div(shape[0], msz):
+            spec[0] = "model"
+        if _div(shape[1], dsz):
+            spec[1] = "data"
+    elif name == "lm_head":                                  # (d, V)
+        if _div(shape[0], dsz):
+            spec[0] = "data"
+        if _div(shape[1], msz):
+            spec[1] = "model"
+    elif is_expert and name in ("wi", "wg"):                 # (L, E, d, ff)
+        if _div(shape[1], msz):
+            spec[1] = "model"
+        if _div(shape[2], dsz):
+            spec[2] = "data"
+    elif is_expert and name == "wo":                         # (L, E, ff, d)
+        if _div(shape[1], msz):
+            spec[1] = "model"
+        if _div(shape[3], dsz):
+            spec[3] = "data"
+    elif name in _COL:
+        if _div(shape[-1], msz):
+            spec[-1] = "model"
+        if nd >= 2 and _div(shape[-2], dsz):
+            spec[-2] = "data"
+    elif name in _ROW:
+        if _div(shape[-2], msz):
+            spec[-2] = "model"
+        if _div(shape[-1], dsz):
+            spec[-1] = "data"
+    elif name in _FSDP_ONLY:
+        if nd >= 2 and _div(shape[-2], dsz):
+            spec[-2] = "data"
+    else:                                                    # generic fallback
+        if _div(shape[-1], msz):
+            spec[-1] = "model"
+        if nd >= 2 and _div(shape[-2], dsz):
+            spec[-2] = "data"
+    return P(*spec)
+
+
+def param_shardings(params_shape, mesh, serving: bool = False):
+    """Pytree of NamedShardings matching a params (shape-)pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, mesh, serving=serving)),
+        params_shape,
+    )
+
+
+def opt8_state_shardings(opt_shape, params_shape, mesh):
+    """Shardings for the 8-bit optimizer tree: int8 moments mirror the
+    params; blockwise scales mirror too except the (blocked) last dim falls
+    back to replication when indivisible."""
+    del opt_shape
+
+    def per_param(path, leaf):
+        base = param_spec(path, leaf, mesh)
+        spec = list(base) + [None] * (len(leaf.shape) - len(base))
+        nb = -(-leaf.shape[-1] // 128) if len(leaf.shape) else 1
+        s_spec = list(spec)
+        ax = _axis(mesh, "model") if spec and spec[-1] == "model" else (
+            _axis(mesh, "data") if spec and spec[-1] == "data" else 0)
+        if not (ax and nb % ax == 0):
+            s_spec[-1] = None
+        return {
+            "m_q": NamedSharding(mesh, P(*spec)),
+            "m_s": NamedSharding(mesh, P(*s_spec)),
+            "v_q": NamedSharding(mesh, P(*spec)),
+            "v_s": NamedSharding(mesh, P(*s_spec)),
+        }
+
+    mv = jax.tree_util.tree_map_with_path(
+        per_param, params_shape,
+        is_leaf=lambda x: hasattr(x, "shape"))
+    return {"mv": mv, "step": NamedSharding(mesh, P())}
+
+
+def opt_state_shardings(opt_shape, params_shape, mesh):
+    """m/v mirror the params, additionally ZeRO-sharded over the pod axis
+    (optimizer state is only touched once per step, so paying a DCN gather
+    there is free roofline-wise and halves multi-pod optimizer memory);
+    step is replicated."""
+    pshard = param_shardings(params_shape, mesh)
+    if "pod" in mesh.axis_names:
+        def extend(ns):
+            spec = list(ns.spec) if ns.spec else []
+            out = []
+            for entry in spec:
+                if entry == "data":
+                    out.append(("pod", "data"))
+                else:
+                    out.append(entry)
+            if "pod" not in str(out):
+                # no data-sharded dim: put pod on the largest unsharded dim
+                pass
+            return NamedSharding(mesh, P(*out))
+
+        mshard = jax.tree.map(extend, pshard)
+    else:
+        mshard = pshard
+    return {
+        "m": mshard,
+        "v": mshard,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+def batch_spec(shape, mesh, *, leading_accum: bool = False) -> P:
+    """Shard the batch dim over DP axes (axis 0, or 1 under grad-accum)."""
+    dp = dp_axes(mesh)
+    dp_n = int(np.prod([mesh.shape[a] for a in dp]))
+    bdim = 1 if leading_accum else 0
+    spec: list[Any] = [None] * len(shape)
+    if len(shape) > bdim and _div(shape[bdim], dp_n):
+        spec[bdim] = dp
+    return P(*spec)
+
+
+def batch_shardings(batch_shape, mesh, *, leading_accum: bool = False):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(
+            mesh, batch_spec(leaf.shape, mesh, leading_accum=leading_accum)
+        ),
+        batch_shape,
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+_SEQ_AXIS = {"k": 2, "v": 2, "c": 2, "r": 2}     # (L, B, S, ...)
+
+
+def cache_spec(path, leaf, mesh) -> P:
+    name = _leaf_name(path)
+    shape = leaf.shape
+    nd = len(shape)
+    dsz, msz = _axis(mesh, "data"), _axis(mesh, "model")
+    dp = dp_axes(mesh)
+    dp_n = int(np.prod([mesh.shape[a] for a in dp]))
+    spec: list[Any] = [None] * nd
+
+    if name in _SEQ_AXIS and nd >= 4:
+        b_ax, s_ax = 1, 2
+        if _div(shape[b_ax], dp_n):
+            spec[b_ax] = dp
+            if _div(shape[s_ax], msz):
+                spec[s_ax] = "model"
+        elif _div(shape[s_ax], msz * dp_n):
+            # tiny batch (long_500k): context-parallel over ALL axes
+            spec[s_ax] = dp + ("model",)
+        elif _div(shape[s_ax], msz):
+            spec[s_ax] = "model"
+        return P(*spec)
+
+    # recurrent states (ssm/mlstm/slstm/conv): batch over DP, widest inner
+    # dim over model
+    if nd >= 2 and _div(shape[1], dp_n):
+        spec[1] = "data" if dp == ("data",) else dp
+    inner = list(range(2, nd))
+    inner.sort(key=lambda i: -shape[i])
+    for i in inner:
+        if _div(shape[i], msz):
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def cache_shardings(cache_shape, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_spec(path, leaf, mesh)),
+        cache_shape,
+    )

@@ -1,0 +1,689 @@
+"""Unified model API over all assigned architecture families.
+
+``build_model(cfg)`` returns a ``Model`` with:
+
+* ``init(key) -> params``                       (stacked-per-layer pytree)
+* ``loss(params, batch, mesh=None) -> scalar``  (next-token CE + MoE aux)
+* ``prefill(params, batch, mesh=None) -> (logits_last, cache)``
+* ``decode_step(params, cache, tokens, pos, mesh=None) -> (logits, cache)``
+* ``init_cache(batch, cache_len) -> cache``     (zeros; shapes only)
+
+Layers are scanned (``lax.scan`` over stacked params) with ``jax.checkpoint``
+remat, so HLO size is depth-independent.  Decode keeps KV sharded over the
+model axis on the SEQUENCE dim (see attention.py).  SSM/xLSTM archs carry
+recurrent state instead of KV.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .attention import (
+    cross_forward,
+    cross_kv,
+    gqa_decode,
+    gqa_forward,
+    init_cross,
+    init_gqa,
+    init_mla,
+    mla_decode,
+    mla_forward,
+)
+from .common import (
+    KeyGen,
+    apply_norm,
+    cross_entropy,
+    dense_init,
+    dtype_of,
+    embed_init,
+    make_norm,
+    rope_angles,
+)
+from .config import ModelConfig
+from .mlp import init_mlp, init_moe, mlp_forward, moe_forward
+from .shard_ctx import constrain, constrain_cache, use_mesh
+
+Params = Any
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def _sinusoid(pos, d):
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ===========================================================================
+# decoder-only transformers (dense / MoE / VLM)
+# ===========================================================================
+def _init_decoder(cfg: ModelConfig, key) -> Params:
+    kg = KeyGen(key)
+    dt = dtype_of(cfg.param_dtype)
+    d, V = cfg.d_model, cfg.vocab
+    first_k = cfg.moe.first_k_dense if cfg.moe else 0
+    L_moe = cfg.n_layers - first_k
+    p: dict = {
+        "embed": embed_init(kg(), (V, d), dt),
+        "final_norm": make_norm(cfg.norm, d, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(kg(), (d, V), dt, fan_in=d)
+    if cfg.vlm is not None:
+        p["patch_proj"] = dense_init(kg(), (cfg.vlm.d_patch, d), dt,
+                                     fan_in=cfg.vlm.d_patch)
+
+    def attn_init(L):
+        return (init_mla if cfg.mla else init_gqa)(kg, cfg, L, dt)
+
+    def layer_stack(L, moe: bool):
+        return {
+            "attn": attn_init(L),
+            "mlp": init_moe(kg, cfg, L, dt) if moe else init_mlp(
+                kg, d, (cfg.moe.d_ff_dense or cfg.d_ff) if cfg.moe else cfg.d_ff,
+                L, dt, cfg.activation
+            ),
+            "norm1": jnp.ones((L, d), dt) if cfg.norm == "rmsnorm" else {
+                "scale": jnp.ones((L, d), dt), "bias": jnp.zeros((L, d), dt)},
+            "norm2": jnp.ones((L, d), dt) if cfg.norm == "rmsnorm" else {
+                "scale": jnp.ones((L, d), dt), "bias": jnp.zeros((L, d), dt)},
+        }
+
+    if first_k > 0:
+        p["dense_prefix"] = layer_stack(first_k, moe=False)
+    p["layers"] = layer_stack(L_moe, moe=cfg.moe is not None)
+    return p
+
+
+def _decoder_block(cfg: ModelConfig, mesh, moe: bool):
+    def block(carry, lp, cos, sin):
+        x, aux = carry
+        h = apply_norm(cfg.norm, lp["norm1"], x)
+        a = (mla_forward if cfg.mla else gqa_forward)(lp["attn"], h, cfg, cos, sin)
+        # resolve the row-parallel partial sum HERE, in bf16: otherwise XLA
+        # defers it into the fp32 norm internals and the (2x bigger) fp32
+        # backward all-reduces dominate the step (§Perf iteration A2)
+        x = constrain(x + a, ("dp", None, None))
+        h = apply_norm(cfg.norm, lp["norm2"], x)
+        if moe:
+            y, al = moe_forward(lp["mlp"], h, cfg, mesh=mesh)
+            return (constrain(x + y, ("dp", None, None)), aux + al), None
+        return (constrain(x + mlp_forward(lp["mlp"], h, cfg.activation),
+                          ("dp", None, None)), aux), None
+
+    return block
+
+
+def _decoder_hidden(cfg: ModelConfig, p, batch, mesh):
+    """Embed inputs and run the layer stack; returns (hidden, aux_loss)."""
+    tokens = batch["tokens"]
+    x = p["embed"][tokens]
+    if cfg.vlm is not None:
+        patches = batch["patches"].astype(x.dtype) @ p["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+    B, S, _ = x.shape
+    cos, sin = rope_angles(jnp.arange(S), cfg.head_dim if not cfg.mla
+                           else cfg.mla.rope_head_dim, cfg.rope_theta)
+    aux = jnp.zeros((), jnp.float32)
+
+    if "dense_prefix" in p:
+        blk = jax.checkpoint(functools.partial(
+            _decoder_block(cfg, mesh, moe=False), cos=cos, sin=sin))
+        (x, aux), _ = jax.lax.scan(blk, (x, aux), p["dense_prefix"])
+    blk = jax.checkpoint(functools.partial(
+        _decoder_block(cfg, mesh, moe=cfg.moe is not None), cos=cos, sin=sin))
+    (x, aux), _ = jax.lax.scan(blk, (x, aux), p["layers"])
+    return apply_norm(cfg.norm, p["final_norm"], x), aux
+
+
+def _logits(cfg, p, h):
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return h @ w
+
+
+def _decoder_loss(cfg: ModelConfig, p, batch, mesh=None):
+    h, aux = _decoder_hidden(cfg, p, batch, mesh)
+    if cfg.vlm is not None:                      # loss on the text positions
+        h = h[:, -batch["tokens"].shape[1]:]
+    logits = _logits(cfg, p, h)
+    return cross_entropy(logits, batch["labels"], batch.get("mask")) + aux
+
+
+def _decoder_prefill(cfg: ModelConfig, p, batch, mesh=None):
+    h, _ = _decoder_hidden(cfg, p, batch, mesh)
+    logits = _logits(cfg, p, h[:, -1:])
+    cache = _decoder_cache_from_prefill(cfg, p, batch, mesh)
+    return logits, cache
+
+
+def _decoder_cache_shapes(cfg: ModelConfig, B: int, S: int):
+    first_k = cfg.moe.first_k_dense if cfg.moe else 0
+    L = cfg.n_layers - first_k
+    Sc = min(S, cfg.swa_window) if cfg.swa_window > 0 else S
+    if cfg.mla:
+        m = cfg.mla
+        mk = lambda L_: {"c": (L_, B, Sc, m.kv_lora_rank), "r": (L_, B, Sc, m.rope_head_dim)}
+    else:
+        mk = lambda L_: {"k": (L_, B, Sc, cfg.n_kv_heads, cfg.head_dim),
+                         "v": (L_, B, Sc, cfg.n_kv_heads, cfg.head_dim)}
+    out = {"layers": mk(L)}
+    if first_k:
+        out["dense_prefix"] = mk(first_k)
+    return out
+
+
+def _cache_constrain(c):
+    """Shard a freshly-created cache leaf (L, B, S, ...): B over dp, S over
+    model; tiny-batch caches context-parallel S over all axes."""
+    return constrain_cache(c, b_axis=1, s_axis=2)
+
+
+def _decoder_init_cache(cfg: ModelConfig, B: int, S: int, dtype):
+    shapes = _decoder_cache_shapes(cfg, B, S)
+    return jax.tree.map(lambda s: _cache_constrain(jnp.zeros(s, dtype)), shapes,
+                        is_leaf=lambda s: isinstance(s, tuple))
+
+
+def _decoder_cache_from_prefill(cfg, p, batch, mesh):
+    # dry-run-sufficient: zero-init cache of the prefill length (a production
+    # prefill writes K/V as it goes; shapes/shardings are identical)
+    B = batch["tokens"].shape[0]
+    S = batch["tokens"].shape[1] + (cfg.vlm.n_patches if cfg.vlm else 0)
+    return _decoder_init_cache(cfg, B, S, dtype_of(cfg.compute_dtype))
+
+
+def _onehot_write(c, rows, slot):
+    """cache (L, B, S, ...) <- rows (L, B, 1, ...) at position ``slot`` of
+    the (possibly sharded) S axis, without cross-shard data movement.
+    ``rows`` must already be encoded in the cache dtype (see encode_kv)."""
+    S = c.shape[2]
+    hit = (jnp.arange(S) == slot).reshape((1, 1, S) + (1,) * (c.ndim - 3))
+    assert rows.dtype == c.dtype, (rows.dtype, c.dtype)
+    return jnp.where(hit, rows, c)
+
+
+def _decoder_decode(cfg: ModelConfig, p, cache, tokens, pos, mesh=None):
+    """tokens (B, 1) int32; pos () int32 current position."""
+    x = p["embed"][tokens]
+    B = x.shape[0]
+    rope_dim = cfg.head_dim if not cfg.mla else cfg.mla.rope_head_dim
+    cos, sin = rope_angles(pos[None], rope_dim, cfg.rope_theta)
+    cos, sin = cos[None], sin[None]              # (1, 1, half) broadcast over B
+
+    def one_stack(x, stack_p, stack_cache, moe: bool):
+        def body(carry, xs):
+            h_in, = carry
+            lp, cl = xs
+            h = apply_norm(cfg.norm, lp["norm1"], h_in)
+            if cfg.mla:
+                a, rows = mla_decode(lp["attn"], h, cl, pos, cfg, cos, sin)
+            else:
+                a, rows = gqa_decode(lp["attn"], h, cl, pos, cfg, cos, sin)
+            h_in = h_in + a
+            h = apply_norm(cfg.norm, lp["norm2"], h_in)
+            if moe:
+                y, _ = moe_forward(lp["mlp"], h, cfg, mesh=mesh)
+            else:
+                y = mlp_forward(lp["mlp"], h, cfg.activation)
+            return (h_in + y,), rows
+
+        (x,), rows = jax.lax.scan(body, (x,), (stack_p, stack_cache))
+        # ONE cache write for the whole stack, as a shard-local one-hot
+        # select: a dynamic-update-slice on the model-sharded S axis makes
+        # XLA reshard the WHOLE cache through all-to-alls (8.1 GB/step on
+        # codeqwen decode_32k — EXPERIMENTS.md §Perf iteration C); the
+        # select touches only local shards and aliases the donated buffer.
+        S = jax.tree.leaves(stack_cache)[0].shape[2]
+        slot = pos % S if cfg.swa_window > 0 else pos
+        new_cache = jax.tree.map(
+            lambda c, r: constrain_cache(_onehot_write(c, r, slot),
+                                         b_axis=1, s_axis=2),
+            stack_cache, rows)
+        return x, new_cache
+
+    new_cache = {}
+    if "dense_prefix" in p:
+        x, nc = one_stack(x, p["dense_prefix"], cache["dense_prefix"], moe=False)
+        new_cache["dense_prefix"] = nc
+    x, nc = one_stack(x, p["layers"], cache["layers"], moe=cfg.moe is not None)
+    new_cache["layers"] = nc
+    h = apply_norm(cfg.norm, p["final_norm"], x)
+    return _logits(cfg, p, h), new_cache
+
+
+# ===========================================================================
+# encoder-decoder (Whisper backbone; conv/mel frontend is a stub)
+# ===========================================================================
+def _init_encdec(cfg: ModelConfig, key) -> Params:
+    kg = KeyGen(key)
+    dt = dtype_of(cfg.param_dtype)
+    d, V = cfg.d_model, cfg.vocab
+    e = cfg.encdec
+
+    def attn_stack(L):
+        return init_gqa(kg, cfg, L, dt)
+
+    def norms(L):
+        return {"scale": jnp.ones((L, d), dt), "bias": jnp.zeros((L, d), dt)}
+
+    return {
+        "embed": embed_init(kg(), (V, d), dt),
+        "enc": {
+            "attn": attn_stack(e.n_encoder_layers),
+            "mlp": init_mlp(kg, d, cfg.d_ff, e.n_encoder_layers, dt, "gelu"),
+            "norm1": norms(e.n_encoder_layers),
+            "norm2": norms(e.n_encoder_layers),
+        },
+        "enc_final": norms(1),
+        "dec": {
+            "attn": attn_stack(e.n_decoder_layers),
+            "cross": init_cross(kg, cfg, e.n_decoder_layers, dt),
+            "mlp": init_mlp(kg, d, cfg.d_ff, e.n_decoder_layers, dt, "gelu"),
+            "norm1": norms(e.n_decoder_layers),
+            "norm2": norms(e.n_decoder_layers),
+            "norm3": norms(e.n_decoder_layers),
+        },
+        "dec_final": norms(1),
+    }
+
+
+def _slice_norm(n, i=0):
+    return {"scale": n["scale"][i], "bias": n["bias"][i]}
+
+
+def _encode(cfg, p, frames):
+    B, Se, d = frames.shape
+    x = frames + _sinusoid(jnp.arange(Se), d)[None].astype(frames.dtype)
+
+    def blk(x, lp):
+        h = apply_norm("layernorm", lp["norm1"], x)
+        x = x + gqa_forward(lp["attn"], h, cfg, None, None, causal=False)
+        h = apply_norm("layernorm", lp["norm2"], x)
+        return x + mlp_forward(lp["mlp"], h, "gelu"), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(blk), x, p["enc"])
+    return apply_norm("layernorm", _slice_norm(p["enc_final"]), x)
+
+
+def _encdec_loss(cfg: ModelConfig, p, batch, mesh=None):
+    enc_out = _encode(cfg, p, batch["frames"].astype(dtype_of(cfg.compute_dtype)))
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = p["embed"][tokens] + _sinusoid(jnp.arange(S), cfg.d_model)[None].astype(
+        dtype_of(cfg.compute_dtype))
+
+    def blk(x, lp):
+        h = apply_norm("layernorm", lp["norm1"], x)
+        x = x + gqa_forward(lp["attn"], h, cfg, None, None, causal=True)
+        h = apply_norm("layernorm", lp["norm2"], x)
+        x = x + cross_forward(lp["cross"], h, cross_kv(lp["cross"], enc_out, cfg), cfg)
+        h = apply_norm("layernorm", lp["norm3"], x)
+        return x + mlp_forward(lp["mlp"], h, "gelu"), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(blk), x, p["dec"])
+    x = apply_norm("layernorm", _slice_norm(p["dec_final"]), x)
+    logits = x @ p["embed"].T
+    return cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+def _encdec_prefill(cfg: ModelConfig, p, batch, mesh=None, cache_len: int = 1024):
+    """Encode source; prime decoder caches (cross-KV precomputed).
+
+    ``cache_len`` (static) sizes the decoder self-attention cache.  The
+    returned logits are the pre-decode BOS projection (shape-complete; the
+    first real token comes from decode_step).
+    """
+    enc_out = _encode(cfg, p, batch["frames"].astype(dtype_of(cfg.compute_dtype)))
+    B, Se = enc_out.shape[:2]
+    Ld = cfg.encdec.n_decoder_layers
+    # cross-attention K/V per decoder layer
+    ck = jax.vmap(lambda lp: cross_kv(lp, enc_out, cfg), in_axes=(0,))(p["dec"]["cross"])
+    cache = {
+        "self": {
+            "k": _cache_constrain(jnp.zeros(
+                (Ld, B, cache_len, cfg.n_kv_heads, cfg.head_dim), enc_out.dtype)),
+            "v": _cache_constrain(jnp.zeros(
+                (Ld, B, cache_len, cfg.n_kv_heads, cfg.head_dim), enc_out.dtype)),
+        },
+        "cross": jax.tree.map(_cache_constrain, ck),
+    }
+    bos = p["embed"][jnp.zeros((B, 1), jnp.int32)]
+    logits = apply_norm("layernorm", _slice_norm(p["dec_final"]), bos) @ p["embed"].T
+    return logits, cache
+
+
+def _encdec_init_cache(cfg: ModelConfig, B: int, S: int, dtype):
+    """Decoder self cache of length S + cross K/V over a source of length S
+    (the decode_* cells stress source length == seq_len)."""
+    Ld = cfg.encdec.n_decoder_layers
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "self": {
+            "k": jnp.zeros((Ld, B, S, KH, hd), dtype),
+            "v": jnp.zeros((Ld, B, S, KH, hd), dtype),
+        },
+        "cross": {
+            "k": jnp.zeros((Ld, B, S, H, hd), dtype),
+            "v": jnp.zeros((Ld, B, S, H, hd), dtype),
+        },
+    }
+
+
+def _encdec_decode(cfg: ModelConfig, p, cache, tokens, pos, mesh=None):
+    x = p["embed"][tokens] + _sinusoid(pos[None], cfg.d_model)[None].astype(
+        dtype_of(cfg.compute_dtype))
+
+    def body(carry, xs):
+        (h_in,) = carry
+        lp, self_c, cross_c = xs
+        h = apply_norm("layernorm", lp["norm1"], h_in)
+        a, rows = gqa_decode(lp["attn"], h, self_c, pos, cfg, None, None)
+        h_in = h_in + a
+        h = apply_norm("layernorm", lp["norm2"], h_in)
+        h_in = h_in + cross_forward(lp["cross"], h, cross_c, cfg)
+        h = apply_norm("layernorm", lp["norm3"], h_in)
+        return (h_in + mlp_forward(lp["mlp"], h, "gelu"),), rows
+
+    (x,), rows = jax.lax.scan(body, (x,), (p["dec"], cache["self"], cache["cross"]))
+    self_new = jax.tree.map(
+        lambda c, r: constrain_cache(_onehot_write(c, r, pos),
+                                     b_axis=1, s_axis=2),
+        cache["self"], rows)
+    x = apply_norm("layernorm", _slice_norm(p["dec_final"]), x)
+    return x @ p["embed"].T, {"self": self_new, "cross": cache["cross"]}
+
+
+# ===========================================================================
+# SSM / hybrid (Mamba2, Zamba2)
+# ===========================================================================
+def _hybrid_forward(cfg: ModelConfig, p, x, mesh=None):
+    g, k, rest = ssm_mod.hybrid_layout(cfg)
+    d = cfg.d_model
+    mam = p["mamba"]
+    norms = p["norm"]
+
+    def mamba_block(x, lp_and_norm):
+        lp, nm = lp_and_norm
+        return x + ssm_mod.mamba_forward(lp, apply_norm("rmsnorm", nm, x), cfg), None
+
+    def run_slice(x, lo, hi):
+        sl = jax.tree.map(lambda a: a[lo:hi], mam)
+        nm = norms[lo:hi]
+        x, _ = jax.lax.scan(jax.checkpoint(mamba_block), x, (sl, nm))
+        return x
+
+    if g > 0:
+        B, S, _ = x.shape
+        cos, sin = rope_angles(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+
+        def shared_block(x):
+            h = apply_norm("rmsnorm", p["shared_norm1"], x)
+            x = x + gqa_forward(p["shared_attn"], h, cfg, cos, sin, causal=True)
+            h = apply_norm("rmsnorm", p["shared_norm2"], x)
+            return x + mlp_forward(p["shared_mlp"], h, "silu")
+
+        for gi in range(g):
+            x = run_slice(x, gi * k, (gi + 1) * k)
+            x = jax.checkpoint(shared_block)(x)
+        if rest:
+            x = run_slice(x, g * k, g * k + rest)
+    else:
+        x = run_slice(x, 0, cfg.n_layers)
+    return x
+
+
+def _init_ssm(cfg: ModelConfig, key) -> Params:
+    kg = KeyGen(key)
+    dt = dtype_of(cfg.param_dtype)
+    p = ssm_mod.init_hybrid(kg, cfg, dt)
+    p["embed"] = embed_init(kg(), (cfg.vocab, cfg.d_model), dt)
+    p["final_norm"] = jnp.ones((cfg.d_model,), dt)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(kg(), (cfg.d_model, cfg.vocab), dt,
+                                  fan_in=cfg.d_model)
+    return p
+
+
+def _ssm_loss(cfg, p, batch, mesh=None):
+    x = p["embed"][batch["tokens"]]
+    x = _hybrid_forward(cfg, p, x, mesh)
+    x = apply_norm("rmsnorm", p["final_norm"], x)
+    return cross_entropy(_logits(cfg, p, x), batch["labels"], batch.get("mask"))
+
+
+def _ssm_init_cache(cfg: ModelConfig, B: int, S: int, dtype):
+    di, H, ds, K = ssm_mod._mamba_dims(cfg)
+    hd = cfg.ssm.head_dim
+    g, k, rest = ssm_mod.hybrid_layout(cfg)
+    cache = {
+        "ssm": constrain(jnp.zeros((cfg.n_layers, B, H, ds, hd), jnp.float32),
+                         (None, "dp", "model", None, None)),
+        "conv": constrain(jnp.zeros((cfg.n_layers, B, K - 1, di + 2 * ds), dtype),
+                          (None, "dp", None, "model")),
+    }
+    if g > 0:
+        cache["attn"] = {
+            "k": _cache_constrain(jnp.zeros(
+                (g, B, S, cfg.n_kv_heads, cfg.head_dim), dtype)),
+            "v": _cache_constrain(jnp.zeros(
+                (g, B, S, cfg.n_kv_heads, cfg.head_dim), dtype)),
+        }
+    return cache
+
+
+def _ssm_prefill(cfg, p, batch, mesh=None):
+    x = p["embed"][batch["tokens"]]
+    x = _hybrid_forward(cfg, p, x, mesh)
+    x = apply_norm("rmsnorm", p["final_norm"], x)
+    logits = _logits(cfg, p, x[:, -1:])
+    B, S = batch["tokens"].shape
+    return logits, _ssm_init_cache(cfg, B, S, dtype_of(cfg.compute_dtype))
+
+
+def _ssm_decode(cfg: ModelConfig, p, cache, tokens, pos, mesh=None):
+    g, k, rest = ssm_mod.hybrid_layout(cfg)
+    x = p["embed"][tokens]
+    cos, sin = None, None
+    if g > 0:
+        cs = rope_angles(pos[None], cfg.head_dim, cfg.rope_theta)
+        cos, sin = cs[0][None], cs[1][None]
+
+    def mamba_slice(x, lo, hi):
+        sl = jax.tree.map(lambda a: a[lo:hi], p["mamba"])
+        nm = p["norm"][lo:hi]
+        c = {kk: cache[kk][lo:hi] for kk in ("ssm", "conv")}
+
+        def body(carry, xs):
+            (h,) = carry
+            lp, nrm, ssm_c, conv_c = xs
+            y, st = ssm_mod.mamba_step(lp, apply_norm("rmsnorm", nrm, h),
+                                       {"ssm": ssm_c, "conv": conv_c}, cfg)
+            return (h + y,), (st["ssm"], st["conv"])
+
+        (x,), (new_ssm, new_conv) = jax.lax.scan(
+            body, (x,), (sl, nm, c["ssm"], c["conv"]))
+        return x, new_ssm, new_conv
+
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    if g > 0:
+        for gi in range(g):
+            x, ns, nc = mamba_slice(x, gi * k, (gi + 1) * k)
+            new_ssm.append(ns)
+            new_conv.append(nc)
+            h = apply_norm("rmsnorm", p["shared_norm1"], x)
+            kv = {"k": cache["attn"]["k"][gi], "v": cache["attn"]["v"][gi]}
+            a, rows = gqa_decode(p["shared_attn"], h, kv, pos, cfg, cos, sin)
+            x = x + a
+            h = apply_norm("rmsnorm", p["shared_norm2"], x)
+            x = x + mlp_forward(p["shared_mlp"], h, "silu")
+            new_k.append(constrain_cache(
+                _onehot_write(kv["k"][None], rows["k"][None], pos),
+                b_axis=1, s_axis=2)[0])
+            new_v.append(constrain_cache(
+                _onehot_write(kv["v"][None], rows["v"][None], pos),
+                b_axis=1, s_axis=2)[0])
+        if rest:
+            x, ns, nc = mamba_slice(x, g * k, g * k + rest)
+            new_ssm.append(ns)
+            new_conv.append(nc)
+    else:
+        x, ns, nc = mamba_slice(x, 0, cfg.n_layers)
+        new_ssm.append(ns)
+        new_conv.append(nc)
+    new_cache = {
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+        "conv": jnp.concatenate(new_conv, axis=0),
+    }
+    if g > 0:
+        new_cache["attn"] = {
+            "k": constrain_cache(jnp.stack(new_k), b_axis=1, s_axis=2),
+            "v": constrain_cache(jnp.stack(new_v), b_axis=1, s_axis=2),
+        }
+    x = apply_norm("rmsnorm", p["final_norm"], x)
+    return _logits(cfg, p, x), new_cache
+
+
+# ===========================================================================
+# xLSTM
+# ===========================================================================
+def _init_xlstm(cfg: ModelConfig, key) -> Params:
+    kg = KeyGen(key)
+    dt = dtype_of(cfg.param_dtype)
+    g, m = xlstm_mod.xlstm_layout(cfg)
+    p = {
+        "embed": embed_init(kg(), (cfg.vocab, cfg.d_model), dt),
+        "mlstm": xlstm_mod.init_mlstm(kg, cfg, g * m, dt),
+        "slstm": xlstm_mod.init_slstm(kg, cfg, g, dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(kg(), (cfg.d_model, cfg.vocab), dt,
+                                  fan_in=cfg.d_model)
+    return p
+
+
+def _xlstm_forward(cfg, p, x):
+    g, m = xlstm_mod.xlstm_layout(cfg)
+
+    def m_block(x, lp):
+        return xlstm_mod.mlstm_forward(lp, x, cfg), None
+
+    for gi in range(g):
+        sl = jax.tree.map(lambda a: a[gi * m:(gi + 1) * m], p["mlstm"])
+        x, _ = jax.lax.scan(jax.checkpoint(m_block), x, sl)
+        sp = jax.tree.map(lambda a: a[gi], p["slstm"])
+        x = jax.checkpoint(lambda xx: xlstm_mod.slstm_forward(sp, xx, cfg))(x)
+    return x
+
+
+def _xlstm_loss(cfg, p, batch, mesh=None):
+    x = p["embed"][batch["tokens"]]
+    x = _xlstm_forward(cfg, p, x)
+    from .common import rmsnorm
+    x = rmsnorm(p["final_norm"], x)
+    return cross_entropy(_logits(cfg, p, x), batch["labels"], batch.get("mask"))
+
+
+def _xlstm_init_cache(cfg: ModelConfig, B: int, S: int, dtype):
+    del S                                         # recurrent: state only
+    g, m = xlstm_mod.xlstm_layout(cfg)
+    di, H, hd = xlstm_mod._mlstm_dims(cfg)
+    return {
+        "mlstm": jnp.zeros((g * m, B, H, hd, 2 * hd), jnp.float32),
+        "slstm_h": jnp.zeros((g, B, cfg.d_model), dtype),
+        "slstm_c": jnp.zeros((g, B, cfg.d_model), jnp.float32),
+        "slstm_n": jnp.zeros((g, B, cfg.d_model), jnp.float32),
+    }
+
+
+def _xlstm_prefill(cfg, p, batch, mesh=None):
+    x = p["embed"][batch["tokens"]]
+    x = _xlstm_forward(cfg, p, x)
+    from .common import rmsnorm
+    logits = _logits(cfg, p, rmsnorm(p["final_norm"], x[:, -1:]))
+    B, S = batch["tokens"].shape
+    return logits, _xlstm_init_cache(cfg, B, S, dtype_of(cfg.compute_dtype))
+
+
+def _xlstm_decode(cfg, p, cache, tokens, pos, mesh=None):
+    del pos
+    g, m = xlstm_mod.xlstm_layout(cfg)
+    x = p["embed"][tokens]
+    new_m, new_h, new_c, new_n = [], [], [], []
+    for gi in range(g):
+        sl = jax.tree.map(lambda a: a[gi * m:(gi + 1) * m], p["mlstm"])
+
+        def body(carry, xs):
+            (h,) = carry
+            lp, st = xs
+            y, st_new = xlstm_mod.mlstm_step(lp, h, st, cfg)
+            return (y,), st_new
+
+        (x,), ms = jax.lax.scan(body, (x,), (sl, cache["mlstm"][gi * m:(gi + 1) * m]))
+        new_m.append(ms)
+        sp = jax.tree.map(lambda a: a[gi], p["slstm"])
+        st = (cache["slstm_h"][gi], cache["slstm_c"][gi], cache["slstm_n"][gi])
+        x, (h, c, n) = xlstm_mod.slstm_step(sp, x, st, cfg)
+        new_h.append(h)
+        new_c.append(c)
+        new_n.append(n)
+    from .common import rmsnorm
+    logits = _logits(cfg, p, rmsnorm(p["final_norm"], x))
+    return logits, {
+        "mlstm": jnp.concatenate(new_m, axis=0),
+        "slstm_h": jnp.stack(new_h),
+        "slstm_c": jnp.stack(new_c),
+        "slstm_n": jnp.stack(new_n),
+    }
+
+
+def _with_ctx(fn):
+    """Install the mesh sharding-hint context around a step entry point."""
+    @functools.wraps(fn)
+    def wrapped(*args, mesh=None, **kw):
+        with use_mesh(mesh):
+            return fn(*args, mesh=mesh, **kw)
+    return wrapped
+
+
+# ===========================================================================
+def build_model(cfg: ModelConfig) -> Model:
+    cfg.validate()
+    if cfg.xlstm is not None:
+        return Model(cfg, functools.partial(_init_xlstm, cfg),
+                     _with_ctx(functools.partial(_xlstm_loss, cfg)),
+                     _with_ctx(functools.partial(_xlstm_prefill, cfg)),
+                     _with_ctx(functools.partial(_xlstm_decode, cfg)),
+                     functools.partial(_xlstm_init_cache, cfg))
+    if cfg.family in ("ssm", "hybrid"):
+        return Model(cfg, functools.partial(_init_ssm, cfg),
+                     _with_ctx(functools.partial(_ssm_loss, cfg)),
+                     _with_ctx(functools.partial(_ssm_prefill, cfg)),
+                     _with_ctx(functools.partial(_ssm_decode, cfg)),
+                     functools.partial(_ssm_init_cache, cfg))
+    if cfg.family == "encdec":
+        return Model(cfg, functools.partial(_init_encdec, cfg),
+                     _with_ctx(functools.partial(_encdec_loss, cfg)),
+                     _with_ctx(functools.partial(_encdec_prefill, cfg)),
+                     _with_ctx(functools.partial(_encdec_decode, cfg)),
+                     functools.partial(_encdec_init_cache, cfg))
+    return Model(cfg, functools.partial(_init_decoder, cfg),
+                 _with_ctx(functools.partial(_decoder_loss, cfg)),
+                 _with_ctx(functools.partial(_decoder_prefill, cfg)),
+                 _with_ctx(functools.partial(_decoder_decode, cfg)),
+                 functools.partial(_decoder_init_cache, cfg))

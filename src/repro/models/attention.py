@@ -1,0 +1,407 @@
+"""Attention: GQA (dense + chunked online-softmax), SWA, MLA, cross-attn.
+
+Conventions:
+* q (B, Sq, H, Dk), k (B, Sk, KH, Dk), v (B, Sk, KH, Dv); H = KH * G.
+* training/prefill use ``attention_core`` (dense (S,S) scores or the chunked
+  online-softmax path — the latter is mandatory for 32k+ prefill);
+* decode keeps the KV cache sharded over the MODEL axis on the SEQUENCE
+  dimension (flash-decoding style): every model shard scores its local KV
+  slice and XLA combines the partial softmax via small cross-shard
+  reductions — this is what lets 8-KV-head models run on 16-way model
+  meshes and 512k contexts fit per device;
+* sliding-window archs (h2o-danube) use a RING-BUFFER cache of window size
+  so long_500k decode stores O(window), not O(seq).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, apply_rope, dense_init, zeros_init
+from .config import ModelConfig
+from .shard_ctx import constrain, constrain_cache
+
+NEG_INF = -1e30
+KV_SCALE = 24.0       # fixed symmetric int8 scale for quantised KV caches
+
+
+def encode_kv(x, dtype):
+    if dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) * KV_SCALE),
+                        -127, 127).astype(jnp.int8)
+    return x.astype(dtype)
+
+
+def decode_kv(x):
+    if x.dtype == jnp.int8:
+        return (x.astype(jnp.float32) * (1.0 / KV_SCALE)).astype(jnp.bfloat16)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+def _mask(qpos, kpos, causal: bool, window: int):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), jnp.bool_)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m
+
+
+def expand_kv(k, n_heads: int):
+    """(B, S, KH, D) -> (B, S, H, D): repeat KV groups so every attention
+    tensor carries a full H head dim that shards cleanly over `model`."""
+    B, S, KH, D = k.shape
+    if KH == n_heads:
+        return k
+    G = n_heads // KH
+    k = jnp.broadcast_to(k[:, :, :, None], (B, S, KH, G, D))
+    return k.reshape(B, S, n_heads, D)
+
+
+def attention_dense(q, k, v, *, causal: bool, window: int, q0: int = 0, k0: int = 0,
+                    scale: float | None = None):
+    """Materialised-scores attention (q/k/v all (B, S, H, D))."""
+    B, Sq, H, Dk = q.shape
+    scale = scale if scale is not None else Dk ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    s = constrain(s, ("dp", "model", None, None))
+    qpos = q0 + jnp.arange(Sq)
+    kpos = k0 + jnp.arange(k.shape[1])
+    m = _mask(qpos, kpos, causal, window)
+    s = jnp.where(m[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return o
+
+
+def _chunk_pairs(nq: int, nk: int, causal: bool, window: int, chunk: int):
+    """Static (qi, kj) block list, SKIPPING fully-masked blocks.
+
+    For causal masks this halves attention FLOPs vs the visit-everything
+    grid (and for sliding windows keeps only ~window/chunk diagonals) —
+    EXPERIMENTS.md §Perf iteration B.  Non-causal keeps the full grid.
+    """
+    pq, pk = [], []
+    for qi in range(nq):
+        for kj in range(nk):
+            if causal and kj > qi:
+                continue                       # strictly-future block
+            if window > 0 and (qi - kj) * chunk >= window + chunk:
+                continue                       # fully outside the window
+            pq.append(qi)
+            pk.append(kj)
+    return pq, pk
+
+
+def attention_chunked(q, k, v, *, causal: bool, window: int, chunk: int,
+                      scale: float | None = None):
+    """Online-softmax attention, O(chunk^2) live memory (flash-style).
+
+    One flat scan over the STATIC list of non-masked (q-chunk, kv-chunk)
+    block pairs; per-q-chunk running (max, sum, acc) statistics live in a
+    carried (nq, ...) state updated at the block's q index.
+    """
+    B, Sq, H, Dk = q.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]
+    scale = scale if scale is not None else Dk ** -0.5
+    assert Sq % chunk == 0 and Sk % chunk == 0, (Sq, Sk, chunk)
+    nq, nk = Sq // chunk, Sk // chunk
+    qc = q.reshape(B, nq, chunk, H, Dk).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nk, chunk, H, Dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, chunk, H, Dv).transpose(1, 0, 2, 3, 4)
+    pq, pk = _chunk_pairs(nq, nk, causal, window, chunk)
+
+    m0 = jnp.full((nq, B, H, chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, B, H, chunk), jnp.float32)
+    a0 = constrain(jnp.zeros((nq, B, H, chunk, Dv), jnp.float32),
+                   (None, "dp", "model", None, None))
+
+    def step(carry, idx):
+        m, l, acc = carry
+        qi, kj = idx
+        qblk = jax.lax.dynamic_index_in_dim(qc, qi, 0, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kc, kj, 0, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vc, kj, 0, keepdims=False)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk).astype(jnp.float32) * scale
+        s = constrain(s, ("dp", "model", None, None))
+        qpos = qi * chunk + jnp.arange(chunk)
+        kpos = kj * chunk + jnp.arange(chunk)
+        msk = _mask(qpos, kpos, causal, window)
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        m_q = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        l_q = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        a_q = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(m_q, s.max(axis=-1))
+        # clamp: fully-masked rows keep m at NEG_INF and must not revive
+        corr = jnp.exp(jnp.clip(m_q - m_new, -80.0, 0.0))
+        p = jnp.exp(jnp.clip(s - m_new[..., None], -80.0, 0.0))
+        p = jnp.where(msk[None, None], p, 0.0)
+        l_new = l_q * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vblk.dtype), vblk)
+        a_new = a_q * corr[..., None] + pv.astype(jnp.float32)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.asarray(pq, jnp.int32), jnp.asarray(pk, jnp.int32)))
+    o = acc / jnp.maximum(l[..., None], 1e-30)      # (nq, B, H, chunk, Dv)
+    o = o.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, Dv)
+    return o.astype(v.dtype)
+
+
+def attention_core(q, k, v, cfg: ModelConfig, *, causal: bool, window: int = 0,
+                   scale: float | None = None):
+    if cfg.attn_impl == "chunked" and q.shape[1] > cfg.attn_chunk:
+        return attention_chunked(
+            q, k, v, causal=causal, window=window, chunk=cfg.attn_chunk, scale=scale
+        )
+    return attention_dense(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def decode_attend(q, k_cache, v_cache, k_new, v_new, pos, *, window: int = 0,
+                  scale: float | None = None):
+    """Single-token attention: OLD cache (positions < pos) + the current
+    token's fresh k/v appended explicitly.  The caller writes (k_new, v_new)
+    into the cache AFTER the layer scan with ONE dynamic-update-slice — this
+    keeps the donated cache buffer aliasable in-place instead of double-
+    buffering a per-layer-updated copy through the scan (a 2x HBM saving on
+    32k-context decode; EXPERIMENTS.md §Perf).
+
+    q (B, H, Dk); caches (B, S, KH, D*); k_new/v_new (B, KH, D*); pos ().
+    ``window > 0``: the cache is a ring buffer of size S == window; the
+    absolute position of slot i is the latest p <= pos-ish with p % S == i.
+    """
+    B, S, KH, Dk = k_cache.shape
+    H = q.shape[1]
+    G = H // KH
+    scale = scale if scale is not None else Dk ** -0.5
+    qg = q.reshape(B, KH, G, Dk)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32) * scale
+    # pin scores to the CACHE layout: otherwise XLA reshards the
+    # fp32-converted cache through 8 GB of all-to-alls per decode step
+    # (or fully replicates it for context-parallel B=1 caches) —
+    # EXPERIMENTS.md §Perf iteration C
+    s = constrain_cache(s, b_axis=0, s_axis=3)
+    slot = jnp.arange(S)
+    if window > 0:
+        kpos = slot + ((pos - slot) // S) * S
+        valid = (kpos >= 0) & (kpos < pos) & (kpos > pos - window)
+    else:
+        valid = slot < pos
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    s_cur = jnp.einsum("bhgd,bhd->bhg", qg, k_new).astype(jnp.float32) * scale
+    # partial softmax over the sharded S axis: combine via max/sum stats
+    m_loc = jnp.maximum(s.max(axis=-1), s_cur)
+    p = jnp.exp(s - m_loc[..., None])
+    p_cur = jnp.exp(s_cur - m_loc)
+    l = p.sum(axis=-1) + p_cur
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    o = (o + p_cur[..., None].astype(v_new.dtype) * v_new[:, :, None])
+    o = o / l[..., None].astype(o.dtype)
+    return o.reshape(B, H, v_cache.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+def init_gqa(kg: KeyGen, cfg: ModelConfig, L: int, dtype) -> dict:
+    d, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(kg(), (L, d, H * hd), dtype, fan_in=d),
+        "wk": dense_init(kg(), (L, d, KH * hd), dtype, fan_in=d),
+        "wv": dense_init(kg(), (L, d, KH * hd), dtype, fan_in=d),
+        "wo": dense_init(kg(), (L, H * hd, d), dtype, fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init(None, (L, H * hd), dtype)
+        p["bk"] = zeros_init(None, (L, KH * hd), dtype)
+        p["bv"] = zeros_init(None, (L, KH * hd), dtype)
+    return p
+
+
+def gqa_qkv(p, x, cfg: ModelConfig, cos, sin):
+    B, S, _ = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KH, hd)
+    v = v.reshape(B, S, KH, hd)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg: ModelConfig, cos, sin, *, causal: bool = True):
+    q, k, v = gqa_qkv(p, x, cfg, cos, sin)
+    q = constrain(q, ("dp", None, "model", None))
+    k = constrain(expand_kv(k, cfg.n_heads), ("dp", None, "model", None))
+    v = constrain(expand_kv(v, cfg.n_heads), ("dp", None, "model", None))
+    o = attention_core(q, k, v, cfg, causal=causal, window=cfg.swa_window)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def gqa_decode(p, x, cache, pos, cfg: ModelConfig, cos, sin):
+    """x (B, 1, d); cache {k, v} (B, S_cache, KH, hd); pos ().
+
+    Returns (y, {k, v} NEW-TOKEN rows (B, 1, KH, hd)) — the caller performs
+    the single post-scan cache write (see decode_attend docstring)."""
+    B = x.shape[0]
+    q, k, v = gqa_qkv(p, x, cfg, cos, sin)            # S = 1
+    o = decode_attend(q[:, 0], decode_kv(cache["k"]), decode_kv(cache["v"]),
+                      k[:, 0], v[:, 0], pos, window=cfg.swa_window)
+    y = o.reshape(B, 1, -1) @ p["wo"]
+    ct = cache["k"].dtype
+    return y, {"k": encode_kv(k, ct), "v": encode_kv(v, ct)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+def init_mla(kg: KeyGen, cfg: ModelConfig, L: int, dtype) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq_a": dense_init(kg(), (L, d, m.q_lora_rank), dtype, fan_in=d),
+        "q_norm": jnp.ones((L, m.q_lora_rank), dtype),
+        "wq_b": dense_init(kg(), (L, m.q_lora_rank, H * qk), dtype, fan_in=m.q_lora_rank),
+        "wkv_a": dense_init(kg(), (L, d, m.kv_lora_rank + m.rope_head_dim), dtype, fan_in=d),
+        "kv_norm": jnp.ones((L, m.kv_lora_rank), dtype),
+        "wkv_b": dense_init(
+            kg(),
+            (L, m.kv_lora_rank, H * (m.nope_head_dim + m.v_head_dim)),
+            dtype,
+            fan_in=m.kv_lora_rank,
+        ),
+        "wo": dense_init(kg(), (L, H * m.v_head_dim, d), dtype, fan_in=H * m.v_head_dim),
+    }
+
+
+def _mla_q(p, x, cfg, cos, sin):
+    from .common import rmsnorm
+
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = rmsnorm(p["q_norm"], x @ p["wq_a"])
+    q = (cq @ p["wq_b"]).reshape(B, S, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_forward(p, x, cfg: ModelConfig, cos, sin, *, causal: bool = True):
+    """Prefill/training MLA: decompress K/V and run standard attention."""
+    from .common import rmsnorm
+
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, cfg, cos, sin)
+    ckv = x @ p["wkv_a"]
+    c_kv = rmsnorm(p["kv_norm"], ckv[..., : m.kv_lora_rank])
+    k_rope = apply_rope(ckv[..., None, m.kv_lora_rank:], cos, sin)   # 1 shared head
+    kv = (c_kv @ p["wkv_b"]).reshape(B, S, H, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., : m.nope_head_dim], kv[..., m.nope_head_dim:]
+    q = constrain(jnp.concatenate([q_nope, q_rope], axis=-1),
+                  ("dp", None, "model", None))
+    k = constrain(
+        jnp.concatenate(
+            [k_nope, jnp.broadcast_to(
+                k_rope, k_nope.shape[:-1] + (m.rope_head_dim,))], axis=-1),
+        ("dp", None, "model", None))
+    v = constrain(v, ("dp", None, "model", None))
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    o = attention_core(q, k, v, cfg, causal=causal, scale=scale)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig, cos, sin):
+    """Absorbed-form MLA decode: the cache stores the COMPRESSED latent
+    (kv_lora_rank + rope_head_dim per token) — 8.6x smaller than GQA-128 —
+    and W_UK/W_UV are folded into the score/output projections."""
+    from .common import rmsnorm
+
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, cfg, cos, sin)        # (B, 1, H, *)
+    ckv = x @ p["wkv_a"]                                # (B, 1, rank+rope)
+    c_kv = rmsnorm(p["kv_norm"], ckv[..., : m.kv_lora_rank])
+    k_rope = apply_rope(ckv[..., None, m.kv_lora_rank:], cos, sin)[:, :, 0]
+    w_uk = p["wkv_b"].reshape(
+        m.kv_lora_rank, H, m.nope_head_dim + m.v_head_dim
+    )
+    w_k = w_uk[..., : m.nope_head_dim]                  # (rank, H, nope)
+    w_v = w_uk[..., m.nope_head_dim:]                   # (rank, H, v)
+    # absorb: q_eff = q_nope @ W_UK^T  -> score in latent space
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_k)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    s = (
+        jnp.einsum("bhr,bsr->bhs", q_eff, cache["c"])
+        + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], cache["r"])
+    ).astype(jnp.float32) * scale
+    S = cache["c"].shape[1]
+    s = constrain_cache(s, b_axis=0, s_axis=2)   # follow the cache layout
+    valid = jnp.arange(S) < pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    s_cur = (
+        jnp.einsum("bhr,br->bh", q_eff, c_kv[:, 0])
+        + jnp.einsum("bhd,bd->bh", q_rope[:, 0], k_rope[:, 0])
+    ).astype(jnp.float32) * scale
+    s_all = jnp.concatenate([s, s_cur[..., None]], axis=-1)
+    pr = jax.nn.softmax(s_all, axis=-1).astype(cache["c"].dtype)
+    # re-pin the probs to the cache layout: without it XLA all-gathers the
+    # 32k-latent cache (32 GB/step measured) instead of psumming (B,H,rank)
+    pr_s = constrain_cache(pr[..., :S], b_axis=0, s_axis=2)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr_s, cache["c"])
+    o_lat = o_lat + pr[..., S:] * c_kv                  # current-token term
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_v)          # (B, H, v)
+    y = o.reshape(B, 1, -1) @ p["wo"]
+    return y, {"c": c_kv, "r": k_rope}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (Whisper decoder)
+# ---------------------------------------------------------------------------
+def init_cross(kg: KeyGen, cfg: ModelConfig, L: int, dtype) -> dict:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "wq": dense_init(kg(), (L, d, H * hd), dtype, fan_in=d),
+        "wk": dense_init(kg(), (L, d, H * hd), dtype, fan_in=d),
+        "wv": dense_init(kg(), (L, d, H * hd), dtype, fan_in=d),
+        "wo": dense_init(kg(), (L, H * hd, d), dtype, fan_in=H * hd),
+    }
+
+
+def cross_forward(p, x, enc_kv, cfg: ModelConfig):
+    """x (B, S, d) attends to precomputed encoder K/V (B, Se, H, hd)."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = constrain((x @ p["wq"]).reshape(B, S, H, hd), ("dp", None, "model", None))
+    o = attention_core(q, enc_kv["k"], enc_kv["v"], cfg, causal=False)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def cross_kv(p, enc_out, cfg: ModelConfig):
+    B, Se, _ = enc_out.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "k": (enc_out @ p["wk"]).reshape(B, Se, H, hd),
+        "v": (enc_out @ p["wv"]).reshape(B, Se, H, hd),
+    }

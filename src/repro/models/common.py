@@ -1,0 +1,132 @@
+"""Shared model building blocks: norms, RoPE, embeddings, init, dtypes.
+
+Everything is pure JAX (no flax): parameters are plain pytrees of
+``jax.Array`` and every layer is a function ``(params, x, ...) -> y``.
+Per-layer parameters are STACKED on a leading layer axis and consumed with
+``jax.lax.scan`` so the lowered HLO is depth-independent (essential for
+compiling 60-layer 236B-parameter graphs quickly in the dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # pytree of jax.Array
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16, "int8": jnp.int8}[name]
+
+
+# ---------------------------------------------------------------------------
+# initialisation
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / np.sqrt(max(fan, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Deterministic fresh-key generator for building param trees."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(scale, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    v = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(v + eps)).astype(dt) * scale
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * p["scale"] + p["bias"]
+
+
+def make_norm(kind: str, d: int, dtype):
+    if kind == "rmsnorm":
+        return jnp.ones((d,), dtype)
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(kind: str, p, x):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_angles(positions, head_dim: int, theta: float):
+    """(..., S) int positions -> cos/sin of shape (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, D).  cos/sin: (..., S, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def cross_entropy(logits, labels, mask=None, vocab_chunk: int = 0):
+    """Token-level CE in fp32.  logits (B, S, V), labels (B, S) int32.
+
+    ``mask``: optional (B, S) 0/1 validity mask (pad tokens = 0).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def count_params(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))

@@ -1,0 +1,90 @@
+"""Chunked linear-attention / SSD machinery (shared by Mamba2 and mLSTM).
+
+Recurrent semantics (per head):
+
+    S_t = exp(log_f_t) * S_{t-1} + i_t * k_t v_t^T        (state: dk x dv)
+    y_t = q_t . S_t
+
+Training/prefill runs the CHUNKWISE form (Mamba-2 SSD): within a chunk of
+length C the interaction is a masked (C, C) matmul (MXU-friendly), across
+chunks a (dk, dv) state is carried by ``lax.scan`` — O(S*C) memory instead of
+the O(S * dk * dv) of a naive associative scan over matrix states (which at
+xLSTM's 192x192 heads would be gigabytes per layer).
+
+log_f <= 0 always (forget gates are sigmoids / -dt*exp(A)), so every exp()
+argument below is <= 0 and the computation is stable in fp32 without an
+extra max-stabiliser.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .shard_ctx import constrain
+
+
+def chunked_linear_attention(q, k, v, log_f, i_gate, *, chunk: int,
+                             initial_state=None):
+    """q/k (B,S,H,dk), v (B,S,H,dv), log_f/i_gate (B,S,H).
+
+    Returns (y (B,S,H,dv), final_state (B,H,dk,dv)).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    qc = q.reshape(B, n, chunk, H, dk).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, n, chunk, H, dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n, chunk, H, dv).transpose(1, 0, 2, 3, 4)
+    ac = log_f.reshape(B, n, chunk, H).transpose(1, 0, 2, 3).astype(jnp.float32)
+    ic = i_gate.reshape(B, n, chunk, H).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    S0 = (
+        constrain(jnp.zeros((B, H, dk, dv), jnp.float32),
+                  ("dp", "model", None, None))
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+
+    def step(state, inp):
+        qb, kb, vb, ab, ib = inp                     # (B,C,H,*) / (B,C,H)
+        A = jnp.cumsum(ab, axis=1)                   # inclusive cumulative log-decay
+        A_last = A[:, -1]                            # (B,H)
+        # inter-chunk: y_t += exp(A_t) q_t . S_prev
+        y_inter = jnp.einsum(
+            "bchd,bhdv->bchv", qb * jnp.exp(A)[..., None], state
+        )
+        # intra-chunk: masked decayed attention
+        s = jnp.einsum("bchd,bjhd->bhcj", qb, kb).astype(jnp.float32)
+        s = constrain(s, ("dp", "model", None, None))
+        dec = jnp.exp(
+            jnp.clip(A[:, :, None, :] - A[:, None, :, :], -80.0, 0.0)
+        ).transpose(0, 3, 1, 2)                      # (B,H,C,C) exp(A_c - A_j)
+        ig = ib.transpose(0, 2, 1)[:, :, None, :]    # (B,H,1,C)  i_j per column
+        s = s * dec * ig
+        s = jnp.where(tri[None, None], s, 0.0)
+        y_intra = jnp.einsum("bhcj,bjhv->bchv", s.astype(vb.dtype), vb)
+        # state update
+        wk = ib * jnp.exp(jnp.clip(A_last[:, None, :] - A, -80.0, 0.0))
+        S_new = state * jnp.exp(A_last)[..., None, None] + jnp.einsum(
+            "bjhd,bjhv->bhdv", (kb * wk[..., None]).astype(jnp.float32),
+            vb.astype(jnp.float32),
+        )
+        S_new = constrain(S_new, ("dp", "model", None, None))
+        y = (y_inter.astype(jnp.float32) + y_intra.astype(jnp.float32))
+        return S_new, y
+
+    state, yc = jax.lax.scan(step, S0, (qc, kc, vc, ac, ic))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dv)
+    return y.astype(v.dtype), state
+
+
+def linear_attention_step(state, q, k, v, log_f, i_gate):
+    """Single decode step.  state (B,H,dk,dv); q/k (B,H,dk); v (B,H,dv);
+    log_f/i_gate (B,H).  Returns (y (B,H,dv), new_state)."""
+    f = jnp.exp(log_f.astype(jnp.float32))[..., None, None]
+    outer = jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32), v.astype(jnp.float32))
+    new = state * f + i_gate.astype(jnp.float32)[..., None, None] * outer
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), new)
+    return y.astype(v.dtype), new

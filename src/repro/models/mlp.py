@@ -1,0 +1,214 @@
+"""MLPs and Mixture-of-Experts.
+
+MoE design (DeepSeek-V2 / Granite-MoE):
+* token-choice top-k routing with a static per-expert CAPACITY
+  (capacity_factor * T * k / E); overflow tokens are dropped (standard);
+* EXPERT PARALLELISM via ``jax.shard_map`` manual over the ``model`` mesh
+  axis only (data/pod axes stay auto): activations are replicated across
+  ``model``, so each shard gathers the tokens routed to ITS experts locally,
+  runs batched expert matmuls, scatters partial outputs and a single
+  ``psum`` over ``model`` combines them — the same collective footprint as a
+  Megatron TP MLP (one all-reduce), with zero all-to-alls;
+* shared (always-on) experts are a plain dense MLP whose ff dim is sharded
+  over ``model`` like any TP MLP.
+
+The local dispatch is static-shaped: assignment ranks come from a one-hot
+cumsum ((T*k, E_local) — tiny), token gathers from an (E_local, C) slot
+table.  This is the TPU-idiomatic replacement for GPU scatter-atomics
+(DESIGN.md §2 applies the same one-hot-matmul idea to the paper's CRM).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, act_fn, dense_init
+from .config import ModelConfig
+
+P = jax.sharding.PartitionSpec
+
+
+# ---------------------------------------------------------------------------
+# dense MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+def init_mlp(kg: KeyGen, d: int, d_ff: int, L: int, dtype, activation: str) -> dict:
+    p = {
+        "wi": dense_init(kg(), (L, d, d_ff), dtype, fan_in=d),
+        "wo": dense_init(kg(), (L, d_ff, d), dtype, fan_in=d_ff),
+    }
+    if activation == "silu":                      # SwiGLU gate
+        p["wg"] = dense_init(kg(), (L, d, d_ff), dtype, fan_in=d)
+    return p
+
+
+def mlp_forward(p, x, activation: str):
+    h = act_fn(activation)(x @ p["wi"])
+    if "wg" in p:
+        h = h * (x @ p["wg"])
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def init_moe(kg: KeyGen, cfg: ModelConfig, L: int, dtype) -> dict:
+    mo = cfg.moe
+    d = cfg.d_model
+    Ep = mo.n_experts_padded        # pad so the expert dim shards over any TP
+    p = {
+        "router": dense_init(kg(), (L, d, mo.n_experts), jnp.float32, fan_in=d),
+        "wi": dense_init(kg(), (L, Ep, d, mo.d_ff_expert), dtype, fan_in=d),
+        "wg": dense_init(kg(), (L, Ep, d, mo.d_ff_expert), dtype, fan_in=d),
+        "wo": dense_init(kg(), (L, Ep, mo.d_ff_expert, d), dtype,
+                         fan_in=mo.d_ff_expert),
+    }
+    if mo.n_shared > 0:
+        p["shared"] = init_mlp(kg, d, mo.n_shared * mo.d_ff_expert, L, dtype, "silu")
+    return p
+
+
+def _routed_local(x_flat, topk_idx, topk_w, wi, wg, wo, *, n_experts: int,
+                  n_shards: int, shard_id, capacity: int):
+    """Partial routed-expert output for the LOCAL expert slice.
+
+    x_flat (T, d); topk_idx/topk_w (T, k); wi/wg/wo (E_local, ...).
+    Returns (T, d) containing ONLY local experts' contributions.
+    """
+    T, d = x_flat.shape
+    k = topk_idx.shape[1]
+    e_local = n_experts // n_shards
+    e0 = shard_id * e_local
+    a_eid = topk_idx.reshape(-1)                       # (A,) A = T*k
+    a_tok = jnp.repeat(jnp.arange(T), k)
+    a_w = topk_w.reshape(-1)
+    local = (a_eid >= e0) & (a_eid < e0 + e_local)
+    eid_l = jnp.where(local, a_eid - e0, e_local)      # e_local = trash
+    oh = eid_l[:, None] == jnp.arange(e_local)[None, :]
+    rank = jnp.cumsum(oh, axis=0) - 1                  # (A, E_l)
+    a_rank = (rank * oh).sum(-1)
+    keep = local & (a_rank < capacity)
+    slot_e = jnp.where(keep, eid_l, e_local)           # drop via OOB row
+    slot_c = jnp.where(keep, a_rank, 0)
+    tok_tab = jnp.full((e_local + 1, capacity), T, jnp.int32)
+    tok_tab = tok_tab.at[slot_e, slot_c].set(a_tok.astype(jnp.int32), mode="drop")
+    w_tab = jnp.zeros((e_local + 1, capacity), x_flat.dtype)
+    w_tab = w_tab.at[slot_e, slot_c].set(a_w.astype(x_flat.dtype), mode="drop")
+    tok_tab, w_tab = tok_tab[:e_local], w_tab[:e_local]
+    valid = tok_tab < T
+    xe = jnp.where(
+        valid[..., None], x_flat[jnp.clip(tok_tab, 0, T - 1)], 0.0
+    )                                                  # (E_l, C, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wi))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, wg)
+    ye = jnp.einsum("ecf,efd->ecd", h, wo) * w_tab[..., None]
+    # fp32 scatter-combine: bf16 scatter-add combiners get cloned into
+    # all-reduce regions by SPMD and crash XLA:CPU's AllReducePromotion
+    out = jnp.zeros((T + 1, d), jnp.float32)
+    out = out.at[tok_tab].add(ye.astype(jnp.float32), mode="drop")
+    return out[:T].astype(x_flat.dtype)
+
+
+def moe_forward(p, x, cfg: ModelConfig, mesh=None, model_axis: str = "model"):
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    x_flat = x.reshape(T, d)
+    logits = (x_flat @ p["router"]).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, mo.top_k)
+    topk_w = topk_w / jnp.maximum(topk_w.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    me = probs.mean(0)
+    ce = jnp.zeros((mo.n_experts,), jnp.float32).at[topk_idx.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    aux = mo.aux_loss_coef * mo.n_experts * jnp.sum(me * ce)
+
+    n_shards = mesh.shape[model_axis] if mesh is not None else 1
+    Ep = mo.n_experts_padded        # routing only ever hits the real experts
+
+    dsz = mesh.shape.get("data", 1) if mesh is not None else 1
+    ws_ok = (
+        mesh is not None and n_shards > 1 and T <= 1024
+        and "data" in getattr(mesh, "axis_names", ())
+        and mo.d_ff_expert % dsz == 0
+    )
+    if mesh is None or n_shards == 1:
+        capacity = max(8, int(T * mo.top_k * mo.capacity_factor / mo.n_experts))
+        y = _routed_local(
+            x_flat, topk_idx, topk_w, p["wi"], p["wg"], p["wo"],
+            n_experts=Ep, n_shards=1, shard_id=0, capacity=capacity,
+        )
+    elif ws_ok:
+        # WEIGHT-STATIONARY decode path: tokens are tiny, expert weights are
+        # huge — replicate tokens, keep weights fully sharded (experts over
+        # `model`, ff over `data`) and psum the (T, d) partial outputs over
+        # both axes (2.6 MB for deepseek decode vs 0.6 GB/layer of expert
+        # weight gathers under the token-sharded path).
+        def ws_fn(xf, ti, tw, wi, wg, wo):
+            capacity = max(
+                8, int(xf.shape[0] * mo.top_k * mo.capacity_factor
+                       / mo.n_experts))
+            part = _routed_local(
+                xf, ti, tw, wi, wg, wo,
+                n_experts=Ep, n_shards=n_shards,
+                shard_id=jax.lax.axis_index(model_axis), capacity=capacity,
+            )
+            return jax.lax.psum(
+                part.astype(jnp.float32), (model_axis, "data")
+            ).astype(xf.dtype)
+
+        y = jax.shard_map(
+            ws_fn,
+            mesh=mesh,
+            in_specs=(
+                P(), P(), P(),
+                P(model_axis, None, "data"),
+                P(model_axis, None, "data"),
+                P(model_axis, "data", None),
+            ),
+            out_specs=P(),
+            check_vma=False,
+        )(x_flat, topk_idx, topk_w, p["wi"], p["wg"], p["wo"])
+    else:
+        # FULLY-MANUAL shard_map: tokens local per DP shard, experts local
+        # per model shard.  The dispatch scatters then never get partitioned
+        # by SPMD (whose bf16 scatter combiners crash XLA:CPU), and the only
+        # collective is ONE psum over `model` — a Megatron-TP-sized
+        # all-reduce, zero all-to-alls.
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp_n = 1
+        for a in dp:
+            dp_n *= mesh.shape[a]
+        tok_spec = P(dp) if T % dp_n == 0 else P()   # tiny-batch decode: repl.
+
+        def shard_fn(xf, ti, tw, wi, wg, wo):
+            t_local = xf.shape[0]
+            capacity = max(
+                8, int(t_local * mo.top_k * mo.capacity_factor / mo.n_experts)
+            )
+            part = _routed_local(
+                xf, ti, tw, wi, wg, wo,
+                n_experts=Ep, n_shards=n_shards,
+                shard_id=jax.lax.axis_index(model_axis), capacity=capacity,
+            )
+            return jax.lax.psum(part.astype(jnp.float32), model_axis).astype(
+                xf.dtype
+            )
+
+        y = jax.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(
+                tok_spec, tok_spec, tok_spec,
+                P(model_axis), P(model_axis), P(model_axis),
+            ),
+            out_specs=tok_spec,
+            check_vma=False,
+        )(x_flat, topk_idx, topk_w, p["wi"], p["wg"], p["wo"])
+
+    if mo.n_shared > 0:
+        y = y + mlp_forward(p["shared"], x_flat, "silu")
+    return y.reshape(B, S, d), aux

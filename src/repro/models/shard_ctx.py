@@ -1,0 +1,80 @@
+"""Ambient sharding hints for model internals.
+
+Model code is mesh-agnostic; the step entry points (loss / prefill /
+decode_step) install the mesh here at TRACE time, and layers call
+``constrain(x, dims)`` to pin activation shardings where XLA's propagation
+is known to go wrong (attention score/accumulator tensors).  Every hint is
+divisibility-guarded: a dim that does not divide by its axis size falls
+back to replication, so any (arch x mesh) combination still lowers.
+
+dims vocabulary:  "dp" (batch over pod+data), "model", None.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+def current_mesh():
+    return getattr(_TLS, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    prev = getattr(_TLS, "mesh", None)
+    _TLS.mesh = mesh
+    try:
+        yield
+    finally:
+        _TLS.mesh = prev
+
+
+def constrain(x, dims):
+    """dims: tuple like ("dp", None, "model", None) matching x.ndim."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    msz = mesh.shape["model"] if "model" in mesh.axis_names else 0
+    spec = []
+    for d, size in zip(dims, x.shape):
+        if d == "dp" and dp_n > 1 and size % dp_n == 0:
+            spec.append(dp)
+        elif d == "model" and msz > 1 and size % msz == 0:
+            spec.append("model")
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_cache(x, b_axis: int, s_axis: int):
+    """KV-cache sharding: batch over DP + seq over model when divisible;
+    tiny-batch (long-context) caches context-parallel the seq dim over ALL
+    axes instead.  Mirrors launch.sharding.cache_spec."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    msz = mesh.shape["model"] if "model" in mesh.axis_names else 0
+    spec = [None] * x.ndim
+    B, S = x.shape[b_axis], x.shape[s_axis]
+    if dp_n > 1 and B % dp_n == 0:
+        spec[b_axis] = dp
+        if msz > 1 and S % msz == 0:
+            spec[s_axis] = "model"
+    elif msz > 1 and dp_n >= 1 and S % (dp_n * msz) == 0:
+        spec[s_axis] = dp + ("model",)
+    elif msz > 1 and S % msz == 0:
+        spec[s_axis] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,146 @@
+"""Mamba-2 (SSD) blocks and the Zamba2-style hybrid stack.
+
+Mamba-2 block (simplified but FLOP/shape-faithful, n_groups = 1):
+  in_proj packs [z (di) | x (di) | B (ds) | C (ds) | dt (H)];
+  depthwise causal conv over the [x|B|C] channels; SSD recurrence via the
+  shared chunked-linear-attention machinery (q=C, k=B, v=x-heads,
+  log_f = -dt*exp(A_log), gain = dt); D skip; SiLU(z) gate; out_proj.
+
+Zamba2 hybrid: ``n_layers`` Mamba-2 layers with ONE SHARED full attention
+block (GQA + SwiGLU MLP, the same weights every time) applied after every
+``shared_attn_every`` SSM layers — Zamba2's weight-shared attention.  The
+stack is lowered as  outer-scan(groups) { inner-scan(mamba x k) ; shared
+attn }  so HLO stays depth-independent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import gqa_decode, gqa_forward, init_gqa
+from .common import KeyGen, apply_norm, dense_init, make_norm, rmsnorm
+from .config import ModelConfig
+from .linear_attn import chunked_linear_attention, linear_attention_step
+from .shard_ctx import constrain
+from .mlp import init_mlp, mlp_forward
+
+
+def _mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H = di // s.head_dim
+    return di, H, s.d_state, s.d_conv
+
+
+def init_mamba(kg: KeyGen, cfg: ModelConfig, L: int, dtype) -> dict:
+    d = cfg.d_model
+    di, H, ds, _ = _mamba_dims(cfg)
+    proj_out = 2 * di + 2 * ds + H
+    return {
+        "in_proj": dense_init(kg(), (L, d, proj_out), dtype, fan_in=d),
+        "conv_w": dense_init(kg(), (L, cfg.ssm.d_conv, di + 2 * ds), dtype,
+                             fan_in=cfg.ssm.d_conv),
+        "A_log": jnp.zeros((L, H), jnp.float32),
+        "dt_bias": jnp.zeros((L, H), jnp.float32),
+        "D": jnp.ones((L, H), jnp.float32),
+        "gate_norm": jnp.ones((L, di), dtype),
+        "out_proj": dense_init(kg(), (L, di, d), dtype, fan_in=di),
+    }
+
+
+def _causal_depthwise_conv(x, w):
+    """x (B, S, C), w (K, C): causal depthwise conv along S."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i : i + x.shape[1]] * w[i]
+    return out
+
+
+def _mamba_gates(p, x, cfg: ModelConfig):
+    di, H, ds, _ = _mamba_dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * ds]
+    dt_pre = zxbcdt[..., 2 * di + 2 * ds :]
+    return z, xbc, dt_pre
+
+
+def mamba_forward(p, x, cfg: ModelConfig):
+    """x (B, S, d) -> (B, S, d), full-sequence (training / prefill)."""
+    B, S, _ = x.shape
+    di, H, ds, _ = _mamba_dims(cfg)
+    hd = cfg.ssm.head_dim
+    z, xbc, dt_pre = _mamba_gates(p, x, cfg)
+    xbc = jax.nn.silu(_causal_depthwise_conv(xbc, p["conv_w"]))
+    xs = constrain(xbc[..., :di].reshape(B, S, H, hd),
+                   ("dp", None, "model", None))
+    Bt = xbc[..., di : di + ds]
+    Ct = xbc[..., di + ds :]
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    log_f = -dt * jnp.exp(p["A_log"])
+    k = jnp.broadcast_to(Bt[:, :, None, :], (B, S, H, ds))
+    q = jnp.broadcast_to(Ct[:, :, None, :], (B, S, H, ds))
+    y, _ = chunked_linear_attention(q, k, v=xs, log_f=log_f, i_gate=dt,
+                                    chunk=cfg.ssm.chunk)
+    y = y + xs * p["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, S, di)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"]
+
+
+def mamba_step(p, x, state, cfg: ModelConfig):
+    """Single decode step.  x (B, 1, d); state {ssm (B,H,ds,hd),
+    conv (B, K-1, di+2ds)}."""
+    B = x.shape[0]
+    di, H, ds, K = _mamba_dims(cfg)
+    hd = cfg.ssm.head_dim
+    z, xbc, dt_pre = _mamba_gates(p, x, cfg)
+    # conv ring: state holds the previous K-1 inputs
+    hist = jnp.concatenate([state["conv"], xbc], axis=1)        # (B, K, C)
+    xbc_c = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, p["conv_w"]))[:, None]
+    new_conv = hist[:, 1:]
+    xs = xbc_c[..., :di].reshape(B, H, hd)
+    Bt = xbc_c[:, 0, di : di + ds]
+    Ct = xbc_c[:, 0, di + ds :]
+    dt = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    log_f = -dt * jnp.exp(p["A_log"])
+    k = jnp.broadcast_to(Bt[:, None, :], (B, H, ds))
+    q = jnp.broadcast_to(Ct[:, None, :], (B, H, ds))
+    y, new_ssm = linear_attention_step(state["ssm"], q, k, xs, log_f, dt)
+    y = y + xs * p["D"][None, :, None].astype(xs.dtype)
+    y = y.reshape(B, 1, di)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], {"ssm": new_ssm, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid stack
+# ---------------------------------------------------------------------------
+def hybrid_layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, ssm_per_group, trailing_ssm)."""
+    k = cfg.ssm.shared_attn_every
+    if k <= 0:
+        return 0, 0, cfg.n_layers
+    g = cfg.n_layers // k
+    return g, k, cfg.n_layers - g * k
+
+
+def init_hybrid(kg: KeyGen, cfg: ModelConfig, dtype) -> dict:
+    g, k, rest = hybrid_layout(cfg)
+    p = {
+        "mamba": init_mamba(kg, cfg, cfg.n_layers, dtype),
+        "norm": jnp.ones((cfg.n_layers, cfg.d_model), dtype),
+    }
+    if g > 0:
+        # ONE shared attention + MLP block (Zamba2 weight sharing)
+        p["shared_attn"] = jax.tree.map(
+            lambda x: x[0], init_gqa(kg, cfg, 1, dtype)
+        )
+        p["shared_mlp"] = jax.tree.map(
+            lambda x: x[0], init_mlp(kg, cfg.d_model, cfg.d_ff, 1, dtype, "silu")
+        )
+        p["shared_norm1"] = jnp.ones((cfg.d_model,), dtype)
+        p["shared_norm2"] = jnp.ones((cfg.d_model,), dtype)
+    return p

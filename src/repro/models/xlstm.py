@@ -1,0 +1,156 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelisable) and sLSTM (scalar
+memory, sequential) — arXiv:2405.04517, simplified but shape/FLOP-faithful.
+
+mLSTM: pre-norm, up-projection (factor 2) splits into x-branch and z-gate;
+q/k/v heads over the inner dim; exponential-free gating (sigmoid forget +
+sigmoid input, stable by construction) through the shared chunked
+linear-attention machinery WITH a normaliser state (extra all-ones value
+column); output h = num / max(|den|, 1), gated by SiLU(z), down-projected.
+
+sLSTM: scalar cell/normaliser states per feature with recurrent gate
+connections; inherently sequential -> lax.scan over time (the xLSTM paper
+itself notes sLSTM is not parallelisable); followed by a small GELU FFN
+(projection factor 4/3).
+
+Block pattern: ``mlstm_per_group`` mLSTM blocks then 1 sLSTM block, repeated
+(12 layers = 3 x (3 mLSTM + 1 sLSTM) for xlstm-125m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, dense_init, rmsnorm
+from .config import ModelConfig
+from .linear_attn import chunked_linear_attention, linear_attention_step
+from .shard_ctx import constrain
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    di = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
+    H = cfg.n_heads
+    hd = di // H
+    return di, H, hd
+
+
+def init_mlstm(kg: KeyGen, cfg: ModelConfig, L: int, dtype) -> dict:
+    d = cfg.d_model
+    di, H, hd = _mlstm_dims(cfg)
+    return {
+        "norm": jnp.ones((L, d), dtype),
+        "up": dense_init(kg(), (L, d, 2 * di), dtype, fan_in=d),
+        "wq": dense_init(kg(), (L, di, di), dtype, fan_in=di),
+        "wk": dense_init(kg(), (L, di, di), dtype, fan_in=di),
+        "wv": dense_init(kg(), (L, di, di), dtype, fan_in=di),
+        "w_if": dense_init(kg(), (L, di, 2 * H), dtype, fan_in=di),
+        "out_norm": jnp.ones((L, di), dtype),
+        "down": dense_init(kg(), (L, di, d), dtype, fan_in=di),
+    }
+
+
+def _mlstm_qkvg(p, x, cfg):
+    B, S, _ = x.shape
+    di, H, hd = _mlstm_dims(cfg)
+    u = rmsnorm(p["norm"], x) @ p["up"]
+    xb, z = u[..., :di], u[..., di:]
+    q = constrain((xb @ p["wq"]).reshape(B, S, H, hd) * hd ** -0.5,
+                  ("dp", None, "model", None))
+    k = constrain((xb @ p["wk"]).reshape(B, S, H, hd) * hd ** -0.5,
+                  ("dp", None, "model", None))
+    v = constrain((xb @ p["wv"]).reshape(B, S, H, hd),
+                  ("dp", None, "model", None))
+    g = (xb @ p["w_if"]).astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(g[..., :H])
+    log_f = jax.nn.log_sigmoid(g[..., H:])
+    return q, k, v, i_gate, log_f, z
+
+
+def _mlstm_out(p, num_den, z, cfg):
+    di, H, hd = _mlstm_dims(cfg)
+    num, den = num_den[..., :hd], num_den[..., hd:]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    B = h.shape[0]
+    h = h.reshape(B, -1, di)
+    h = rmsnorm(p["out_norm"], h) * jax.nn.silu(z)
+    return h @ p["down"]
+
+
+def mlstm_forward(p, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    q, k, v, i_gate, log_f, z = _mlstm_qkvg(p, x, cfg)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v)], axis=-1)  # normaliser col
+    y, _ = chunked_linear_attention(q, k, v_aug, log_f, i_gate,
+                                    chunk=cfg.xlstm.chunk)
+    return x + _mlstm_out(p, y, z, cfg)
+
+
+def mlstm_step(p, x, state, cfg: ModelConfig):
+    """x (B,1,d); state (B,H,hd,2*hd)."""
+    q, k, v, i_gate, log_f, z = _mlstm_qkvg(p, x, cfg)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v)], axis=-1)
+    y, new_state = linear_attention_step(
+        state, q[:, 0], k[:, 0], v_aug[:, 0], log_f[:, 0], i_gate[:, 0]
+    )
+    return x + _mlstm_out(p, y[:, None], z, cfg), new_state
+
+
+def init_slstm(kg: KeyGen, cfg: ModelConfig, L: int, dtype) -> dict:
+    d = cfg.d_model
+    dff = int(d * cfg.xlstm.proj_factor_slstm)
+    return {
+        "norm": jnp.ones((L, d), dtype),
+        "wx": dense_init(kg(), (L, d, 4 * d), dtype, fan_in=d),
+        "wr": dense_init(kg(), (L, d, 4 * d), dtype, fan_in=d),
+        "ffn_norm": jnp.ones((L, d), dtype),
+        "ffn_wi": dense_init(kg(), (L, d, dff), dtype, fan_in=d),
+        "ffn_wo": dense_init(kg(), (L, dff, d), dtype, fan_in=dff),
+    }
+
+
+def _slstm_cell(p, xt, carry):
+    """xt (B, 4d) pre-activations from input; carry (h, c, n)."""
+    h, c, n = carry
+    d = h.shape[-1]
+    g = (xt + h @ p["wr"]).astype(jnp.float32)
+    z = jnp.tanh(g[..., :d])
+    i = jax.nn.sigmoid(g[..., d : 2 * d])
+    f = jax.nn.sigmoid(g[..., 2 * d : 3 * d])
+    o = jax.nn.sigmoid(g[..., 3 * d :])
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = (o * c_new / jnp.maximum(n_new, 1.0)).astype(h.dtype)
+    return h_new, c_new, n_new
+
+
+def slstm_forward(p, x, cfg: ModelConfig):
+    B, S, d = x.shape
+    xs = rmsnorm(p["norm"], x) @ p["wx"]              # (B, S, 4d)
+    h0 = jnp.zeros((B, d), x.dtype)
+    c0 = jnp.zeros((B, d), jnp.float32)
+    n0 = jnp.zeros((B, d), jnp.float32)
+
+    def step(carry, xt):
+        h, c, n = _slstm_cell(p, xt, carry)
+        return (h, c, n), h
+
+    _, hs = jax.lax.scan(step, (h0, c0, n0), xs.transpose(1, 0, 2))
+    y = x + hs.transpose(1, 0, 2)
+    h = jax.nn.gelu(rmsnorm(p["ffn_norm"], y) @ p["ffn_wi"])
+    return y + h @ p["ffn_wo"]
+
+
+def slstm_step(p, x, state, cfg: ModelConfig):
+    """x (B,1,d); state (h, c, n) each (B, d)."""
+    xt = (rmsnorm(p["norm"], x) @ p["wx"])[:, 0]
+    h, c, n = _slstm_cell(p, xt, state)
+    y = x + h[:, None]
+    hh = jax.nn.gelu(rmsnorm(p["ffn_norm"], y) @ p["ffn_wi"])
+    return y + hh @ p["ffn_wo"], (h, c, n)
+
+
+def xlstm_layout(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_groups, mlstm_per_group); layers = groups * (m + 1)."""
+    m = cfg.xlstm.mlstm_per_group
+    g = cfg.n_layers // (m + 1)
+    assert g * (m + 1) == cfg.n_layers, "n_layers must divide the block pattern"
+    return g, m

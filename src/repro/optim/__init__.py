@@ -1,0 +1,12 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from .compress import compress_gradients, decompress_gradients, ef_init
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "compress_gradients",
+    "decompress_gradients",
+    "ef_init",
+]

@@ -1,0 +1,53 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 stochastic-free linear quantisation per tensor with an ERROR-FEEDBACK
+accumulator: the quantisation residual is added back to the next step's
+gradient, so the compressed optimizer converges like the uncompressed one
+(Seide et al. / EF-SGD analysis).  Used as an optional hook in the train
+step: gradients are quantised BEFORE the cross-pod all-reduce (the DCN hop
+is the expensive one at multi-pod scale) and dequantised after.
+
+Pure JAX; the all-reduce itself stays in XLA — quantising the tensor that
+crosses the wire shrinks the collective's payload 2x (bf16) / 4x (fp32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantise(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantise(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_gradients(grads, ef_state):
+    """Returns (quantised pytree of (int8, scale), new_error_state)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = _quantise(gf)
+        err = gf - _dequantise(q, s)
+        return (q, s), err
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qtree = tdef.unflatten([o[0] for o in out])
+    etree = tdef.unflatten([o[1] for o in out])
+    return qtree, etree
+
+
+def decompress_gradients(qtree, like):
+    flat_q = [qs for qs in jax.tree.leaves(qtree, is_leaf=lambda x: isinstance(x, tuple))]
+    flat_l, tdef = jax.tree.flatten(like)
+    deq = [_dequantise(q, s).astype(l.dtype) for (q, s), l in zip(flat_q, flat_l)]
+    return tdef.unflatten(deq)

@@ -1,0 +1,4 @@
+from .expert_cache import ExpertCacheManager
+from .server import BatchedServer, Request
+
+__all__ = ["ExpertCacheManager", "BatchedServer", "Request"]

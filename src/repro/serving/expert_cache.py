@@ -1,0 +1,131 @@
+"""AKPC-managed MoE expert cache — the paper's strongest framework fit.
+
+Items     = routed experts of ONE layer (id = expert index; the manager is
+            instantiated per layer, or over flattened (layer, expert) ids).
+Requests  = the set of experts a serving host activates for a token batch
+            (top-k routing outcome) — co-activated experts are exactly the
+            paper's co-accessed data items.
+Servers   = serving hosts; fetching an expert's weights from a peer host or
+            from the parameter store costs transfer; keeping it resident
+            costs (HBM) rent.  AKPC packs co-activated experts into cliques
+            (<= omega) so a routing miss prefetches the whole group at the
+            discounted (1 + (p-1)*alpha)*lam cost, and whole-clique TTL
+            extension keeps hot expert groups resident.
+
+``observe`` feeds routing outcomes; the underlying AKPC engine accounts the
+cost online.  ``packed_tables`` materialises the cliques as a contiguous
+packed weight table so the actual gather uses kernels/packed_lookup (one
+DMA per clique instead of omega scattered row reads).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.akpc import AKPC, AKPCConfig
+from ..core.baselines import run_no_packing
+from ..core.cost import CostParams
+from ..traces.loader import Trace
+
+
+@dataclasses.dataclass
+class ExpertCacheStats:
+    akpc_total: float
+    nopack_total: float
+    n_observations: int
+    cliques: list[tuple[int, ...]]
+
+    @property
+    def saving_pct(self) -> float:
+        if self.nopack_total <= 0:
+            return 0.0
+        return 100.0 * (1.0 - self.akpc_total / self.nopack_total)
+
+
+class ExpertCacheManager:
+    def __init__(self, n_experts: int, n_hosts: int,
+                 params: CostParams | None = None, t_cg: float = 32.0,
+                 d_max: int = 8):
+        self.n_experts = n_experts
+        self.n_hosts = n_hosts
+        self.params = params or CostParams(alpha=0.6, rho=4.0, omega=5)
+        self.t_cg = t_cg
+        self.d_max = d_max
+        self.akpc = AKPC(n_experts, n_hosts,
+                         AKPCConfig(params=self.params, t_cg=t_cg, top_frac=1.0))
+        self._win: list[np.ndarray] = []
+        self._hist: list[tuple[np.ndarray, int, float]] = []
+        self._next_cg = t_cg
+        self._t = 0.0
+
+    def observe(self, topk_idx: np.ndarray, host: int = 0) -> None:
+        """topk_idx (tokens, k): one serving step's routing outcome."""
+        self._t += 1.0
+        experts = np.unique(topk_idx.reshape(-1))
+        # split into <= d_max item requests (paper's request-size bound)
+        for lo in range(0, len(experts), self.d_max):
+            grp = experts[lo : lo + self.d_max].astype(np.int64)
+            self._win.append(grp)
+            self._hist.append((grp, host, self._t))
+            if self._t >= self._next_cg:
+                self._regen()
+            self.akpc.engine.handle_request(grp.tolist(), host, self._t)
+
+    def _regen(self) -> None:
+        if self._win:
+            w = np.full((len(self._win), self.d_max), -1, np.int32)
+            for r, g in enumerate(self._win):
+                w[r, : len(g)] = g
+            part = self.akpc._generate(w, None, self._t)
+            self.akpc.engine.install_partition(
+                part, self._t, w, np.zeros(len(self._win), np.int32))
+            self._win = []
+        self._next_cg += self.t_cg
+
+    # -- introspection -------------------------------------------------------
+    def cliques(self) -> list[tuple[int, ...]]:
+        part = self.akpc._partition
+        return part.canonical() if part is not None else []
+
+    def packed_tables(self, expert_weights: np.ndarray):
+        """Pack clique members contiguously: (n_cliques, omega, ...) table +
+        per-expert (clique_id, slot) map for kernels.packed_lookup."""
+        omega = self.params.omega
+        cliques = [c for c in self.cliques()]
+        # singletons (and leftovers) get their own rows
+        covered = {d for c in cliques for d in c}
+        for e in range(self.n_experts):
+            if e not in covered:
+                cliques.append((e,))
+        table = np.zeros((len(cliques), omega) + expert_weights.shape[1:],
+                         expert_weights.dtype)
+        where = np.zeros((self.n_experts, 2), np.int32)
+        for ci, c in enumerate(cliques):
+            for slot, e in enumerate(c):
+                table[ci, slot] = expert_weights[e]
+                where[e] = (ci, slot)
+        return table, where
+
+    def stats(self) -> ExpertCacheStats:
+        # replay the same observation history through No-Packing
+        if self._hist:
+            d_max = max(len(g) for g, _, _ in self._hist)
+            items = np.full((len(self._hist), d_max), -1, np.int32)
+            servers = np.empty(len(self._hist), np.int32)
+            times = np.empty(len(self._hist), np.float64)
+            for i, (g, h, t) in enumerate(self._hist):
+                items[i, : len(g)] = g
+                servers[i] = h
+                times[i] = t
+            tr = Trace(times=times, servers=servers, items=items,
+                       n=self.n_experts, m=self.n_hosts, name="expert-trace")
+            nopack = run_no_packing(tr, self.params).total
+        else:
+            nopack = 0.0
+        return ExpertCacheStats(
+            akpc_total=self.akpc.engine.costs.total,
+            nopack_total=nopack,
+            n_observations=len(self._hist),
+            cliques=self.cliques(),
+        )

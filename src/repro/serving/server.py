@@ -1,0 +1,92 @@
+"""Batched decode server: continuous batching over Model.decode_step.
+
+Minimal but real: a request queue, fixed-size decode batch with slot reuse,
+per-slot positions, EOS/length stopping, and (for MoE models) routing-
+outcome taps feeding the AKPC ExpertCacheManager.  Runs the reduced configs
+on CPU (examples/serve_moe_expert_cache.py); the same driver shape lowers
+onto the production mesh via launch/specs.py decode cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.api import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    def __init__(self, model: Model, params, *, batch_size: int = 4,
+                 cache_len: int = 256, eos_id: int = -1,
+                 routing_tap: Callable | None = None):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.cache_len = cache_len
+        self.eos = eos_id
+        self.routing_tap = routing_tap
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * batch_size
+        self.slot_pos = np.zeros(batch_size, np.int64)
+        self.cache = model.init_cache(batch_size, cache_len, jnp.bfloat16)
+        self._decode = jax.jit(model.decode_step)
+        self.steps = 0
+        self._all: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+        self._all.append(req)
+
+    def _fill_slots(self) -> None:
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.popleft()
+                self.slot_pos[i] = 0
+
+    def step(self) -> int:
+        """One decode step for every active slot; returns #active."""
+        self._fill_slots()
+        active = [i for i in range(self.B) if self.slots[i] is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.B, 1), np.int32)
+        for i in active:
+            r = self.slots[i]
+            p = int(self.slot_pos[i])
+            tokens[i, 0] = r.prompt[p] if p < len(r.prompt) else (
+                r.out[-1] if r.out else 0)
+        pos = jnp.array(int(self.slot_pos[active[0]]) % self.cache_len, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.array(tokens), pos)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for i in active:
+            r = self.slots[i]
+            self.slot_pos[i] += 1
+            if self.slot_pos[i] >= len(r.prompt):
+                r.out.append(int(nxt[i]))
+                if int(nxt[i]) == self.eos or len(r.out) >= r.max_new:
+                    r.done = True
+                    self.slots[i] = None
+        self.steps += 1
+        if self.routing_tap is not None:
+            self.routing_tap(self.params, tokens)
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        while self.steps < max_steps and (self.queue or any(
+                s is not None for s in self.slots)):
+            self.step()
+        return [r for r in self._all if r.done]

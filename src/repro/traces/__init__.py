@@ -1,0 +1,11 @@
+from .loader import Trace, iter_batches, iter_windows
+from .synthetic import synth_trace, paper_trace, SynthConfig
+
+__all__ = [
+    "Trace",
+    "iter_batches",
+    "iter_windows",
+    "synth_trace",
+    "paper_trace",
+    "SynthConfig",
+]

@@ -1,0 +1,106 @@
+"""Trace container + batching/windowing utilities (paper §III.B, Fig. 3).
+
+A trace is a time-sorted sequence of requests r_i = <D_i, s_j, t_i>:
+
+* ``times``   (R,)        float64, non-decreasing
+* ``servers`` (R,)        int32 in [0, m)
+* ``items``   (R, d_max)  int32 item ids, -1 padded (D_i as a set)
+
+Batching (paper Table II: batch size 200) groups consecutive requests for the
+vectorised engines; windowing (T_CG) feeds the clique-generation module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    times: np.ndarray
+    servers: np.ndarray
+    items: np.ndarray
+    n: int                      # catalog size |U|
+    m: int                      # number of servers |S|
+    name: str = "trace"
+
+    def __post_init__(self):
+        R = self.times.shape[0]
+        assert self.servers.shape == (R,)
+        assert self.items.ndim == 2 and self.items.shape[0] == R
+        assert (np.diff(self.times) >= 0).all(), "trace must be time-sorted"
+
+    @property
+    def n_requests(self) -> int:
+        return int(self.times.shape[0])
+
+    @property
+    def d_max(self) -> int:
+        return int(self.items.shape[1])
+
+    def slice(self, start: int, stop: int) -> "Trace":
+        return Trace(
+            times=self.times[start:stop],
+            servers=self.servers[start:stop],
+            items=self.items[start:stop],
+            n=self.n,
+            m=self.m,
+            name=self.name,
+        )
+
+    def head(self, k: int) -> "Trace":
+        return self.slice(0, min(k, self.n_requests))
+
+    def request_sizes(self) -> np.ndarray:
+        return (self.items >= 0).sum(axis=1)
+
+    def item_frequencies(self) -> np.ndarray:
+        flat = self.items[self.items >= 0]
+        return np.bincount(flat, minlength=self.n)
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path,
+            times=self.times,
+            servers=self.servers,
+            items=self.items,
+            n=self.n,
+            m=self.m,
+            name=self.name,
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "Trace":
+        z = np.load(path, allow_pickle=False)
+        return cls(
+            times=z["times"],
+            servers=z["servers"],
+            items=z["items"],
+            n=int(z["n"]),
+            m=int(z["m"]),
+            name=str(z["name"]),
+        )
+
+
+def iter_batches(trace: Trace, batch_size: int) -> Iterator[Trace]:
+    """Consecutive request batches (paper batch size: 200)."""
+    for s in range(0, trace.n_requests, batch_size):
+        yield trace.slice(s, s + batch_size)
+
+
+def iter_windows(trace: Trace, t_cg: float) -> Iterator[tuple[float, Trace]]:
+    """(window_end_time, window_trace) pairs on the T_CG grid (Fig. 3)."""
+    if trace.n_requests == 0:
+        return
+    t0 = float(trace.times[0])
+    edges = np.arange(t0, float(trace.times[-1]) + t_cg, t_cg)
+    idx = np.searchsorted(trace.times, edges[1:], side="left")
+    prev = 0
+    for e, i in zip(edges[1:], idx):
+        if i > prev:
+            yield float(e), trace.slice(prev, i)
+        prev = i
+    if prev < trace.n_requests:
+        yield float(trace.times[-1]) + t_cg, trace.slice(prev, trace.n_requests)

@@ -1,0 +1,193 @@
+"""Synthetic Netflix-like / Spotify-like traces.
+
+The paper evaluates on Kaggle Netflix/Spotify traces (refs [15], [16]) with
+synthesised user locations.  Those dumps are not available in this offline
+container, so we synthesise traces with the statistics the paper relies on:
+
+* Zipf item/bundle popularity (heavy-tailed access counts, top-10% of items
+  carry most of the traffic — the paper filters CRM construction to them);
+* SESSION structure: a user at one server consumes several consecutive items
+  of one latent bundle (a show season / playlist) in a short burst — this is
+  exactly the co-access signal AKPC mines (93%-predictability claim, §I);
+* multi-item requests up to d_max (batch arrivals, Table II d_max = 5);
+* 600 servers, 1M requests, integer-free float timeline (Table II).
+
+"netflix" = fewer, smaller bundles (seasons of 4-10 episodes), strong binge
+sequentiality, shorter sessions.  "spotify" = larger bundles (playlists of
+8-20 tracks), longer sessions, slightly noisier.  Generators are fully seeded
+and every benchmark records the SynthConfig used.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .loader import Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class SynthConfig:
+    kind: str = "netflix"            # "netflix" | "spotify"
+    n_items: int = 600               # catalog |U| (top-10% -> 60, Table II)
+    n_servers: int = 600             # |S| = m (Table II)
+    n_requests: int = 1_000_000
+    d_max: int = 5                   # max request size (Table II)
+    seed: int = 0
+    # time model: horizon chosen so hot items re-arrive within ~dt at busy
+    # servers (dt = rho*lam/mu = 1 at Table-II defaults)
+    t_max: float = 4000.0
+    # session model
+    mean_session_len: float = 6.0
+    intra_gap: float = 0.02          # mean time between session requests
+    p_multi: float = 0.45            # P(request has >1 item)
+    p_noise: float = 0.05            # P(item replaced by random catalog item)
+    bundle_zipf: float = 1.35        # bundle popularity skew (head-heavy,
+    #                                  real VoD/music traces concentrate >80%
+    #                                  of plays on the top titles)
+    server_zipf: float = 0.9         # server load skew
+    bundle_cover: float = 0.6        # fraction of catalog covered by bundles
+    # regional content affinity: each server's users draw sessions from this
+    # many preferred bundles (0 = no affinity, global popularity everywhere).
+    # Real CDN edge nodes serve geographically clustered preferences [17-19].
+    server_affinity: int = 0
+    p_affinity_escape: float = 0.1   # P(session ignores the server preference)
+
+    def bundle_size_range(self) -> tuple[int, int]:
+        return (4, 10) if self.kind == "netflix" else (8, 20)
+
+
+def paper_trace(kind: str, n_requests: int = 1_000_000, seed: int = 0) -> "Trace":
+    """Trace matched to the paper's Table-II setup (see EXPERIMENTS.md).
+
+    |U| = 60 items (the paper's universe is the top-10% of the raw dataset,
+    so popularity inside it is flat-ish), m = 600 servers, regional content
+    affinity, request density such that hot (clique, server) pairs sit at the
+    TTL crossover — the regime the paper's cost dynamics live in.
+    """
+    dense_tmax = 6.0 * n_requests / 100_000.0
+    if kind == "netflix":
+        cfg = SynthConfig(
+            kind="netflix", n_items=60, n_servers=600, n_requests=n_requests,
+            t_max=dense_tmax, bundle_cover=1.0, bundle_zipf=0.7,
+            server_affinity=2, mean_session_len=6.0, seed=seed,
+        )
+    elif kind == "spotify":
+        cfg = SynthConfig(
+            kind="spotify", n_items=60, n_servers=600, n_requests=n_requests,
+            t_max=dense_tmax, bundle_cover=1.0, bundle_zipf=0.6,
+            server_affinity=2, mean_session_len=10.0, p_multi=0.5, seed=seed,
+        )
+    else:
+        raise ValueError(f"unknown paper trace kind: {kind}")
+    return synth_trace(cfg)
+
+
+def _zipf_choice(rng: np.random.Generator, n: int, s: float, size: int) -> np.ndarray:
+    """Zipf(s)-distributed choices over [0, n) (rank 0 = most popular)."""
+    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** s
+    w /= w.sum()
+    return rng.choice(n, size=size, p=w)
+
+
+def synth_trace(cfg: SynthConfig) -> Trace:
+    rng = np.random.default_rng(cfg.seed)
+
+    # --- latent bundles over a contiguous hot region of the catalog -------
+    lo, hi = cfg.bundle_size_range()
+    covered = int(cfg.n_items * cfg.bundle_cover)
+    sizes: list[int] = []
+    while sum(sizes) < covered:
+        sizes.append(int(rng.integers(lo, hi + 1)))
+    starts = np.cumsum([0] + sizes[:-1])
+    sizes_a = np.array(sizes)
+    starts = starts[starts + sizes_a <= cfg.n_items]
+    sizes_a = sizes_a[: len(starts)]
+    n_bundles = len(starts)
+
+    # --- sessions ----------------------------------------------------------
+    n_sessions = int(cfg.n_requests / cfg.mean_session_len * 1.3) + 8
+    sess_len = rng.geometric(1.0 / cfg.mean_session_len, size=n_sessions)
+    sess_len = np.clip(sess_len, 1, 4 * int(cfg.mean_session_len))
+    total = np.cumsum(sess_len)
+    n_sessions = int(np.searchsorted(total, cfg.n_requests) + 1)
+    sess_len = sess_len[:n_sessions]
+    R = int(sess_len.sum())
+
+    sess_server = _zipf_choice(rng, cfg.n_servers, cfg.server_zipf, n_sessions)
+    if cfg.server_affinity > 0 and n_bundles > cfg.server_affinity:
+        # each server prefers a few bundles (sampled by global popularity)
+        a = min(cfg.server_affinity, n_bundles)
+        wb = 1.0 / np.arange(1, n_bundles + 1) ** cfg.bundle_zipf
+        wb /= wb.sum()
+        prefs = np.stack(
+            [
+                rng.choice(n_bundles, size=a, replace=False, p=wb)
+                for _ in range(cfg.n_servers)
+            ]
+        )                                               # (m, a)
+        pick = rng.integers(0, a, size=n_sessions)
+        sess_bundle = prefs[sess_server, pick]
+        escape = rng.random(n_sessions) < cfg.p_affinity_escape
+        n_esc = int(escape.sum())
+        if n_esc:
+            sess_bundle[escape] = _zipf_choice(rng, n_bundles, cfg.bundle_zipf, n_esc)
+    else:
+        sess_bundle = _zipf_choice(rng, n_bundles, cfg.bundle_zipf, n_sessions)
+    sess_start = rng.uniform(0.0, cfg.t_max, size=n_sessions)
+
+    # expand per-request arrays
+    req_sess = np.repeat(np.arange(n_sessions), sess_len)
+    req_bundle = sess_bundle[req_sess]
+    servers = sess_server[req_sess].astype(np.int32)
+    # position of the request within its session
+    pos = np.arange(R) - np.repeat(np.cumsum(sess_len) - sess_len, sess_len)
+    gaps = rng.exponential(cfg.intra_gap, size=R)
+    # per-session cumulative offsets
+    cum = np.cumsum(gaps)
+    base = np.repeat(cum[np.cumsum(sess_len) - sess_len], sess_len)
+    times = sess_start[req_sess] + (cum - base)
+
+    # --- items: random subsets of the session's bundle ---------------------
+    # Users consume several items of one latent bundle per session in varied
+    # order (binge with skips / shuffled playlist) — over a window this makes
+    # the intra-bundle CRM a dense BLOCK, the structure K-cliques mine.
+    del pos
+    b_start = starts[req_bundle]
+    b_size = sizes_a[req_bundle]
+    n_it = np.ones(R, dtype=np.int64)
+    multi = rng.random(R) < cfg.p_multi
+    n_it[multi] = rng.integers(2, cfg.d_max + 1, size=int(multi.sum()))
+    n_it = np.minimum(n_it, b_size)
+    max_b = int(sizes_a.max())
+    u = rng.random((R, max_b))
+    u[np.arange(max_b)[None, :] >= b_size[:, None]] = np.inf  # invalid slots
+    pick = np.argsort(u, axis=1)[:, : cfg.d_max]              # k-subset w/o repl.
+    cols = np.arange(cfg.d_max)[None, :]
+    items = (b_start[:, None] + pick).astype(np.int32)
+    items[cols >= n_it[:, None]] = -1
+
+    # --- noise: replace kept items with random catalog items ---------------
+    keep = items >= 0
+    noise = (rng.random(items.shape) < cfg.p_noise) & keep
+    items[noise] = rng.integers(0, cfg.n_items, size=int(noise.sum())).astype(np.int32)
+
+    # de-duplicate within a request (sets): sort row, mask repeats
+    items_sorted = np.sort(items, axis=1)[:, ::-1]     # -1 pads go last
+    dup = np.zeros_like(items_sorted, dtype=bool)
+    dup[:, 1:] = (items_sorted[:, 1:] == items_sorted[:, :-1]) & (
+        items_sorted[:, 1:] >= 0
+    )
+    items_sorted[dup] = -1
+    items = np.sort(items_sorted, axis=1)[:, ::-1]
+
+    # --- sort by time, truncate -------------------------------------------
+    order = np.argsort(times, kind="stable")[: cfg.n_requests]
+    return Trace(
+        times=times[order],
+        servers=servers[order],
+        items=items[order],
+        n=cfg.n_items,
+        m=cfg.n_servers,
+        name=f"{cfg.kind}-synth-s{cfg.seed}",
+    )

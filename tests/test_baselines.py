@@ -1,0 +1,43 @@
+"""Fig. 5 orderings + OPT lower-bound validity."""
+import pytest
+
+from repro.core import (
+    AKPCConfig,
+    CostParams,
+    opt_lower_bound,
+    run_akpc,
+    run_dp_greedy,
+    run_no_packing,
+    run_packcache2,
+)
+from repro.traces import paper_trace
+
+
+@pytest.fixture(scope="module")
+def results():
+    params = CostParams()
+    tr = paper_trace("netflix", n_requests=30000, seed=0)
+    t_cg = 0.3
+    return {
+        "akpc": run_akpc(tr, AKPCConfig(params=params, t_cg=t_cg,
+                                        top_frac=1.0)).costs,
+        "nopack": run_no_packing(tr, params),
+        "pc2": run_packcache2(tr, params, t_cg=t_cg, top_frac=1.0),
+        "dpg": run_dp_greedy(tr, params, top_frac=1.0),
+        "opt": opt_lower_bound(tr, params),
+    }
+
+
+def test_opt_is_lower_bound(results):
+    opt = results["opt"].total
+    for k in ("akpc", "nopack", "pc2", "dpg"):
+        assert results[k].total >= opt
+
+
+def test_akpc_beats_online_baselines(results):
+    assert results["akpc"].total < results["pc2"].total
+    assert results["akpc"].total < results["nopack"].total
+
+
+def test_packing_beats_no_packing(results):
+    assert results["pc2"].total < results["nopack"].total

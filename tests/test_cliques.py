@@ -1,0 +1,76 @@
+"""Alg. 3/4 — clique partition invariants + split/merge behaviour."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cliques import CliquePartition, generate_cliques
+from repro.core.crm import build_window_crm
+
+
+def _window(rng, n, reqs, d_max=5):
+    items = np.full((reqs, d_max), -1, np.int32)
+    for r in range(reqs):
+        k = rng.integers(1, d_max + 1)
+        items[r, :k] = rng.choice(n, size=k, replace=False)
+    return items
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_partition_invariant(seed):
+    """Every item belongs to exactly one clique, sizes <= omega."""
+    rng = np.random.default_rng(seed)
+    n, omega = 30, 5
+    crm = build_window_crm(_window(rng, n, 60), n, theta=0.15, top_frac=1.0)
+    part = generate_cliques(None, None, crm, n, omega, gamma=0.85)
+    seen = np.zeros(n, int)
+    for c in part.cliques:
+        assert 1 <= len(c) <= omega
+        for d in c:
+            seen[d] += 1
+    assert (seen == 1).all()
+    assert (part.clique_of >= 0).all()
+    for i, c in enumerate(part.cliques):
+        for d in c:
+            assert part.clique_of[d] == i
+
+
+def test_split_oversized():
+    """A fully-connected 8-group must split into parts <= omega."""
+    n = 8
+    items = np.array([list(range(8))], np.int32).repeat(10, 0)
+    crm = build_window_crm(items, n, theta=0.01, top_frac=1.0)
+    part = generate_cliques(None, None, crm, n, omega=5, gamma=0.85)
+    sizes = sorted(len(c) for c in part.cliques)
+    assert max(sizes) <= 5 and sum(sizes) == n
+
+
+def test_approximate_merge_density():
+    """gamma=0.85, omega=5: a 5-group with 9/10 edges merges, 7/10 doesn't."""
+    n = 10
+    reqs = []
+    # group A {0..4}: all pairs except (3,4)  -> 9 edges
+    for a in range(5):
+        for b in range(a + 1, 5):
+            if (a, b) != (3, 4):
+                reqs.append([a, b])
+    # group B {5..9}: only 7 of 10 edges
+    eb = [(5, 6), (5, 7), (5, 8), (5, 9), (6, 7), (6, 8), (7, 8)]
+    reqs.extend([list(e) for e in eb])
+    items = np.full((len(reqs), 2), -1, np.int32)
+    for i, r in enumerate(reqs):
+        items[i] = r
+    crm = build_window_crm(items, n, theta=0.0, top_frac=1.0)
+    part = generate_cliques(None, None, crm, n, omega=5, gamma=0.85)
+    groups = {tuple(sorted(c)) for c in part.cliques if len(c) == 5}
+    assert (0, 1, 2, 3, 4) in groups
+    assert (5, 6, 7, 8, 9) not in groups
+
+
+def test_incremental_reuse():
+    """Unchanged CRM -> unchanged partition (Alg. 4 reuse)."""
+    rng = np.random.default_rng(0)
+    n = 20
+    crm = build_window_crm(_window(rng, n, 50), n, theta=0.2, top_frac=1.0)
+    p1 = generate_cliques(None, None, crm, n, 5, 0.85)
+    p2 = generate_cliques(p1, crm, crm, n, 5, 0.85)
+    assert p1.canonical() == p2.canonical()

@@ -1,0 +1,46 @@
+"""Theorems 1 & 2: exact adversarial ratio + per-request bound property."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CliquePartition,
+    CostParams,
+    adversarial_trace,
+    competitive_bound_corrected,
+    per_request_ratio_check,
+    replay_adversary,
+)
+from repro.traces import paper_trace
+
+
+@pytest.mark.parametrize("S,omega", [(1, 5), (2, 5), (5, 5), (3, 8), (1, 2)])
+def test_adversary_realises_bound_exactly(S, omega):
+    params = CostParams(omega=omega)
+    setup = adversarial_trace(S=S, omega=omega, n_phases=7, params=params)
+    akpc, opt, bound = replay_adversary(setup, params)
+    assert math.isclose(akpc / opt, bound, rel_tol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 6),
+       st.floats(0.1, 1.0, allow_nan=False))
+def test_adversary_property(S, omega, alpha):
+    params = CostParams(omega=omega, alpha=alpha)
+    setup = adversarial_trace(S=S, omega=omega, n_phases=3, params=params)
+    akpc, opt, bound = replay_adversary(setup, params)
+    assert akpc / opt <= bound + 1e-9
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 100))
+def test_per_request_bound_on_random_traces(seed):
+    """Thm 1 (corrected) holds request-by-request on arbitrary traces."""
+    params = CostParams()
+    tr = paper_trace("netflix", n_requests=1500, seed=seed)
+    part = CliquePartition.from_cliques(
+        60, [tuple(range(i, i + 5)) for i in range(0, 60, 5)])
+    worst = per_request_ratio_check(tr, part, params)
+    assert worst <= 1.0 + 1e-9

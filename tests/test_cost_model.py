@@ -1,0 +1,51 @@
+"""Cost model (paper Table I, eqs. 1-5) + competitive bound properties."""
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import CostParams, competitive_bound, competitive_bound_corrected
+
+
+def test_table1_identities(params):
+    assert params.transfer_cost(1, packed=False) == params.lam
+    assert params.transfer_cost(1, packed=True) == params.lam
+    assert params.transfer_cost(2, packed=False) == 2 * params.lam
+    assert math.isclose(params.transfer_cost(2, packed=True),
+                        (1 + params.alpha) * params.lam)
+    k = 5
+    assert math.isclose(params.transfer_cost(k, packed=True),
+                        (1 + (k - 1) * params.alpha) * params.lam)
+    assert math.isclose(params.caching_cost(k, params.dt), k * params.dt)
+
+
+def test_dt_rho():
+    p = CostParams(lam=3.0, mu=2.0, rho=4.0)
+    assert math.isclose(p.dt, 4.0 * 3.0 / 2.0)
+
+
+@given(st.integers(1, 20), st.integers(2, 10),
+       st.floats(0.01, 1.0, allow_nan=False))
+def test_packed_always_cheaper(p, omega, alpha):
+    cp = CostParams(alpha=alpha)
+    assert cp.transfer_cost(p, packed=True) <= cp.transfer_cost(p, packed=False) + 1e-9
+
+
+def test_paper_literal_mode():
+    p = CostParams(cost_mode="paper_literal")
+    # Alg. 5 line 11 literal: alpha * mu * |c|
+    assert math.isclose(p.transfer_cost(5, packed=True), 0.8 * 1.0 * 5)
+
+
+@given(st.integers(1, 10), st.integers(2, 12),
+       st.floats(0.05, 1.0, allow_nan=False))
+def test_corrected_bound_dominates_stated(S, omega, alpha):
+    # the stated Thm-1 form drops an S and UNDERSTATES the realised ratio
+    assert competitive_bound_corrected(S, omega, alpha) >= \
+        competitive_bound(S, omega, alpha) - 1e-9
+
+
+@given(st.integers(2, 12), st.floats(0.05, 1.0, allow_nan=False))
+def test_bounds_agree_at_S1(omega, alpha):
+    assert math.isclose(competitive_bound(1, omega, alpha),
+                        competitive_bound_corrected(1, omega, alpha))

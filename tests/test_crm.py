@@ -1,0 +1,33 @@
+"""Alg. 2 — CRM construction on the paper's own worked example (§IV.A)."""
+import numpy as np
+
+from repro.core.crm import build_window_crm, cooccurrence_counts, edge_diff
+
+
+def test_paper_worked_example():
+    # r1 = {d1, d2, d3}, r2 = {d2, d3}  (ids 1, 2, 3 in a 5-item universe)
+    items = np.array([[1, 2, 3], [2, 3, -1]], dtype=np.int32)
+    crm = cooccurrence_counts(items, 5)
+    assert crm[2, 3] == crm[3, 2] == 2        # incremented twice
+    assert crm[1, 2] == crm[2, 1] == 1
+    assert crm[1, 3] == crm[3, 1] == 1
+    assert crm[1, 1] == 0                     # zero diagonal
+    assert crm[0].sum() == 0
+
+
+def test_binarisation_threshold():
+    items = np.array([[1, 2, 3], [2, 3, -1], [2, 3, -1]], dtype=np.int32)
+    w = build_window_crm(items, 5, theta=0.4, top_frac=1.0)
+    lut = {int(h): i for i, h in enumerate(w.hot_items)}
+    assert w.norm[lut[2], lut[3]] == 1.0      # max pair -> 1 after min-max
+    assert w.binary[lut[2], lut[3]]
+    assert not w.binary[lut[1], lut[2]]       # 1/3 < 0.4
+
+
+def test_edge_diff():
+    a = np.array([[1, 2, -1]], dtype=np.int32)
+    b = np.array([[2, 3, -1]], dtype=np.int32)
+    w1 = build_window_crm(a, 5, theta=0.1, top_frac=1.0)
+    w2 = build_window_crm(b, 5, theta=0.1, top_frac=1.0)
+    added, removed = edge_diff(w1, w2)
+    assert (2, 3) in added and (1, 2) in removed

@@ -1,0 +1,43 @@
+"""The HLO cost walker: loop multipliers, dot FLOPs, collective byte math."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def test_scan_trip_count_multiplier():
+    A = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def scanned(a):
+        def body(c, _):
+            return c @ a, None
+        out, _ = jax.lax.scan(body, a, None, length=10)
+        return out
+
+    txt = jax.jit(scanned).lower(A).compile().as_text()
+    st = analyze_hlo(txt, 1)
+    assert abs(st.flops - 10 * 2 * 128**3) / (10 * 2 * 128**3) < 0.01
+
+
+def test_single_matmul_flops():
+    A = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    B = jax.ShapeDtypeStruct((32, 16), jnp.float32)
+    txt = jax.jit(lambda a, b: a @ b).lower(A, B).compile().as_text()
+    st = analyze_hlo(txt, 1)
+    assert st.flops == 2 * 64 * 32 * 16
+
+
+def test_collective_wire_bytes():
+    hlo = """
+HloModule m
+
+ENTRY %main.1 (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  %ar = f32[16,16]{1,0} all-reduce(%p), replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %ag = f32[16,16]{1,0} all-gather(%ar), replica_groups={{0,1},{2,3},{4,5},{6,7}}, dimensions={0}
+}
+"""
+    st = analyze_hlo(hlo, 8)
+    b = 16 * 16 * 4
+    assert st.coll_bytes_by_kind["all-reduce"] == 2 * b * 3 / 4
+    assert st.coll_bytes_by_kind["all-gather"] == b * 1 / 2

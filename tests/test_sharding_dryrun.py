@@ -1,0 +1,78 @@
+"""Sharding rules + a mini multi-device dry-run (subprocess: own device count)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.sharding import batch_spec, cache_spec, param_spec
+from jax.sharding import PartitionSpec as P
+
+
+class _Leaf:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+class _K:
+    def __init__(self, key):
+        self.key = key
+
+
+def test_param_rules():
+    mesh = _FakeMesh()
+    assert param_spec((_K("embed"),), _Leaf((102400, 5120)), mesh) == P("model", "data")
+    assert param_spec((_K("attn"), _K("wq")), _Leaf((60, 5120, 16384)), mesh) == \
+        P(None, "data", "model")
+    assert param_spec((_K("attn"), _K("wo")), _Leaf((60, 16384, 5120)), mesh) == \
+        P(None, "model", "data")
+    # expert weights: E over model, d over data
+    assert param_spec((_K("mlp"), _K("wi")), _Leaf((60, 160, 5120, 1536)), mesh) == \
+        P(None, "model", "data", None)
+    # indivisible dims fall back to replication
+    assert param_spec((_K("attn"), _K("wq")), _Leaf((4, 30, 30)), mesh) == P(None, None, None)
+    assert param_spec((_K("norm1"),), _Leaf((60, 5120)), mesh) == P()
+
+
+def test_cache_rules():
+    mesh = _FakeMesh()
+    # KV cache: batch over dp, seq over model
+    assert cache_spec((_K("k"),), _Leaf((40, 128, 32768, 8, 128)), mesh) == \
+        P(None, ("data",), "model", None, None)
+    # batch=1 long-context: seq over data+model (context parallel)
+    assert cache_spec((_K("k"),), _Leaf((24, 1, 524288, 8, 128)), mesh) == \
+        P(None, None, ("data", "model"), None, None)
+
+
+MINI = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, json
+from repro.launch.specs import build_cell, lower_cell
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cell = build_cell("qwen2_5_3b", "decode_32k", mesh)
+comp = lower_cell(cell, mesh).compile()
+ma = comp.memory_analysis()
+print(json.dumps({"ok": True, "temp": ma.temp_size_in_bytes}))
+"""
+
+
+@pytest.mark.slow
+def test_mini_dryrun_subprocess():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", MINI], capture_output=True,
+                         text=True, env=env, cwd=os.path.dirname(
+                             os.path.dirname(os.path.abspath(__file__))),
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"]

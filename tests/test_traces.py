@@ -1,0 +1,39 @@
+"""Synthetic trace generator invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.traces import SynthConfig, iter_batches, iter_windows, synth_trace
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from(["netflix", "spotify"]))
+def test_trace_invariants(seed, kind):
+    tr = synth_trace(SynthConfig(kind=kind, n_items=60, n_servers=10,
+                                 n_requests=2000, t_max=20.0, seed=seed))
+    assert tr.n_requests == 2000
+    assert (np.diff(tr.times) >= 0).all()
+    assert tr.servers.min() >= 0 and tr.servers.max() < 10
+    it = tr.items[tr.items >= 0]
+    assert it.min() >= 0 and it.max() < 60
+    sizes = tr.request_sizes()
+    assert sizes.min() >= 1 and sizes.max() <= 5
+    # set semantics: no duplicate items within a request
+    for row in tr.items[:50]:
+        v = row[row >= 0]
+        assert len(np.unique(v)) == len(v)
+
+
+def test_windows_and_batches_cover():
+    tr = synth_trace(SynthConfig(n_items=30, n_servers=5, n_requests=500,
+                                 t_max=10.0, seed=1))
+    n = sum(w.n_requests for _, w in iter_windows(tr, 2.0))
+    assert n == tr.n_requests
+    n = sum(b.n_requests for b in iter_batches(tr, 64))
+    assert n == tr.n_requests
+
+
+def test_determinism():
+    a = synth_trace(SynthConfig(seed=3, n_requests=1000, t_max=10.0))
+    b = synth_trace(SynthConfig(seed=3, n_requests=1000, t_max=10.0))
+    np.testing.assert_array_equal(a.items, b.items)
+    np.testing.assert_array_equal(a.times, b.times)
