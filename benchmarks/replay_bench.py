@@ -1,0 +1,94 @@
+"""Scalar vs batched replay throughput on the 1M-request synthetic trace.
+
+The batched engine (core/engine.py handle_batch) replaces the per-request
+Python loop with NumPy segment reductions over (request, clique) events.
+This benchmark measures both paths on the Table-II "netflix" trace with a
+static offline pair partition installed (so it times the replay core, not
+clique generation), verifies the acceptance contract along the way:
+
+* cost-for-cost equality (1e-9 rel) between the two paths on the first
+  100k requests, and
+* >= 5x batched speedup on the full trace.
+
+Env knobs:
+  REPRO_REPLAY_REQUESTS   trace length             (default 1_000_000)
+  REPRO_REPLAY_BATCH      requests per batch       (default 4096)
+  REPRO_REPLAY_SCALAR_CAP scalar path is timed on min(cap, n) requests and
+                          extrapolated (default: full n; set a cap to keep
+                          smoke runs short)
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import CostParams, ReplayEngine
+from repro.core.baselines import greedy_pair_matching
+from repro.traces import paper_trace
+
+from .common import emit, save_json
+
+
+def _run(trace, part, batch_size):
+    eng = ReplayEngine(trace.n, trace.m, CostParams())
+    eng.install_partition(part, now=0.0)
+    t0 = time.perf_counter()
+    eng.replay(trace, batch_size=batch_size)
+    return eng.costs, time.perf_counter() - t0
+
+
+def main() -> None:
+    n = int(os.environ.get("REPRO_REPLAY_REQUESTS", "1000000"))
+    bs = int(os.environ.get("REPRO_REPLAY_BATCH", "4096"))
+    scalar_cap = int(os.environ.get("REPRO_REPLAY_SCALAR_CAP", str(n)))
+
+    trace = paper_trace("netflix", n_requests=n, seed=0)
+    part = greedy_pair_matching(trace.items, trace.n, 0.2, 1.0)
+
+    # -- acceptance: cost-for-cost equality on the first 100k requests -----
+    head = trace.head(min(100_000, n))
+    c_s, _ = _run(head, part, 1)
+    c_b, _ = _run(head, part, bs)
+    eq_fields = {}
+    for f in ("transfer", "caching", "keepalive_rent"):
+        a, b = getattr(c_s, f), getattr(c_b, f)
+        assert np.isclose(a, b, rtol=1e-9, atol=1e-9), (f, a, b)
+        eq_fields[f] = a
+    for f in ("n_misses", "n_hits", "n_requests", "items_transferred"):
+        assert getattr(c_s, f) == getattr(c_b, f), f
+    print(f"# equality check on {head.n_requests} requests: OK")
+
+    # -- throughput --------------------------------------------------------
+    n_scalar = min(scalar_cap, n)
+    _, t_scalar = _run(trace.head(n_scalar), part, 1)
+    t_scalar_full = t_scalar * (n / n_scalar)
+    costs_b, t_batched = _run(trace, part, bs)
+
+    speedup = t_scalar_full / t_batched
+    rps_scalar = n_scalar / t_scalar
+    rps_batched = n / t_batched
+    emit([
+        ("replay/scalar", int(t_scalar_full / n * 1e6 * 1e3) / 1e3,
+         f"{rps_scalar:.0f} req/s"),
+        (f"replay/batched_{bs}", int(t_batched / n * 1e6 * 1e3) / 1e3,
+         f"{rps_batched:.0f} req/s"),
+        ("replay/speedup", round(speedup, 1), "x"),
+    ])
+    assert speedup >= 5.0, f"batched replay only {speedup:.1f}x faster"
+    save_json("replay_bench", {
+        "n_requests": n,
+        "batch_size": bs,
+        "scalar_seconds": t_scalar_full,
+        "scalar_measured_requests": n_scalar,
+        "batched_seconds": t_batched,
+        "speedup": speedup,
+        "requests_per_second_batched": rps_batched,
+        "equality_100k": eq_fields,
+        "total_cost": costs_b.total,
+    })
+
+
+if __name__ == "__main__":
+    main()

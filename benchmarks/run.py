@@ -20,11 +20,13 @@ def main() -> None:
         fig9_cliques_runtime,
         integration_bench,
         kernel_bench,
+        replay_bench,
         roofline_report,
         table1_cost_model,
     )
 
     suites = [
+        ("replay", replay_bench),
         ("table1", table1_cost_model),
         ("fig5", fig5_cost_comparison),
         ("fig6", fig6_sensitivity),

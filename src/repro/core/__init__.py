@@ -11,13 +11,15 @@ from .cliques import CliquePartition, generate_cliques
 from .competitive import adversarial_trace, per_request_ratio_check, replay_adversary
 from .cost import CostBreakdown, CostParams, competitive_bound, competitive_bound_corrected
 from .crm import WindowCRM, build_window_crm
-from .engine import CacheState, ReplayEngine
+from .engine import DEFAULT_BATCH_SIZE, BatchOutcome, CacheState, ReplayEngine
 
 __all__ = [
     "AKPC",
     "AKPCConfig",
     "AKPCResult",
+    "BatchOutcome",
     "CacheState",
+    "DEFAULT_BATCH_SIZE",
     "CliquePartition",
     "CostBreakdown",
     "CostParams",

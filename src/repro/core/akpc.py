@@ -35,6 +35,9 @@ class AKPCConfig:
     enable_approx_merge: bool = True # ACM module
     caching_charge: CachingCharge = "requested"
     seed_new_cliques: bool = True
+    # requests per vectorised engine batch; None = engine default, 1 = the
+    # historical per-request scalar replay (bit-compatible)
+    batch_size: int | None = None
     # accelerated hooks (Pallas kernel wrappers); None = numpy oracles
     crm_matmul: Callable | None = None
     pair_edges: Callable | None = None
@@ -103,7 +106,10 @@ class AKPC:
 
     def run(self, trace: Trace) -> AKPCResult:
         costs = self.engine.replay(
-            trace, clique_generator=self._generate, t_cg=self.cfg.t_cg
+            trace,
+            clique_generator=self._generate,
+            t_cg=self.cfg.t_cg,
+            batch_size=self.cfg.batch_size,
         )
         final = (
             self._partition.sizes()

@@ -35,9 +35,10 @@ def run_no_packing(
     trace: Trace,
     params: CostParams,
     caching_charge: CachingCharge = "requested",
+    batch_size: int | None = None,
 ) -> CostBreakdown:
     eng = ReplayEngine(trace.n, trace.m, params, caching_charge=caching_charge)
-    return eng.replay(trace, clique_generator=None)
+    return eng.replay(trace, clique_generator=None, batch_size=batch_size)
 
 
 # ---------------------------------------------------------------------------
@@ -73,6 +74,7 @@ def run_packcache2(
     t_cg: float = 50.0,
     top_frac: float = 0.1,
     caching_charge: CachingCharge = "requested",
+    batch_size: int | None = None,
 ) -> CostBreakdown:
     """Online 2-packing (PackCache, Wu et al. [2])."""
     eng = ReplayEngine(trace.n, trace.m, params, caching_charge=caching_charge)
@@ -81,7 +83,7 @@ def run_packcache2(
         del servers, now
         return greedy_pair_matching(items, trace.n, params.theta, top_frac)
 
-    return eng.replay(trace, clique_generator=gen, t_cg=t_cg)
+    return eng.replay(trace, clique_generator=gen, t_cg=t_cg, batch_size=batch_size)
 
 
 def run_dp_greedy(
@@ -89,6 +91,7 @@ def run_dp_greedy(
     params: CostParams,
     top_frac: float = 0.1,
     caching_charge: CachingCharge = "requested",
+    batch_size: int | None = None,
 ) -> CostBreakdown:
     """Offline 2-packing (DP_Greedy, Huang et al. [4]).
 
@@ -98,7 +101,7 @@ def run_dp_greedy(
     part = greedy_pair_matching(trace.items, trace.n, params.theta, top_frac)
     eng = ReplayEngine(trace.n, trace.m, params, caching_charge=caching_charge)
     eng.install_partition(part, now=0.0)
-    return eng.replay(trace, clique_generator=None)
+    return eng.replay(trace, clique_generator=None, batch_size=batch_size)
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,48 @@ Cost accounting (Alg. 5 made consistent — see cost.py):
   competitive proof and Alg. 5 line 5 charge rent for requested items only),
   or |c| under "stored" accounting (rent for what is actually stored).
 * afterwards  ->  E[c, j] = t + dt
+
+Batched state-update semantics (the vectorised hot path)
+--------------------------------------------------------
+
+``handle_batch`` replays a whole time-slice of requests with NumPy segment
+reductions instead of per-request Python.  Correctness rests on two facts
+about the scalar recurrence, both relying on request times being
+non-decreasing (guaranteed by ``Trace``):
+
+1. **Anchor resolution order within a batch.**  Every access touches its
+   clique with expiry ``t + dt`` and ``dt`` is constant, so ``t + dt`` is the
+   row maximum the moment it is written (every earlier expiry was set from an
+   earlier time).  Hence after the first access of a clique inside a batch,
+   the anchor is simply *the server of the clique's most recent access* —
+   the per-event anchor lookup collapses to a lag over events grouped by
+   clique (first event of a group checks the pre-batch ``anchor`` array,
+   later events compare against the previous event's server).
+
+2. **Segment-max expiry.**  For the same reason, the post-batch expiry of a
+   (clique, server) pair is ``t_last + dt`` of its *last* access in the
+   batch, and the pre-access expiry seen by any event is ``t_prev + dt`` of
+   the previous access of the same pair (or the pre-batch ``E[c, j]`` for the
+   pair's first event).  Both are lags/segment-ends over events sorted by
+   (clique, server) — no sequential dict updates needed.
+
+Alive-mask, miss transfer costs, Alg.-6 ratcheting/keepalive rent and the
+Alg.-5 caching charge are then straight elementwise array math over the
+(request, clique) "events" of the batch (deduplicated with multiplicity
+|D_i ∩ c| via one ``np.unique`` over packed keys).
+
+**Scalar-wrapper compatibility guarantee:** ``handle_request`` is a thin
+wrapper over ``handle_batch`` with a batch of one, and a batch of one
+performs exactly the scalar recurrence's float operations in the scalar
+order — so per-request replay (``replay(..., batch_size=1)``) is
+bit-compatible with the historical per-request Python loop, and larger
+batches agree cost-for-cost up to float summation order (see
+tests/test_engine_batched.py).
+
+The per-batch item->clique membership lookup is routed through
+``repro.kernels.packed_lookup.clique_lookup``: the Pallas scalar-prefetch
+gather on TPU backends, a NumPy fancy-index everywhere else (including when
+JAX is not importable at all).
 """
 from __future__ import annotations
 
@@ -30,6 +72,14 @@ from .cliques import CliquePartition
 from .cost import CostBreakdown, CostParams
 
 CachingCharge = Literal["requested", "stored"]
+
+#: default time-slice size for batched replay (requests per handle_batch)
+DEFAULT_BATCH_SIZE = 4096
+
+
+def _numpy_clique_lookup(clique_of: np.ndarray, items: np.ndarray) -> np.ndarray:
+    """Fallback membership gather used when the kernels package is absent."""
+    return np.asarray(clique_of)[np.asarray(items)]
 
 
 @dataclasses.dataclass
@@ -96,8 +146,34 @@ class RequestOutcome:
     n_missed_items: int = 0       # |D_i| items whose clique was not cached (S)
 
 
+@dataclasses.dataclass
+class BatchOutcome:
+    """Per-(request, clique) event arrays of one handle_batch call.
+
+    Events are sorted by (request index, clique id) — the same order the
+    scalar loop visits them.  All arrays share the event axis.
+    """
+
+    req: np.ndarray            # (e,) int64 request index within the batch
+    cliques: np.ndarray        # (e,) int64 clique id
+    n_req: np.ndarray          # (e,) int64 |D_i ∩ c| multiplicity
+    miss: np.ndarray           # (e,) bool
+    transfer: np.ndarray       # (e,) float64 (0 for hits)
+    caching: np.ndarray        # (e,) float64 Alg.-5 caching charge
+
+    @property
+    def n_events(self) -> int:
+        return int(self.req.shape[0])
+
+
 class ReplayEngine:
-    """Replays a request trace against an evolving clique partition."""
+    """Replays a request trace against an evolving clique partition.
+
+    The replay core is batched: ``handle_batch`` vectorises Alg. 5/6 over a
+    time-slice of requests (see module docstring for the exact semantics);
+    ``handle_request`` wraps it for single requests and ``replay`` slices the
+    trace into batches that never straddle a T_CG boundary.
+    """
 
     def __init__(
         self,
@@ -106,13 +182,21 @@ class ReplayEngine:
         params: CostParams,
         caching_charge: CachingCharge = "requested",
         seed_new_cliques: bool = True,
+        lookup: Callable[[np.ndarray, np.ndarray], np.ndarray] | None = None,
     ):
         self.n = n
         self.m = m
         self.params = params
         self.caching_charge = caching_charge
         self.seed_new_cliques = seed_new_cliques
+        if lookup is None:
+            try:
+                from ..kernels.packed_lookup import clique_lookup as lookup
+            except Exception:           # kernels layer unavailable: pure numpy
+                lookup = _numpy_clique_lookup
+        self._lookup = lookup
         self.state = CacheState.fresh(CliquePartition.singletons(n), m)
+        self._sizes = self.state.partition.sizes().astype(np.int64)
         self.costs = CostBreakdown()
 
     # ------------------------------------------------------------------
@@ -175,51 +259,174 @@ class ReplayEngine:
                 E[i, j] = now + self.params.dt
                 anchor[i] = j
         self.state = CacheState(partition=partition, E=E, anchor=anchor, m=self.m)
+        self._sizes = partition.sizes().astype(np.int64)
 
     # ------------------------------------------------------------------
-    # Alg. 5 — request handling
+    # Alg. 5 — request handling, one batch at a time
+    # ------------------------------------------------------------------
+    def handle_batch(
+        self,
+        items: np.ndarray,
+        servers: np.ndarray,
+        times: np.ndarray,
+    ) -> BatchOutcome:
+        """Vectorised Alg. 5/6 over a batch of requests.
+
+        ``items``  (B, d_max) int, -1 padded;  ``servers`` (B,) int;
+        ``times``  (B,) float, non-decreasing and >= every earlier request.
+        Rows whose items are all -1 are counted as (empty) requests but
+        produce no events.
+        """
+        p = self.params
+        st = self.state
+        items = np.atleast_2d(np.asarray(items))
+        B = items.shape[0]
+        servers = np.asarray(servers, dtype=np.int64).reshape(B)
+        times = np.asarray(times, dtype=np.float64).reshape(B)
+        dt = p.dt
+
+        self.costs.n_requests += B
+        valid = items >= 0
+        n_valid = int(valid.sum())
+        self.costs.n_item_requests += n_valid
+        if n_valid == 0:
+            z = np.zeros(0)
+            return BatchOutcome(
+                req=z.astype(np.int64), cliques=z.astype(np.int64),
+                n_req=z.astype(np.int64), miss=z.astype(bool),
+                transfer=z, caching=z,
+            )
+
+        # --- items -> cliques (Pallas gather on TPU, numpy otherwise) -----
+        k = st.partition.k
+        flat_r = np.broadcast_to(np.arange(B)[:, None], items.shape)[valid]
+        cl = np.asarray(
+            self._lookup(st.partition.clique_of, items[valid]), dtype=np.int64
+        )
+
+        # --- dedupe (request, clique) pairs, keep |D_i ∩ c| counts --------
+        # unique over packed keys sorts by (request, clique) — the order the
+        # scalar loop visits cliques
+        ev_key, n_req = np.unique(flat_r * k + cl, return_counts=True)
+        ev_r = ev_key // k
+        ev_c = ev_key % k
+        ev_j = servers[ev_r]
+        ev_t = times[ev_r]
+        ne = ev_key.shape[0]
+
+        # --- within-batch lags (module docstring, facts 1 and 2) ----------
+        # per clique: previous event's server == the anchor seen by this one
+        o_c = np.argsort(ev_c, kind="stable")          # (clique, time) order
+        cs = ev_c[o_c]
+        first_c_s = np.ones(ne, dtype=bool)
+        first_c_s[1:] = cs[1:] != cs[:-1]
+        prev_j_s = np.full(ne, -1, dtype=np.int64)
+        prev_j_s[1:] = ev_j[o_c][:-1]
+        prev_j_s[first_c_s] = -1
+        first_c = np.empty(ne, dtype=bool)
+        first_c[o_c] = first_c_s
+        prev_j = np.empty(ne, dtype=np.int64)
+        prev_j[o_c] = prev_j_s
+
+        # per (clique, server): previous event's time -> pre-access expiry
+        key_cj = ev_c * self.m + ev_j
+        o_cj = np.argsort(key_cj, kind="stable")
+        kcs = key_cj[o_cj]
+        first_cj_s = np.ones(ne, dtype=bool)
+        first_cj_s[1:] = kcs[1:] != kcs[:-1]
+        prev_t_s = np.zeros(ne, dtype=np.float64)
+        prev_t_s[1:] = ev_t[o_cj][:-1]
+        prev_t_s[first_cj_s] = 0.0
+        first_cj = np.empty(ne, dtype=bool)
+        first_cj[o_cj] = first_cj_s
+        prev_cj_t = np.empty(ne, dtype=np.float64)
+        prev_cj_t[o_cj] = prev_t_s
+
+        # --- aliveness + effective expiry ---------------------------------
+        E_before = np.where(first_cj, st.E[ev_c, ev_j], prev_cj_t + dt)
+        anchor_alive = np.where(
+            first_c,
+            (st.anchor[ev_c] == ev_j) & (E_before > 0.0),
+            prev_j == ev_j,
+        )
+        fresh = E_before > ev_t
+        alive = fresh | anchor_alive
+        miss = ~alive
+
+        # Alg. 6 ratcheting of lapsed anchor copies (+ lazily accounted rent)
+        lapsed = alive & ~fresh
+        steps = np.ceil((ev_t - E_before) / dt)
+        r = E_before + steps * dt
+        r = np.where(r <= ev_t, r + dt, r)
+        e_eff = np.where(fresh, E_before, np.where(lapsed, r, ev_t))
+        rent = np.where(
+            lapsed, self._sizes[ev_c] * p.mu * (e_eff - E_before), 0.0
+        )
+
+        # --- costs --------------------------------------------------------
+        size = self._sizes[ev_c]
+        if p.cost_mode == "paper_literal":
+            packed_cost = p.alpha * p.mu * size
+        else:
+            packed_cost = (1.0 + (size - 1) * p.alpha) * p.lam
+        tc = np.where(miss, np.where(size > 1, packed_cost, size * p.lam), 0.0)
+
+        n_charged = n_req if self.caching_charge == "requested" else size
+        dur = np.maximum((ev_t + dt) - np.maximum(e_eff, ev_t), 0.0)
+        ccost = n_charged * p.mu * dur
+
+        self.costs.transfer += float(tc.sum())
+        self.costs.caching += float(ccost.sum())
+        self.costs.keepalive_rent += float(rent.sum())
+        nm = int(miss.sum())
+        self.costs.n_misses += nm
+        self.costs.n_hits += ne - nm
+        self.costs.items_transferred += int(size[miss].sum())
+
+        # --- state update: segment-last expiry + last-access anchor -------
+        last_cj_s = np.ones(ne, dtype=bool)
+        last_cj_s[:-1] = kcs[1:] != kcs[:-1]
+        li = o_cj[last_cj_s]
+        st.E[ev_c[li], ev_j[li]] = ev_t[li] + dt
+
+        last_c_s = np.ones(ne, dtype=bool)
+        last_c_s[:-1] = cs[1:] != cs[:-1]
+        lc = o_c[last_c_s]
+        # guard (matters only for out-of-order manual calls): keep the old
+        # anchor when its expiry still beats the batch's last touch
+        a_cur = st.anchor[ev_c[lc]].astype(np.int64)
+        a_E = st.E[ev_c[lc], np.maximum(a_cur, 0)]
+        upd = (a_cur < 0) | (ev_t[lc] + dt >= a_E)
+        st.anchor[ev_c[lc[upd]]] = ev_j[lc[upd]]
+
+        return BatchOutcome(
+            req=ev_r, cliques=ev_c, n_req=n_req, miss=miss,
+            transfer=tc, caching=ccost,
+        )
+
+    # ------------------------------------------------------------------
+    # thin single-request wrapper (bit-compatible with the old scalar loop)
     # ------------------------------------------------------------------
     def handle_request(
         self, items: Iterable[int], server: int, t: float
     ) -> RequestOutcome:
-        p = self.params
-        st = self.state
-        items = [int(d) for d in items if d >= 0]
-        cids: dict[int, int] = {}                 # clique id -> |D_i ∩ c|
-        for d in items:
-            c = int(st.partition.clique_of[d])
-            cids[c] = cids.get(c, 0) + 1
-        out = RequestOutcome(cliques=sorted(cids), misses=[], transfer=0.0, caching=0.0)
-        for c, n_req in sorted(cids.items()):
-            size = len(st.partition.cliques[c])
-            alive = st.is_alive(c, server, t)
-            if not alive:
-                ct = p.transfer_cost(size, packed=size > 1)
-                out.transfer += ct
-                out.misses.append(c)
-                out.n_missed_items += n_req
-                self.costs.n_misses += 1
-                self.costs.items_transferred += size
-                e_eff = t
-            else:
-                self.costs.n_hits += 1
-                e_eff = st.ratcheted_expiry(c, server, t, p.dt)
-                if st.E[c, server] <= t:          # lazily account Alg.6 rent
-                    self.costs.keepalive_rent += p.caching_cost(
-                        size, e_eff - st.E[c, server]
-                    )
-            n_charged = n_req if self.caching_charge == "requested" else size
-            new_e = t + p.dt
-            ccost = p.caching_cost(n_charged, max(0.0, new_e - max(e_eff, t)))
-            out.caching += ccost
-            if not alive:
-                out.caching_miss += ccost
-            st.touch(c, server, new_e)
-        self.costs.transfer += out.transfer
-        self.costs.caching += out.caching
-        self.costs.n_requests += 1
-        self.costs.n_item_requests += len(items)
-        return out
+        row = np.asarray([int(d) for d in items], dtype=np.int64)
+        if row.size == 0:
+            row = np.full(1, -1, dtype=np.int64)
+        out = self.handle_batch(
+            row.reshape(1, -1),
+            np.asarray([server], dtype=np.int64),
+            np.asarray([t], dtype=np.float64),
+        )
+        miss = out.miss
+        return RequestOutcome(
+            cliques=[int(c) for c in out.cliques],
+            misses=[int(c) for c in out.cliques[miss]],
+            transfer=float(out.transfer.sum()),
+            caching=float(out.caching.sum()),
+            caching_miss=float(out.caching[miss].sum()),
+            n_missed_items=int(out.n_req[miss].sum()),
+        )
 
     # ------------------------------------------------------------------
     def replay(
@@ -229,29 +436,49 @@ class ReplayEngine:
         | None = None,
         t_cg: float | None = None,
         progress: Callable[[int], None] | None = None,
+        batch_size: int | None = None,
     ) -> CostBreakdown:
-        """Replay a full trace.
+        """Replay a full trace in T_CG-boundary-aligned batches.
 
         ``clique_generator(window_items, window_servers, now)`` is invoked at
         every T_CG boundary with the PREVIOUS window's requests (Alg. 1
         Event 1, Fig. 3 timeline) and returns the new partition (or None to
-        keep the current one).
+        keep the current one).  Batches never straddle a boundary, so
+        regeneration happens at exactly the same request index as the scalar
+        per-request loop.  ``batch_size=1`` recovers the historical scalar
+        replay bit-for-bit; the default vectorises ``DEFAULT_BATCH_SIZE``
+        requests per state update.
         """
+        bs = DEFAULT_BATCH_SIZE if batch_size is None else max(1, int(batch_size))
         times, servers, items = trace.times, trace.servers, trace.items
-        next_cg = times[0] + t_cg if (t_cg is not None) else np.inf
+        R = int(times.shape[0])
+        if R == 0:
+            return self.costs
+        use_cg = clique_generator is not None and t_cg is not None
+        next_cg = float(times[0]) + t_cg if t_cg is not None else np.inf
         win_start = 0
-        for i in range(times.shape[0]):
-            t = float(times[i])
-            if clique_generator is not None and t >= next_cg:
-                w_it = items[win_start:i]
-                w_sv = servers[win_start:i]
-                part = clique_generator(w_it, w_sv, t)
-                if part is not None:
-                    self.install_partition(part, t, w_it, w_sv)
-                win_start = i
-                while next_cg <= t:
-                    next_cg += t_cg
-            self.handle_request(items[i], int(servers[i]), t)
-            if progress is not None and (i & 0xFFFF) == 0:
-                progress(i)
+        pos = 0
+        next_prog = 0                 # throttle progress to every 64Ki reqs
+        while pos < R:
+            cut = R
+            if use_cg:
+                cut = int(np.searchsorted(times, next_cg, side="left"))
+                if cut <= pos:
+                    # request at ``pos`` crosses the boundary: Event 1 first
+                    t = float(times[pos])
+                    w_it = items[win_start:pos]
+                    w_sv = servers[win_start:pos]
+                    part = clique_generator(w_it, w_sv, t)
+                    if part is not None:
+                        self.install_partition(part, t, w_it, w_sv)
+                    win_start = pos
+                    while next_cg <= t:
+                        next_cg += t_cg
+                    continue
+            stop = min(pos + bs, cut)
+            self.handle_batch(items[pos:stop], servers[pos:stop], times[pos:stop])
+            pos = stop
+            if progress is not None and pos >= next_prog:
+                progress(pos)
+                next_prog = (pos | 0xFFFF) + 1
         return self.costs

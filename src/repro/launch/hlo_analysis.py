@@ -232,10 +232,20 @@ def analyze_hlo(text: str, n_devices: int) -> HloStats:
                 )
                 cm = _CONTRACT_RE.search(op.rest)
                 contract = 1
-                # first operand name -> its shape -> contracting dim sizes
-                first = re.match(r"\s*%([\w\.\-]+)", op.rest)
-                if cm and first and first.group(1) in sym:
-                    lhs_dims = _SHAPE_RE.findall(sym[first.group(1)])
+                # lhs shape: inline operand type (modern HLO dumps annotate
+                # `dot(f32[64,32]{1,0} %lhs, ...)`) or symbol-table lookup
+                first = re.match(
+                    r"\s*(?:(?P<typ>[a-z0-9]+\[[0-9,]*\])\S*\s+)?%(?P<name>[\w\.\-]+)",
+                    op.rest,
+                )
+                lhs_txt = None
+                if first:
+                    if first.group("typ"):
+                        lhs_txt = first.group("typ")
+                    elif first.group("name") in sym:
+                        lhs_txt = sym[first.group("name")]
+                if cm and lhs_txt:
+                    lhs_dims = _SHAPE_RE.findall(lhs_txt)
                     if lhs_dims:
                         dims = [int(x) for x in lhs_dims[0][1].split(",") if x]
                         for ci in cm.group(1).split(","):

@@ -5,23 +5,33 @@ from __future__ import annotations
 import jax
 
 
+def _auto_axis_kwargs(n_axes: int) -> dict:
+    """``axis_types=(AxisType.Auto, ...)`` on JAX versions that have it.
+
+    ``jax.sharding.AxisType`` only exists from jax 0.5; older releases treat
+    every axis as auto already, so omitting the kwarg is equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
     Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_auto_axis_kwargs(len(axes)))
 
 
 def make_test_mesh(n_devices: int | None = None):
     """Small mesh for CPU tests: (data=2, model=n/2)."""
     n = n_devices or len(jax.devices())
-    auto = (jax.sharding.AxisType.Auto,) * 2
+    kw = _auto_axis_kwargs(2)
     if n == 1:
-        return jax.make_mesh((1, 1), ("data", "model"), axis_types=auto)
-    return jax.make_mesh((2, n // 2), ("data", "model"), axis_types=auto)
+        return jax.make_mesh((1, 1), ("data", "model"), **kw)
+    return jax.make_mesh((2, n // 2), ("data", "model"), **kw)
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -57,8 +57,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, json
 from repro.launch.specs import build_cell, lower_cell
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh()
 cell = build_cell("qwen2_5_3b", "decode_32k", mesh)
 comp = lower_cell(cell, mesh).compile()
 ma = comp.memory_analysis()
