@@ -3,7 +3,8 @@
 Every figure benchmark replays the SAME seeded synthetic traces (paper
 §V.A setup, see repro.traces.synthetic.paper_trace and EXPERIMENTS.md for
 the deviation analysis vs the proprietary Kaggle dumps) through the method
-set of Fig. 5:
+set of Fig. 5, resolved from the unified policy registry
+(``repro.core.get_policy`` / ``run_policy``):
 
   no_packing / dp_greedy (offline 2-pack) / packcache (online 2-pack) /
   akpc_base (w/o CS, w/o ACM) / akpc (proposed) / opt (lower bound)
@@ -19,16 +20,7 @@ import time
 
 import numpy as np
 
-from repro.core import (
-    AKPCConfig,
-    CostParams,
-    opt_lower_bound,
-    run_akpc,
-    run_akpc_variant,
-    run_dp_greedy,
-    run_no_packing,
-    run_packcache2,
-)
+from repro.core import CostParams, get_policy, opt_lower_bound, run_policy
 from repro.traces import paper_trace
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "experiments/results")
@@ -50,38 +42,42 @@ def t_cg_for(trace, params: CostParams | None = None) -> float:
     return float(min(max(0.3 * dt, span / 50.0), max(span / 4.0, 1e-6)))
 
 
+def method_policies(params: CostParams, t_cg: float, top_frac: float) -> dict:
+    """Fig.-5 method set as (registry name -> policy kwargs)."""
+    return {
+        "no_packing": {},
+        "dp_greedy": dict(top_frac=top_frac),
+        "packcache": dict(t_cg=t_cg, top_frac=top_frac),
+        "akpc_base": dict(t_cg=t_cg, top_frac=top_frac),
+        "akpc": dict(t_cg=t_cg, top_frac=top_frac),
+    }
+
+
 def run_methods(trace, params: CostParams, methods=None, top_frac: float = 1.0):
     """Returns {method: {total, transfer, caching, seconds}}."""
     t_cg = t_cg_for(trace, params)
     out = {}
-
-    def record(name, fn):
+    for name, kw in method_policies(params, t_cg, top_frac).items():
         if methods is not None and name not in methods:
-            return
-        t0 = time.perf_counter()
-        res = fn()
-        dt = time.perf_counter() - t0
-        costs = res.costs if hasattr(res, "costs") else res
+            continue
+        res = run_policy(get_policy(name, params=params, **kw), trace)
         out[name] = {
+            "total": res.total,
+            "transfer": res.costs.transfer,
+            "caching": res.costs.caching,
+            "seconds": round(res.wall_seconds, 2),
+        }
+        if (res.clique_sizes > 1).any():
+            out[name]["clique_sizes"] = np.bincount(res.clique_sizes).tolist()
+    if methods is None or "opt" in methods:
+        t0 = time.perf_counter()
+        costs = opt_lower_bound(trace, params)
+        out["opt"] = {
             "total": costs.total,
             "transfer": costs.transfer,
             "caching": costs.caching,
-            "seconds": round(dt, 2),
+            "seconds": round(time.perf_counter() - t0, 2),
         }
-        if hasattr(res, "clique_sizes"):
-            sizes = res.clique_sizes
-            out[name]["clique_sizes"] = np.bincount(sizes).tolist()
-
-    record("no_packing", lambda: run_no_packing(trace, params))
-    record("dp_greedy", lambda: run_dp_greedy(trace, params, top_frac=top_frac))
-    record("packcache", lambda: run_packcache2(trace, params, t_cg=t_cg,
-                                               top_frac=top_frac))
-    record("akpc_base", lambda: run_akpc_variant(
-        trace, params, split=False, approx_merge=False, t_cg=t_cg,
-        top_frac=top_frac))
-    record("akpc", lambda: run_akpc(trace, AKPCConfig(
-        params=params, t_cg=t_cg, top_frac=top_frac)))
-    record("opt", lambda: opt_lower_bound(trace, params))
     return out
 
 

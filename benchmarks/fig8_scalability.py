@@ -5,7 +5,7 @@ larger windows expose more co-access to the clique miner)."""
 from __future__ import annotations
 
 from .common import N_SWEEP, emit, relative_to_opt, run_methods, save_json, t_cg_for
-from repro.core import AKPCConfig, CostParams, opt_lower_bound, run_akpc
+from repro.core import CostParams, get_policy, opt_lower_bound, run_policy
 from repro.traces import SynthConfig, synth_trace
 
 SERVERS = [60, 150, 300, 600, 1200]
@@ -49,7 +49,8 @@ def main() -> list[tuple]:
         # batch size -> clique-gen window of b requests on average
         span = float(tr.times[-1] - tr.times[0])
         t_cg = span * b / tr.n_requests
-        res = run_akpc(tr, AKPCConfig(params=params, t_cg=t_cg, top_frac=1.0))
+        res = run_policy(
+            get_policy("akpc", params=params, t_cg=t_cg, top_frac=1.0), tr)
         opt = opt_lower_bound(tr, params)
         rel = res.total / opt.total
         payload["batch"][b] = rel

@@ -7,7 +7,7 @@ import time
 import numpy as np
 
 from .common import N_SWEEP, emit, get_trace, save_json, t_cg_for
-from repro.core import AKPCConfig, CostParams, run_akpc, run_akpc_variant
+from repro.core import CostParams, get_policy, run_policy
 from repro.core.crm import build_window_crm
 from repro.core.cliques import generate_cliques
 from repro.traces import SynthConfig, synth_trace
@@ -22,13 +22,9 @@ def main() -> list[tuple]:
         tr = get_trace(kind, N_SWEEP)
         t_cg = t_cg_for(tr, params)
         variants = {
-            "akpc": run_akpc(tr, AKPCConfig(params=params, t_cg=t_cg, top_frac=1.0)),
-            "akpc_no_acm": run_akpc_variant(tr, params, split=True,
-                                            approx_merge=False, t_cg=t_cg,
-                                            top_frac=1.0),
-            "akpc_base": run_akpc_variant(tr, params, split=False,
-                                          approx_merge=False, t_cg=t_cg,
-                                          top_frac=1.0),
+            name: run_policy(
+                get_policy(name, params=params, t_cg=t_cg, top_frac=1.0), tr)
+            for name in ("akpc", "akpc_no_acm", "akpc_base")
         }
         for name, res in variants.items():
             sizes = np.concatenate(res.size_history) if res.size_history else np.array([])

@@ -16,9 +16,13 @@ Env knobs:
   REPRO_REPLAY_SCALAR_CAP scalar path is timed on min(cap, n) requests and
                           extrapolated (default: full n; set a cap to keep
                           smoke runs short)
+
+``--smoke`` (CI): 60k-request trace, capped scalar timing, equality check
+only (no speedup floor — CI runners are too noisy to gate on wall time).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import time
 
@@ -40,9 +44,19 @@ def _run(trace, part, batch_size):
 
 
 def main() -> None:
-    n = int(os.environ.get("REPRO_REPLAY_REQUESTS", "1000000"))
-    bs = int(os.environ.get("REPRO_REPLAY_BATCH", "4096"))
-    scalar_cap = int(os.environ.get("REPRO_REPLAY_SCALAR_CAP", str(n)))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI run: cost-equality check only")
+    args = ap.parse_args()
+
+    if args.smoke:
+        n = int(os.environ.get("REPRO_REPLAY_REQUESTS", "60000"))
+        bs = int(os.environ.get("REPRO_REPLAY_BATCH", "4096"))
+        scalar_cap = int(os.environ.get("REPRO_REPLAY_SCALAR_CAP", "20000"))
+    else:
+        n = int(os.environ.get("REPRO_REPLAY_REQUESTS", "1000000"))
+        bs = int(os.environ.get("REPRO_REPLAY_BATCH", "4096"))
+        scalar_cap = int(os.environ.get("REPRO_REPLAY_SCALAR_CAP", str(n)))
 
     trace = paper_trace("netflix", n_requests=n, seed=0)
     part = greedy_pair_matching(trace.items, trace.n, 0.2, 1.0)
@@ -76,7 +90,8 @@ def main() -> None:
          f"{rps_batched:.0f} req/s"),
         ("replay/speedup", round(speedup, 1), "x"),
     ])
-    assert speedup >= 5.0, f"batched replay only {speedup:.1f}x faster"
+    if not args.smoke:
+        assert speedup >= 5.0, f"batched replay only {speedup:.1f}x faster"
     save_json("replay_bench", {
         "n_requests": n,
         "batch_size": bs,

@@ -1,27 +1,60 @@
 """Full paper-style CDN simulation: both traces, all methods, hyper-param
-sensitivity mini-sweep — a compact reproduction of Figs. 5-7.
+sensitivity mini-sweep — a compact reproduction of Figs. 5-7 on the unified
+policy registry — plus a live-operations vignette: mid-stream checkpointing
+of an online AKPC session (snapshot -> restore -> identical resume).
 
     PYTHONPATH=src python examples/cdn_simulation.py
 """
-from repro.core import AKPCConfig, CostParams, opt_lower_bound, run_akpc, \
-    run_no_packing, run_packcache2
+import numpy as np
+
+from repro.core import CacheSession, CostParams, get_policy, opt_lower_bound, \
+    run_policy
 from repro.traces import paper_trace
 
 
-def main():
+def sweep():
     for kind in ("netflix", "spotify"):
         tr = paper_trace(kind, n_requests=40_000)
         print(f"\n=== {kind} ===")
         for alpha in (0.6, 0.8, 1.0):
             params = CostParams(alpha=alpha)
             t_cg = 0.3 * params.dt
-            akpc = run_akpc(tr, AKPCConfig(params=params, t_cg=t_cg,
-                                           top_frac=1.0)).costs.total
-            pc = run_packcache2(tr, params, t_cg=t_cg, top_frac=1.0).total
-            nop = run_no_packing(tr, params).total
+            kw = dict(params=params, t_cg=t_cg, top_frac=1.0)
+            akpc = run_policy(get_policy("akpc", **kw), tr).total
+            pc = run_policy(get_policy("packcache", **kw), tr).total
+            nop = run_policy(get_policy("no_packing", params=params), tr).total
             opt = opt_lower_bound(tr, params).total
             print(f"alpha={alpha}: AKPC {akpc/opt:.2f}x  PackCache "
                   f"{pc/opt:.2f}x  NoPacking {nop/opt:.2f}x  (vs OPT=1)")
+
+
+def live_checkpoint_vignette():
+    """A CDN operator checkpoints the live cache state mid-stream and fails
+    over to a standby that resumes bit-identically."""
+    params = CostParams()
+    tr = paper_trace("netflix", n_requests=20_000)
+    t_cg = 0.3 * params.dt
+    mk = lambda: CacheSession(
+        get_policy("akpc", params=params, t_cg=t_cg, top_frac=1.0), tr.n, tr.m)
+
+    primary = mk()
+    half = tr.n_requests // 2
+    primary.feed(tr.items[:half], tr.servers[:half], tr.times[:half])
+    snap = primary.snapshot()                  # -> repro.checkpoint-able pytree
+    print(f"\ncheckpointed at t={primary.now:.2f}: "
+          f"{primary.costs.n_requests} requests, total {primary.costs.total:.0f}")
+
+    standby = mk().restore(snap)               # failover
+    for sess in (primary, standby):
+        sess.feed(tr.items[half:], tr.servers[half:], tr.times[half:])
+    assert primary.costs.as_dict() == standby.costs.as_dict()
+    assert np.array_equal(primary.engine.state.E, standby.engine.state.E)
+    print(f"standby resumed bit-identically: total {standby.costs.total:.0f} ✓")
+
+
+def main():
+    sweep()
+    live_checkpoint_vignette()
 
 
 if __name__ == "__main__":

@@ -1,12 +1,15 @@
-"""Quickstart: AKPC vs every baseline on a synthetic Netflix-like trace.
+"""Quickstart: AKPC vs every baseline on a synthetic Netflix-like trace,
+through the unified policy registry, plus the same AKPC run driven ONLINE
+through the streaming CacheSession (mid-stream costs, no full trace needed).
 
     PYTHONPATH=src python examples/quickstart.py [--requests 50000]
 """
 import argparse
 
+import numpy as np
+
 from repro.core import (
-    AKPCConfig, CostParams, opt_lower_bound, run_akpc, run_akpc_variant,
-    run_dp_greedy, run_no_packing, run_packcache2,
+    CacheSession, CostParams, get_policy, opt_lower_bound, run_policy,
 )
 from repro.traces import paper_trace
 
@@ -23,18 +26,18 @@ def main():
           f"{tr.n} items, {tr.m} servers")
 
     t_cg = 0.3 * params.dt
+    runs = [
+        ("No Packing", "no_packing", {}),
+        ("DP_Greedy (offline 2-pack)", "dp_greedy", dict(top_frac=1.0)),
+        ("PackCache (online 2-pack)", "packcache", dict(t_cg=t_cg, top_frac=1.0)),
+        ("AKPC w/o CS, w/o ACM", "akpc_base", dict(t_cg=t_cg, top_frac=1.0)),
+        ("AKPC (proposed)", "akpc", dict(t_cg=t_cg, top_frac=1.0)),
+    ]
     rows = {
-        "No Packing": run_no_packing(tr, params),
-        "DP_Greedy (offline 2-pack)": run_dp_greedy(tr, params, top_frac=1.0),
-        "PackCache (online 2-pack)": run_packcache2(tr, params, t_cg=t_cg,
-                                                    top_frac=1.0),
-        "AKPC w/o CS, w/o ACM": run_akpc_variant(
-            tr, params, split=False, approx_merge=False, t_cg=t_cg,
-            top_frac=1.0).costs,
-        "AKPC (proposed)": run_akpc(tr, AKPCConfig(
-            params=params, t_cg=t_cg, top_frac=1.0)).costs,
-        "OPT (lower bound)": opt_lower_bound(tr, params),
+        label: run_policy(get_policy(name, params=params, **kw), tr).costs
+        for label, name, kw in runs
     }
+    rows["OPT (lower bound)"] = opt_lower_bound(tr, params)
     opt = rows["OPT (lower bound)"].total
     print(f"\n{'method':<28s} {'C_T':>10s} {'C_P':>10s} {'total':>10s} {'vs OPT':>7s}")
     for name, c in rows.items():
@@ -44,6 +47,20 @@ def main():
     pc = rows["PackCache (online 2-pack)"].total
     print(f"\nAKPC saves {100 * (1 - akpc / pc):.1f}% vs the best prior "
           f"online method (PackCache).")
+
+    # -- the same AKPC, but ONLINE: stream chunks, read costs mid-flight ----
+    sess = CacheSession(
+        get_policy("akpc", params=params, t_cg=t_cg, top_frac=1.0), tr.n, tr.m)
+    print("\nstreaming the trace through CacheSession (chunks of 1000):")
+    quarter = max(1, tr.n_requests // 4)
+    for s in range(0, tr.n_requests, 1000):
+        costs = sess.feed(tr.items[s:s + 1000], tr.servers[s:s + 1000],
+                          tr.times[s:s + 1000])
+        if (s // 1000) % (quarter // 1000 + 1) == 0:
+            print(f"  t={sess.now:8.2f}  {costs.n_requests:>7d} requests  "
+                  f"running total {costs.total:>10.0f}")
+    assert np.isclose(sess.costs.total, akpc, rtol=1e-9), "stream != offline"
+    print(f"  final streaming total {sess.costs.total:.0f} == offline AKPC ✓")
 
 
 if __name__ == "__main__":

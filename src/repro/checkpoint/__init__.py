@@ -1,6 +1,7 @@
 from .checkpoint import (
     CheckpointManager,
     latest_step,
+    load_checkpoint_tree,
     restore_checkpoint,
     save_checkpoint,
 )
@@ -8,6 +9,7 @@ from .checkpoint import (
 __all__ = [
     "CheckpointManager",
     "latest_step",
+    "load_checkpoint_tree",
     "restore_checkpoint",
     "save_checkpoint",
 ]

@@ -89,6 +89,25 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def load_checkpoint_tree(directory: str, step: int) -> tuple[dict, dict]:
+    """Read a checkpoint back as a nested dict of numpy arrays (no ``like``
+    tree needed — only for checkpoints whose tree is dicts all the way
+    down, e.g. CacheSession snapshots).  Returns (tree, meta)."""
+    step_dir = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(step_dir, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    z = np.load(os.path.join(step_dir, "arrays.npz"))
+    dtype_of = dict(zip(manifest["paths"], manifest["dtypes"]))
+    out: dict = {}
+    for path in manifest["paths"]:
+        node = out
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = _decode(z[path], dtype_of[path])
+    return out, manifest["meta"]
+
+
 def restore_checkpoint(directory: str, step: int, like, shardings=None):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs).  ``shardings``: optional matching pytree of

@@ -1,5 +1,14 @@
-"""AKPC core: the paper's contribution (Algorithms 1-6, Theorems 1-2)."""
-from .akpc import AKPC, AKPCConfig, AKPCResult, run_akpc, run_akpc_variant
+"""AKPC core: the paper's contribution (Algorithms 1-6, Theorems 1-2).
+
+Public surface (PR 2 API redesign):
+
+* policy layer — ``CachePolicy`` protocol, ``get_policy``/``list_policies``
+  registry, unified ``RunResult``, offline ``run_policy`` driver;
+* streaming  — ``CacheSession`` (online replay, mid-stream costs, snapshots);
+* legacy shims — ``run_akpc`` / ``run_packcache2`` / ``run_dp_greedy`` /
+  ``run_no_packing`` (thin wrappers over the registry, batch API).
+"""
+from .akpc import AKPCConfig, AKPCResult, run_akpc, run_akpc_variant
 from .baselines import (
     greedy_pair_matching,
     opt_lower_bound,
@@ -12,31 +21,57 @@ from .competitive import adversarial_trace, per_request_ratio_check, replay_adve
 from .cost import CostBreakdown, CostParams, competitive_bound, competitive_bound_corrected
 from .crm import WindowCRM, build_window_crm
 from .engine import DEFAULT_BATCH_SIZE, BatchOutcome, CacheState, ReplayEngine
+from .policy import (
+    AKPCPolicy,
+    BasePolicy,
+    CachePolicy,
+    DPGreedyPolicy,
+    NoPackingPolicy,
+    PackCache2Policy,
+    RunResult,
+    get_policy,
+    list_policies,
+    register_policy,
+    run_policy,
+)
+from .session import CacheSession, load_snapshot
 
 __all__ = [
-    "AKPC",
     "AKPCConfig",
+    "AKPCPolicy",
     "AKPCResult",
+    "BasePolicy",
     "BatchOutcome",
+    "CachePolicy",
+    "CacheSession",
     "CacheState",
-    "DEFAULT_BATCH_SIZE",
     "CliquePartition",
     "CostBreakdown",
     "CostParams",
+    "DEFAULT_BATCH_SIZE",
+    "DPGreedyPolicy",
+    "NoPackingPolicy",
+    "PackCache2Policy",
     "ReplayEngine",
+    "RunResult",
     "WindowCRM",
     "adversarial_trace",
     "build_window_crm",
     "competitive_bound",
     "competitive_bound_corrected",
     "generate_cliques",
+    "get_policy",
     "greedy_pair_matching",
+    "list_policies",
+    "load_snapshot",
     "opt_lower_bound",
     "per_request_ratio_check",
+    "register_policy",
     "replay_adversary",
     "run_akpc",
     "run_akpc_variant",
     "run_dp_greedy",
     "run_no_packing",
     "run_packcache2",
+    "run_policy",
 ]

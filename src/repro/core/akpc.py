@@ -1,29 +1,34 @@
-"""AKPC orchestrator (paper Alg. 1): the three modules wired together.
+"""AKPC configuration + legacy entry points (paper Alg. 1).
+
+The algorithm itself lives in the unified policy layer: ``repro.core.policy``
+registers AKPC (and its Fig.-5/7/9 ablation variants) as ``CachePolicy``
+implementations driven either offline (``run_policy``) or online
+(``repro.core.session.CacheSession``).
 
 * Event 1 (every T_CG): Clique Generation Module — Alg. 2 (CRM), Alg. 4
   (adjust previous cliques), Alg. 3 (split oversized + approximate merge);
 * Event 2 (per request): Data Request Handling — Alg. 5 via ReplayEngine;
 * Event 3 (expiry): Alg. 6 last-copy keepalive — folded into the engine's
-  anchor invariant (see engine.py docstring).
+  anchor invariant (see engine.py docstring and DESIGN.md §2).
 
-Ablation variants of the paper (Fig. 5/7/9):
-* ``AKPC``                     split=True,  approx_merge=True
-* ``AKPC w/o ACM``             split=True,  approx_merge=False
-* ``AKPC w/o CS, w/o ACM``     split=False, approx_merge=False  (omega unused)
+Ablation variants of the paper (Fig. 5/7/9), as registry names:
+* ``akpc``          AKPC                    split=True,  approx_merge=True
+* ``akpc_no_acm``   AKPC w/o ACM            split=True,  approx_merge=False
+* ``akpc_base``     AKPC w/o CS, w/o ACM    split=False, approx_merge=False
+
+``run_akpc`` / ``run_akpc_variant`` below are thin shims over the registry,
+kept for the original batch API; they reproduce the historical costs exactly.
 """
 from __future__ import annotations
 
 import dataclasses
-import time as _time
 from typing import Callable
 
 import numpy as np
 
 from ..traces.loader import Trace
-from .cliques import CliquePartition, generate_cliques
 from .cost import CostBreakdown, CostParams
-from .crm import WindowCRM, build_window_crm
-from .engine import CachingCharge, ReplayEngine
+from .engine import CachingCharge
 
 
 @dataclasses.dataclass
@@ -45,6 +50,8 @@ class AKPCConfig:
 
 @dataclasses.dataclass
 class AKPCResult:
+    """Legacy result type of ``run_akpc`` (RunResult subsumes it)."""
+
     costs: CostBreakdown
     clique_sizes: np.ndarray         # sizes of all cliques, final window
     size_history: list[np.ndarray]   # per-window non-singleton size arrays
@@ -57,78 +64,20 @@ class AKPCResult:
         return self.costs.total
 
 
-class AKPC:
-    """Adaptive K-PackCache (the paper's proposed online algorithm)."""
-
-    def __init__(self, n: int, m: int, cfg: AKPCConfig):
-        self.cfg = cfg
-        self.engine = ReplayEngine(
-            n,
-            m,
-            cfg.params,
-            caching_charge=cfg.caching_charge,
-            seed_new_cliques=cfg.seed_new_cliques,
-        )
-        self._prev_crm: WindowCRM | None = None
-        self._partition: CliquePartition | None = None
-        self.size_history: list[np.ndarray] = []
-        self.cg_seconds = 0.0
-        self.n_windows = 0
-
-    # -- Event 1: clique generation on a window of requests -----------------
-    def _generate(self, items: np.ndarray, servers: np.ndarray, now: float):
-        del servers, now
-        cfg = self.cfg
-        t0 = _time.perf_counter()
-        n = self.engine.n
-        crm = build_window_crm(
-            items, n, cfg.params.theta, cfg.top_frac, crm_matmul=cfg.crm_matmul
-        )
-        omega = cfg.params.omega if cfg.enable_split else n
-        part = generate_cliques(
-            self._partition,
-            self._prev_crm,
-            crm,
-            n,
-            omega,
-            cfg.params.gamma,
-            pair_edges=cfg.pair_edges,
-            enable_split=cfg.enable_split,
-            enable_approx_merge=cfg.enable_approx_merge,
-        )
-        self._prev_crm = crm
-        self._partition = part
-        self.cg_seconds += _time.perf_counter() - t0
-        self.n_windows += 1
-        sizes = part.sizes()
-        self.size_history.append(sizes[sizes > 1])
-        return part
-
-    def run(self, trace: Trace) -> AKPCResult:
-        costs = self.engine.replay(
-            trace,
-            clique_generator=self._generate,
-            t_cg=self.cfg.t_cg,
-            batch_size=self.cfg.batch_size,
-        )
-        final = (
-            self._partition.sizes()
-            if self._partition is not None
-            else np.ones(self.engine.n, dtype=np.int32)
-        )
-        return AKPCResult(
-            costs=costs,
-            clique_sizes=final,
-            size_history=self.size_history,
-            n_windows=self.n_windows,
-            cg_seconds=self.cg_seconds,
-            config=self.cfg,
-        )
-
-
 def run_akpc(trace: Trace, cfg: AKPCConfig | None = None) -> AKPCResult:
+    """Batch-API shim over ``get_policy("akpc")`` + ``run_policy``."""
+    from .policy import AKPCPolicy, run_policy
+
     cfg = cfg or AKPCConfig()
-    return AKPC(trace.n, trace.m, cfg).run(trace)
+    res = run_policy(AKPCPolicy(cfg), trace)
+    return AKPCResult(
+        costs=res.costs,
+        clique_sizes=res.clique_sizes,
+        size_history=res.size_history,
+        n_windows=res.n_windows,
+        cg_seconds=res.cg_seconds,
+        config=cfg,
+    )
 
 
 def run_akpc_variant(

@@ -1,15 +1,22 @@
-"""Baselines of the paper's evaluation (§V.B).
+"""Baselines of the paper's evaluation (§V.B) — legacy batch entry points.
 
-* ``No Packing``  — every item transferred/cached individually (Wang et al.
+The methods themselves are registered ``CachePolicy`` implementations in
+``repro.core.policy``:
+
+* ``no_packing``  — every item transferred/cached individually (Wang et al.
   [6] style online TTL caching; no packing component).
-* ``PackCache``   — Wu et al. [2]: ONLINE pairwise (2-)packing; we realise the
+* ``packcache``   — Wu et al. [2]: ONLINE pairwise (2-)packing; we realise the
   FP-tree pair mining as max-weight greedy matching on the window CRM, which
   selects the same top co-accessed pairs, and reuse the shared replay engine.
-* ``DP_Greedy``   — Huang et al. [4]: OFFLINE pairwise packing; pairs are
+* ``dp_greedy``   — Huang et al. [4]: OFFLINE pairwise packing; pairs are
   matched on the CRM of the FULL trace (complete request knowledge) and kept
   fixed during replay.
-* ``OPT``         — offline optimal.  True OPT is intractable; we compute a
-  rigorous LOWER BOUND (every feasible schedule pays at least this much):
+
+The ``run_*`` functions below are thin shims over the registry (kept for the
+original batch API; cost-for-cost identical).  ``OPT`` stays here:
+
+* ``opt_lower_bound`` — offline optimal.  True OPT is intractable; we compute
+  a rigorous LOWER BOUND (every feasible schedule pays at least this much):
   per (item, server) access sequence, each first access costs at least the
   cheapest per-item packed transfer share  c_min = (alpha + (1-alpha)/omega)*lam
   and each re-access after gap g costs at least min(mu*g, c_min)  (either the
@@ -22,50 +29,27 @@ from __future__ import annotations
 import numpy as np
 
 from ..traces.loader import Trace
-from .cliques import CliquePartition
 from .cost import CostBreakdown, CostParams
-from .crm import build_window_crm
-from .engine import CachingCharge, ReplayEngine
+from .engine import CachingCharge
+from .policy import get_policy, greedy_pair_matching, run_policy
+
+__all__ = [
+    "greedy_pair_matching",
+    "opt_lower_bound",
+    "run_dp_greedy",
+    "run_no_packing",
+    "run_packcache2",
+]
 
 
-# ---------------------------------------------------------------------------
-# No Packing
-# ---------------------------------------------------------------------------
 def run_no_packing(
     trace: Trace,
     params: CostParams,
     caching_charge: CachingCharge = "requested",
     batch_size: int | None = None,
 ) -> CostBreakdown:
-    eng = ReplayEngine(trace.n, trace.m, params, caching_charge=caching_charge)
-    return eng.replay(trace, clique_generator=None, batch_size=batch_size)
-
-
-# ---------------------------------------------------------------------------
-# pairwise matching shared by PackCache / DP_Greedy
-# ---------------------------------------------------------------------------
-def greedy_pair_matching(
-    items: np.ndarray, n: int, theta: float, top_frac: float
-) -> CliquePartition:
-    """Greedy max-weight matching of items into disjoint pairs.
-
-    Edges come from the binary CRM of ``items`` (same Alg.-2 machinery the
-    proposed method uses), weights from the normalised CRM; items left
-    unmatched stay singletons.
-    """
-    crm = build_window_crm(items, n, theta, top_frac)
-    w = np.where(crm.binary, crm.norm, 0.0)
-    iu, iv = np.nonzero(np.triu(w, k=1))
-    order = np.argsort(-w[iu, iv], kind="stable")
-    used = np.zeros(crm.n_hot, dtype=bool)
-    pairs: list[tuple[int, ...]] = []
-    for e in order:
-        a, b = int(iu[e]), int(iv[e])
-        if used[a] or used[b]:
-            continue
-        used[a] = used[b] = True
-        pairs.append((int(crm.hot_items[a]), int(crm.hot_items[b])))
-    return CliquePartition.from_cliques(n, pairs)
+    pol = get_policy("no_packing", params=params, caching_charge=caching_charge)
+    return run_policy(pol, trace, batch_size=batch_size).costs
 
 
 def run_packcache2(
@@ -77,13 +61,9 @@ def run_packcache2(
     batch_size: int | None = None,
 ) -> CostBreakdown:
     """Online 2-packing (PackCache, Wu et al. [2])."""
-    eng = ReplayEngine(trace.n, trace.m, params, caching_charge=caching_charge)
-
-    def gen(items: np.ndarray, servers: np.ndarray, now: float):
-        del servers, now
-        return greedy_pair_matching(items, trace.n, params.theta, top_frac)
-
-    return eng.replay(trace, clique_generator=gen, t_cg=t_cg, batch_size=batch_size)
+    pol = get_policy("packcache", params=params, t_cg=t_cg, top_frac=top_frac,
+                     caching_charge=caching_charge)
+    return run_policy(pol, trace, batch_size=batch_size).costs
 
 
 def run_dp_greedy(
@@ -93,15 +73,10 @@ def run_dp_greedy(
     caching_charge: CachingCharge = "requested",
     batch_size: int | None = None,
 ) -> CostBreakdown:
-    """Offline 2-packing (DP_Greedy, Huang et al. [4]).
-
-    Pairs are derived from the FULL trace (offline knowledge) and installed
-    before replay starts; they never change.
-    """
-    part = greedy_pair_matching(trace.items, trace.n, params.theta, top_frac)
-    eng = ReplayEngine(trace.n, trace.m, params, caching_charge=caching_charge)
-    eng.install_partition(part, now=0.0)
-    return eng.replay(trace, clique_generator=None, batch_size=batch_size)
+    """Offline 2-packing (DP_Greedy, Huang et al. [4])."""
+    pol = get_policy("dp_greedy", params=params, top_frac=top_frac,
+                     caching_charge=caching_charge)
+    return run_policy(pol, trace, batch_size=batch_size).costs
 
 
 # ---------------------------------------------------------------------------

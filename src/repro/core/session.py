@@ -1,0 +1,312 @@
+"""Streaming CacheSession: online replay with mid-stream costs + snapshots.
+
+The paper's AKPC is an *online* algorithm — the CDN operator sees requests as
+they arrive, not as a finished trace.  ``CacheSession`` is the streaming
+driver matching that shape: time-ordered request chunks of ANY size are fed
+incrementally through the batched replay engine; T_CG windowing (Alg. 1
+Event 1) is tracked across chunk boundaries exactly as the offline
+``ReplayEngine.replay`` tracks it across batch boundaries, so a session fed
+any chunking of a trace reproduces the offline costs (cost-for-cost, up to
+float summation order — tests/test_policy_session.py asserts 1e-9 relative).
+
+Mid-stream the session exposes ``costs`` (the live cost breakdown) and
+``snapshot()``/``restore()``: a pure-numpy pytree of the FULL replay state —
+engine expiries ``E``, Alg.-6 ``anchor``, the installed clique partition, the
+cost accumulators, the open T_CG window buffer and the policy state (previous
+window's CRM, size history) — such that a restored session resumes
+bit-identically.  ``save()``/``load_snapshot()`` persist snapshots through
+``repro.checkpoint`` (atomic commit-marker layout, crash-safe).
+
+Typical live-traffic loop::
+
+    sess = CacheSession(get_policy("akpc", params=p, t_cg=32.0), n, m)
+    for chunk in request_feed():            # any chunk size, even 1
+        sess.feed(chunk.items, chunk.servers, chunk.times)
+        if need_checkpoint():
+            sess.save("ckpts", step=sess.costs.n_requests)
+    print(sess.result().as_dict())
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+
+import numpy as np
+
+from .cliques import CliquePartition
+from .cost import CostBreakdown
+from .engine import DEFAULT_BATCH_SIZE, CacheState, ReplayEngine
+from .policy import CachePolicy, RunResult, get_policy
+
+
+# ---------------------------------------------------------------------------
+# partition <-> dense array (snapshots hold numpy only)
+# ---------------------------------------------------------------------------
+def pack_partition(part: CliquePartition) -> np.ndarray:
+    """(k, max|c|) int64, -1 padded, rows in clique-index order."""
+    w = max((len(c) for c in part.cliques), default=1)
+    a = np.full((len(part.cliques), max(w, 1)), -1, np.int64)
+    for i, c in enumerate(part.cliques):
+        a[i, : len(c)] = c
+    return a
+
+
+def unpack_partition(n: int, packed: np.ndarray) -> CliquePartition:
+    cliques = [tuple(int(x) for x in row[row >= 0]) for row in np.asarray(packed)]
+    clique_of = np.full(n, -1, np.int32)
+    for i, c in enumerate(cliques):
+        for d in c:
+            clique_of[d] = i
+    return CliquePartition(n=n, cliques=cliques, clique_of=clique_of)
+
+
+class CacheSession:
+    """Online driver of one :class:`~repro.core.policy.CachePolicy`.
+
+    ``policy`` may be a registry name or an instance; it is (re)bound to this
+    session's catalog.  ``trace`` is only needed by offline policies
+    (``dp_greedy`` mines its fixed pairs from it); online policies ignore it.
+    """
+
+    def __init__(
+        self,
+        policy: CachePolicy | str,
+        n: int,
+        m: int,
+        *,
+        trace=None,
+        batch_size: int | None = None,
+    ):
+        if isinstance(policy, str):
+            policy = get_policy(policy)
+        self.policy = policy
+        self.n = n
+        self.m = m
+        policy.bind(n, m)
+        self.engine = ReplayEngine(
+            n,
+            m,
+            policy.params,
+            caching_charge=getattr(policy, "caching_charge", "requested"),
+            seed_new_cliques=getattr(policy, "seed_new_cliques", True),
+        )
+        part0 = policy.initial_partition(trace) if hasattr(
+            policy, "initial_partition") else None
+        if part0 is not None:
+            self.engine.install_partition(part0, now=0.0)
+        self.batch_size = int(
+            batch_size or getattr(policy, "batch_size", None) or DEFAULT_BATCH_SIZE
+        )
+        self._t_cg = policy.t_cg
+        self._next_cg: float | None = None
+        # open-window buffer: list of (items, servers) chunks since last regen
+        self._win: list[tuple[np.ndarray, np.ndarray]] = []
+        self._last_t = -np.inf
+        self._wall = 0.0
+
+    # -- views -------------------------------------------------------------
+    @property
+    def costs(self) -> CostBreakdown:
+        """Live cost breakdown (valid mid-stream)."""
+        return self.engine.costs
+
+    @property
+    def partition(self) -> CliquePartition:
+        """The currently installed clique partition."""
+        return self.engine.state.partition
+
+    @property
+    def now(self) -> float:
+        """Time of the most recently fed request (-inf before any)."""
+        return self._last_t
+
+    # -- streaming ---------------------------------------------------------
+    def feed(self, items, servers, times) -> CostBreakdown:
+        """Feed one time-ordered chunk of requests; returns live costs.
+
+        ``items`` (R, d_max) int, -1 padded (a 1-D row is a single request);
+        ``servers`` (R,); ``times`` (R,) non-decreasing and >= every
+        previously fed time.  Chunk boundaries are free: T_CG windows are
+        carried across them, and any chunking reproduces the offline replay
+        costs.
+        """
+        t0 = _time.perf_counter()
+        items = np.atleast_2d(np.asarray(items))
+        servers = np.asarray(servers, dtype=np.int64).reshape(-1)
+        times = np.asarray(times, dtype=np.float64).reshape(-1)
+        R = times.shape[0]
+        if R == 0:
+            return self.engine.costs
+        if items.shape[0] != R or servers.shape[0] != R:
+            raise ValueError(
+                f"chunk shape mismatch: items {items.shape}, "
+                f"servers {servers.shape}, times {times.shape}"
+            )
+        if (np.diff(times) < 0).any() or times[0] < self._last_t:
+            raise ValueError("requests must be fed in non-decreasing time order")
+        windowed = self._t_cg is not None
+        if windowed and self._next_cg is None:
+            self._next_cg = float(times[0]) + self._t_cg
+
+        pos = 0
+        while pos < R:
+            cut = R
+            if windowed:
+                cut = int(np.searchsorted(times, self._next_cg, side="left"))
+                if cut <= pos:
+                    # request at ``pos`` crosses the T_CG boundary: Event 1
+                    t = float(times[pos])
+                    self._regenerate(t)
+                    while self._next_cg <= t:
+                        self._next_cg += self._t_cg
+                    continue
+            stop = min(pos + self.batch_size, cut)
+            self.engine.handle_batch(
+                items[pos:stop], servers[pos:stop], times[pos:stop]
+            )
+            if windowed:
+                self._win.append((
+                    np.array(items[pos:stop], dtype=np.int32, copy=True),
+                    np.array(servers[pos:stop], dtype=np.int32, copy=True),
+                ))
+            pos = stop
+        self._last_t = float(times[-1])
+        self._wall += _time.perf_counter() - t0
+        return self.engine.costs
+
+    def feed_trace(self, trace, chunk_size: int | None = None) -> CostBreakdown:
+        """Stream a full trace through :meth:`feed` in ``chunk_size`` pieces."""
+        cs = int(chunk_size or self.batch_size)
+        for s in range(0, trace.n_requests, cs):
+            self.feed(
+                trace.items[s : s + cs],
+                trace.servers[s : s + cs],
+                trace.times[s : s + cs],
+            )
+        return self.engine.costs
+
+    def _window_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """The open window's requests as one padded (W, d) array pair."""
+        if not self._win:
+            return np.zeros((0, 1), np.int32), np.zeros(0, np.int32)
+        d = max(a.shape[1] for a, _ in self._win)
+        W = sum(a.shape[0] for a, _ in self._win)
+        its = np.full((W, d), -1, np.int32)
+        svs = np.empty(W, np.int32)
+        r = 0
+        for a, s in self._win:
+            its[r : r + a.shape[0], : a.shape[1]] = a
+            svs[r : r + a.shape[0]] = s
+            r += a.shape[0]
+        return its, svs
+
+    def _regenerate(self, t: float) -> None:
+        w_it, w_sv = self._window_arrays()
+        part = self.policy.on_window(w_it, w_sv, t)
+        if part is not None:
+            self.engine.install_partition(part, t, w_it, w_sv)
+        self._win = []
+
+    # -- results -----------------------------------------------------------
+    def result(self) -> RunResult:
+        pol = self.policy
+        return RunResult(
+            policy=pol.name,
+            costs=self.engine.costs,
+            clique_sizes=self.partition.sizes(),
+            size_history=list(getattr(pol, "size_history", [])),
+            n_windows=getattr(pol, "n_windows", 0),
+            cg_seconds=getattr(pol, "cg_seconds", 0.0),
+            wall_seconds=self._wall,
+            config=getattr(pol, "config", None),
+        )
+
+    # -- snapshot / restore --------------------------------------------------
+    def snapshot(self) -> dict:
+        """Pure-numpy pytree of the full replay state (engine + window +
+        policy), suitable for ``repro.checkpoint`` or in-memory cloning."""
+        st = self.engine.state
+        c = self.engine.costs
+        w_it, w_sv = self._window_arrays()
+        return {
+            "engine": {
+                "E": st.E.copy(),
+                "anchor": st.anchor.copy(),
+                "partition": pack_partition(st.partition),
+                "costs": {
+                    f.name: np.asarray(getattr(c, f.name))
+                    for f in dataclasses.fields(c)
+                },
+            },
+            "session": {
+                "next_cg": np.float64(
+                    np.nan if self._next_cg is None else self._next_cg
+                ),
+                "last_t": np.float64(self._last_t),
+                "win_items": w_it,
+                "win_servers": w_sv,
+                "wall": np.float64(self._wall),
+            },
+            "policy": self.policy.state_dict()
+            if hasattr(self.policy, "state_dict")
+            else {},
+        }
+
+    def restore(self, snap: dict) -> "CacheSession":
+        """Load a :meth:`snapshot`; the session resumes bit-identically."""
+        eng = snap["engine"]
+        part = unpack_partition(self.n, eng["partition"])
+        E = np.array(eng["E"], dtype=np.float64, copy=True)
+        anchor = np.array(eng["anchor"], dtype=np.int32, copy=True)
+        if E.shape != (part.k, self.m):
+            raise ValueError(
+                f"snapshot shape mismatch: E {E.shape} vs partition "
+                f"k={part.k}, m={self.m}"
+            )
+        self.engine.state = CacheState(
+            partition=part, E=E, anchor=anchor, m=self.m
+        )
+        self.engine._sizes = part.sizes().astype(np.int64)
+        c = self.engine.costs
+        for f in dataclasses.fields(c):
+            cast = type(getattr(c, f.name))       # int or float field
+            setattr(c, f.name, cast(np.asarray(eng["costs"][f.name]).item()))
+        ses = snap["session"]
+        nc = float(ses["next_cg"])
+        self._next_cg = None if np.isnan(nc) else nc
+        self._last_t = float(ses["last_t"])
+        self._wall = float(ses["wall"])
+        w_it = np.asarray(ses["win_items"]).astype(np.int32)
+        w_sv = np.asarray(ses["win_servers"]).astype(np.int32)
+        self._win = [] if w_it.shape[0] == 0 else [(w_it, w_sv)]
+        if hasattr(self.policy, "load_state_dict"):
+            self.policy.load_state_dict(snap.get("policy", {}), partition=part)
+        return self
+
+    # -- persistence (repro.checkpoint) --------------------------------------
+    def save(self, directory: str, step: int = 0) -> str:
+        """Persist :meth:`snapshot` via ``repro.checkpoint`` (atomic)."""
+        from ..checkpoint import save_checkpoint
+
+        return save_checkpoint(
+            directory,
+            step,
+            self.snapshot(),
+            meta={"policy": self.policy.name, "n": self.n, "m": self.m},
+        )
+
+
+def load_snapshot(directory: str, step: int | None = None) -> dict:
+    """Read a session snapshot written by :meth:`CacheSession.save`.
+
+    Returns the nested numpy pytree for :meth:`CacheSession.restore` (the
+    caller constructs the session with the same policy/catalog first).
+    """
+    from ..checkpoint import latest_step, load_checkpoint_tree
+
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed snapshot under {directory}")
+    tree, _ = load_checkpoint_tree(directory, step)
+    return tree

@@ -19,10 +19,9 @@ import dataclasses
 
 import numpy as np
 
-from ..core.akpc import AKPC, AKPCConfig
 from ..core.cost import CostParams
-from ..core.baselines import run_no_packing
-from ..traces.loader import Trace
+from ..core.policy import get_policy
+from ..core.session import CacheSession
 
 
 class ShardStore:
@@ -85,12 +84,12 @@ class PackedDataPipeline:
         self.seed = seed
         self.step = 0
         params = params or CostParams(alpha=0.5, rho=4.0)
-        self.akpc = AKPC(store.n_shards, n_hosts,
-                         AKPCConfig(params=params, t_cg=t_cg, top_frac=1.0))
-        self._nopack_trace: list[np.ndarray] = []
-        self._next_cg = t_cg
-        self._t_cg = t_cg
-        self._win_items: list[np.ndarray] = []
+        self._make_session = lambda: CacheSession(
+            get_policy("akpc", params=params, t_cg=t_cg, top_frac=1.0),
+            store.n_shards,
+            n_hosts,
+        )
+        self.cache = self._make_session()
         self.params = params
         self.telemetry = PipelineTelemetry()
 
@@ -101,6 +100,10 @@ class PackedDataPipeline:
     def load_state_dict(self, state: dict) -> None:
         # replay-free resume: the sampler is a pure function of (seed, step)
         self.step = int(state["step"])
+        # the cache session is an online stream and cannot rewind; crash
+        # recovery restarts the cost accounting from the restore point
+        if self.cache.now >= float(self.step):
+            self.cache = self._make_session()
 
     # -- sampling ------------------------------------------------------------
     def _sample_shards(self, step: int) -> np.ndarray:
@@ -118,19 +121,15 @@ class PackedDataPipeline:
     def _account(self, shard_ids: np.ndarray, t: float) -> None:
         uniq = np.unique(shard_ids)
         d_max = 8
-        for lo in range(0, len(uniq), d_max):
-            grp = uniq[lo : lo + d_max]
-            self._win_items.append(grp)
-            if t >= self._next_cg:
-                w = np.full((len(self._win_items), d_max), -1, np.int32)
-                for r, g in enumerate(self._win_items):
-                    w[r, : len(g)] = g
-                part = self.akpc._generate(w, None, t)
-                self.akpc.engine.install_partition(part, t, w, np.zeros(
-                    len(self._win_items), np.int32))
-                self._win_items = []
-                self._next_cg += self._t_cg
-            self.akpc.engine.handle_request(grp.tolist(), self.host_id, t)
+        rows = [uniq[lo : lo + d_max] for lo in range(0, len(uniq), d_max)]
+        items = np.full((len(rows), d_max), -1, np.int32)
+        for r, g in enumerate(rows):
+            items[r, : len(g)] = g
+        self.cache.feed(
+            items,
+            np.full(len(rows), self.host_id, np.int64),
+            np.full(len(rows), t, np.float64),
+        )
         self.telemetry.shards_fetched += len(uniq)
 
     def __iter__(self):
@@ -149,7 +148,7 @@ class PackedDataPipeline:
             off = int(rng.integers(0, max(1, len(toks) - self.seq_len - 1)))
             out[i] = toks[off : off + self.seq_len + 1]
         self.telemetry.batches += 1
-        self.telemetry.akpc_total = self.akpc.engine.costs.total
+        self.telemetry.akpc_total = self.cache.costs.total
         return out
 
 

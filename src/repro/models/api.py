@@ -210,20 +210,26 @@ def _decoder_cache_from_prefill(cfg, p, batch, mesh):
 def _onehot_write(c, rows, slot):
     """cache (L, B, S, ...) <- rows (L, B, 1, ...) at position ``slot`` of
     the (possibly sharded) S axis, without cross-shard data movement.
-    ``rows`` must already be encoded in the cache dtype (see encode_kv)."""
+    ``slot`` is () (one position for every row) or (B,) (per-row positions,
+    continuous batching).  ``rows`` must already be encoded in the cache
+    dtype (see encode_kv)."""
     S = c.shape[2]
-    hit = (jnp.arange(S) == slot).reshape((1, 1, S) + (1,) * (c.ndim - 3))
+    slotv = jnp.atleast_1d(slot)                               # (B|1,)
+    hit = jnp.arange(S)[None] == slotv[:, None]                # (B|1, S)
+    hit = hit.reshape((1,) + hit.shape + (1,) * (c.ndim - 3))
     assert rows.dtype == c.dtype, (rows.dtype, c.dtype)
     return jnp.where(hit, rows, c)
 
 
 def _decoder_decode(cfg: ModelConfig, p, cache, tokens, pos, mesh=None):
-    """tokens (B, 1) int32; pos () int32 current position."""
+    """tokens (B, 1) int32; pos () int32 current position, or (B,) int32
+    per-row positions (continuous batching with staggered arrivals)."""
     x = p["embed"][tokens]
     B = x.shape[0]
     rope_dim = cfg.head_dim if not cfg.mla else cfg.mla.rope_head_dim
-    cos, sin = rope_angles(pos[None], rope_dim, cfg.rope_theta)
-    cos, sin = cos[None], sin[None]              # (1, 1, half) broadcast over B
+    # (B|1, 1, half): broadcasts over B for scalar pos, per-row otherwise
+    cos, sin = rope_angles(jnp.atleast_1d(pos)[:, None], rope_dim,
+                           cfg.rope_theta)
 
     def one_stack(x, stack_p, stack_cache, moe: bool):
         def body(carry, xs):
@@ -385,8 +391,9 @@ def _encdec_init_cache(cfg: ModelConfig, B: int, S: int, dtype):
 
 
 def _encdec_decode(cfg: ModelConfig, p, cache, tokens, pos, mesh=None):
-    x = p["embed"][tokens] + _sinusoid(pos[None], cfg.d_model)[None].astype(
-        dtype_of(cfg.compute_dtype))
+    # (B|1, 1, d) positional term: scalar pos broadcasts, (B,) is per-row
+    x = p["embed"][tokens] + _sinusoid(jnp.atleast_1d(pos), cfg.d_model)[
+        :, None].astype(dtype_of(cfg.compute_dtype))
 
     def body(carry, xs):
         (h_in,) = carry
@@ -500,8 +507,8 @@ def _ssm_decode(cfg: ModelConfig, p, cache, tokens, pos, mesh=None):
     x = p["embed"][tokens]
     cos, sin = None, None
     if g > 0:
-        cs = rope_angles(pos[None], cfg.head_dim, cfg.rope_theta)
-        cos, sin = cs[0][None], cs[1][None]
+        cos, sin = rope_angles(jnp.atleast_1d(pos)[:, None], cfg.head_dim,
+                               cfg.rope_theta)
 
     def mamba_slice(x, lo, hi):
         sl = jax.tree.map(lambda a: a[lo:hi], p["mamba"])

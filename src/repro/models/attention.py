@@ -176,7 +176,8 @@ def decode_attend(q, k_cache, v_cache, k_new, v_new, pos, *, window: int = 0,
     buffering a per-layer-updated copy through the scan (a 2x HBM saving on
     32k-context decode; EXPERIMENTS.md §Perf).
 
-    q (B, H, Dk); caches (B, S, KH, D*); k_new/v_new (B, KH, D*); pos ().
+    q (B, H, Dk); caches (B, S, KH, D*); k_new/v_new (B, KH, D*); pos ()
+    scalar or (B,) per-row positions (continuous batching).
     ``window > 0``: the cache is a ring buffer of size S == window; the
     absolute position of slot i is the latest p <= pos-ish with p % S == i.
     """
@@ -191,13 +192,16 @@ def decode_attend(q, k_cache, v_cache, k_new, v_new, pos, *, window: int = 0,
     # (or fully replicates it for context-parallel B=1 caches) —
     # EXPERIMENTS.md §Perf iteration C
     s = constrain_cache(s, b_axis=0, s_axis=3)
-    slot = jnp.arange(S)
+    # pos may be () (all rows at one position) or (B,) (per-slot positions,
+    # e.g. continuous batching with staggered arrivals)
+    posv = jnp.atleast_1d(pos)[:, None]            # (B|1, 1)
+    slot = jnp.arange(S)[None]                     # (1, S)
     if window > 0:
-        kpos = slot + ((pos - slot) // S) * S
-        valid = (kpos >= 0) & (kpos < pos) & (kpos > pos - window)
+        kpos = slot + ((posv - slot) // S) * S
+        valid = (kpos >= 0) & (kpos < posv) & (kpos > posv - window)
     else:
-        valid = slot < pos
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+        valid = slot < posv                        # (B|1, S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     s_cur = jnp.einsum("bhgd,bhd->bhg", qg, k_new).astype(jnp.float32) * scale
     # partial softmax over the sharded S axis: combine via max/sum stats
     m_loc = jnp.maximum(s.max(axis=-1), s_cur)
@@ -256,7 +260,7 @@ def gqa_forward(p, x, cfg: ModelConfig, cos, sin, *, causal: bool = True):
 
 
 def gqa_decode(p, x, cache, pos, cfg: ModelConfig, cos, sin):
-    """x (B, 1, d); cache {k, v} (B, S_cache, KH, hd); pos ().
+    """x (B, 1, d); cache {k, v} (B, S_cache, KH, hd); pos () or (B,).
 
     Returns (y, {k, v} NEW-TOKEN rows (B, 1, KH, hd)) — the caller performs
     the single post-scan cache write (see decode_attend docstring)."""
@@ -358,8 +362,8 @@ def mla_decode(p, x, cache, pos, cfg: ModelConfig, cos, sin):
     ).astype(jnp.float32) * scale
     S = cache["c"].shape[1]
     s = constrain_cache(s, b_axis=0, s_axis=2)   # follow the cache layout
-    valid = jnp.arange(S) < pos
-    s = jnp.where(valid[None, None], s, NEG_INF)
+    valid = jnp.arange(S)[None] < jnp.atleast_1d(pos)[:, None]   # (B|1, S)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
     s_cur = (
         jnp.einsum("bhr,br->bh", q_eff, c_kv[:, 0])
         + jnp.einsum("bhd,bd->bh", q_rope[:, 0], k_rope[:, 0])

@@ -12,10 +12,13 @@ Servers   = serving hosts; fetching an expert's weights from a peer host or
             discounted (1 + (p-1)*alpha)*lam cost, and whole-clique TTL
             extension keeps hot expert groups resident.
 
-``observe`` feeds routing outcomes; the underlying AKPC engine accounts the
-cost online.  ``packed_tables`` materialises the cliques as a contiguous
-packed weight table so the actual gather uses kernels/packed_lookup (one
-DMA per clique instead of omega scattered row reads).
+Routing outcomes stream through a :class:`repro.core.session.CacheSession`
+(the AKPC policy from the registry): ``observe`` feeds them online, T_CG
+windowing/regeneration happens inside the session, and ``snapshot``/
+``restore`` checkpoint the live cache state together with the server.
+``packed_tables`` materialises the cliques as a contiguous packed weight
+table so the actual gather uses kernels/packed_lookup (one DMA per clique
+instead of omega scattered row reads).
 """
 from __future__ import annotations
 
@@ -23,9 +26,10 @@ import dataclasses
 
 import numpy as np
 
-from ..core.akpc import AKPC, AKPCConfig
 from ..core.baselines import run_no_packing
 from ..core.cost import CostParams
+from ..core.policy import get_policy
+from ..core.session import CacheSession
 from ..traces.loader import Trace
 
 
@@ -52,11 +56,12 @@ class ExpertCacheManager:
         self.params = params or CostParams(alpha=0.6, rho=4.0, omega=5)
         self.t_cg = t_cg
         self.d_max = d_max
-        self.akpc = AKPC(n_experts, n_hosts,
-                         AKPCConfig(params=self.params, t_cg=t_cg, top_frac=1.0))
-        self._win: list[np.ndarray] = []
+        self.session = CacheSession(
+            get_policy("akpc", params=self.params, t_cg=t_cg, top_frac=1.0),
+            n_experts,
+            n_hosts,
+        )
         self._hist: list[tuple[np.ndarray, int, float]] = []
-        self._next_cg = t_cg
         self._t = 0.0
 
     def observe(self, topk_idx: np.ndarray, host: int = 0) -> None:
@@ -64,29 +69,57 @@ class ExpertCacheManager:
         self._t += 1.0
         experts = np.unique(topk_idx.reshape(-1))
         # split into <= d_max item requests (paper's request-size bound)
-        for lo in range(0, len(experts), self.d_max):
-            grp = experts[lo : lo + self.d_max].astype(np.int64)
-            self._win.append(grp)
-            self._hist.append((grp, host, self._t))
-            if self._t >= self._next_cg:
-                self._regen()
-            self.akpc.engine.handle_request(grp.tolist(), host, self._t)
+        rows = [
+            experts[lo : lo + self.d_max].astype(np.int64)
+            for lo in range(0, len(experts), self.d_max)
+        ]
+        items = np.full((len(rows), self.d_max), -1, np.int32)
+        for r, g in enumerate(rows):
+            items[r, : len(g)] = g
+            self._hist.append((g, host, self._t))
+        self.session.feed(
+            items,
+            np.full(len(rows), host, np.int64),
+            np.full(len(rows), self._t, np.float64),
+        )
 
-    def _regen(self) -> None:
-        if self._win:
-            w = np.full((len(self._win), self.d_max), -1, np.int32)
-            for r, g in enumerate(self._win):
-                w[r, : len(g)] = g
-            part = self.akpc._generate(w, None, self._t)
-            self.akpc.engine.install_partition(
-                part, self._t, w, np.zeros(len(self._win), np.int32))
-            self._win = []
-        self._next_cg += self.t_cg
+    # -- checkpointing -------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Session state + the manager's clock/history (pure-numpy pytree,
+        ``repro.checkpoint``-compatible)."""
+        d = max((len(g) for g, _, _ in self._hist), default=1)
+        items = np.full((len(self._hist), d), -1, np.int32)
+        hosts = np.empty(len(self._hist), np.int32)
+        times = np.empty(len(self._hist), np.float64)
+        for i, (g, h, t) in enumerate(self._hist):
+            items[i, : len(g)] = g
+            hosts[i] = h
+            times[i] = t
+        return {
+            "session": self.session.snapshot(),
+            "manager": {
+                "t": np.float64(self._t),
+                "hist_items": items,
+                "hist_hosts": hosts,
+                "hist_times": times,
+            },
+        }
+
+    def restore(self, snap: dict) -> None:
+        self.session.restore(snap["session"])
+        mgr = snap["manager"]
+        self._t = float(mgr["t"])
+        items = np.asarray(mgr["hist_items"])
+        hosts = np.asarray(mgr["hist_hosts"])
+        times = np.asarray(mgr["hist_times"])
+        self._hist = [
+            (row[row >= 0].astype(np.int64), int(h), float(t))
+            for row, h, t in zip(items, hosts, times)
+        ]
 
     # -- introspection -------------------------------------------------------
     def cliques(self) -> list[tuple[int, ...]]:
-        part = self.akpc._partition
-        return part.canonical() if part is not None else []
+        return self.session.partition.canonical()
 
     def packed_tables(self, expert_weights: np.ndarray):
         """Pack clique members contiguously: (n_cliques, omega, ...) table +
@@ -124,7 +157,7 @@ class ExpertCacheManager:
         else:
             nopack = 0.0
         return ExpertCacheStats(
-            akpc_total=self.akpc.engine.costs.total,
+            akpc_total=self.session.costs.total,
             nopack_total=nopack,
             n_observations=len(self._hist),
             cliques=self.cliques(),

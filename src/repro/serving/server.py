@@ -51,10 +51,21 @@ class BatchedServer:
         self._all.append(req)
 
     def _fill_slots(self) -> None:
+        admitted = []
         for i in range(self.B):
             if self.slots[i] is None and self.queue:
                 self.slots[i] = self.queue.popleft()
                 self.slot_pos[i] = 0
+                admitted.append(i)
+        if admitted:
+            # attention caches are masked by position, but recurrent leaves
+            # (SSM conv/state, xLSTM) are not: the previous tenant's state
+            # would leak into the new request.  One batched zeroing pass for
+            # all slots admitted this step (every cache leaf has the slot
+            # axis at position 1).
+            idx = np.asarray(admitted)
+            self.cache = jax.tree.map(
+                lambda c: c.at[:, idx].set(0), self.cache)
 
     def step(self) -> int:
         """One decode step for every active slot; returns #active."""
@@ -68,7 +79,10 @@ class BatchedServer:
             p = int(self.slot_pos[i])
             tokens[i, 0] = r.prompt[p] if p < len(r.prompt) else (
                 r.out[-1] if r.out else 0)
-        pos = jnp.array(int(self.slot_pos[active[0]]) % self.cache_len, jnp.int32)
+        # per-slot positions: slots fill at different times (staggered
+        # arrivals), so each row decodes at ITS position — one shared scalar
+        # would mask/rotate every other slot at the wrong offset
+        pos = jnp.asarray(self.slot_pos % self.cache_len, jnp.int32)
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.array(tokens), pos)
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))

@@ -38,6 +38,27 @@ def test_expert_cache_savings():
     assert len(stats.cliques) > 0
 
 
+def test_expert_cache_snapshot_restore_failover():
+    """A standby manager restored from a snapshot keeps observing (the
+    manager clock/history must travel with the session state)."""
+    rng = np.random.default_rng(7)
+    mk = lambda: ExpertCacheManager(n_experts=16, n_hosts=2, t_cg=8.0)
+    obs = [(rng.choice(8, size=(3, 2)), int(rng.integers(0, 2)))
+           for _ in range(120)]
+
+    primary = mk()
+    for topk, host in obs[:60]:
+        primary.observe(topk, host=host)
+    standby = mk()
+    standby.restore(primary.snapshot())
+    for mgr in (primary, standby):
+        for topk, host in obs[60:]:
+            mgr.observe(topk, host=host)
+    assert standby.session.costs.as_dict() == primary.session.costs.as_dict()
+    assert standby.cliques() == primary.cliques()
+    assert standby.stats().nopack_total == primary.stats().nopack_total
+
+
 def test_packed_tables_layout():
     mgr = ExpertCacheManager(n_experts=8, n_hosts=1, t_cg=4.0)
     rng = np.random.default_rng(1)

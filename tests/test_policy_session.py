@@ -1,0 +1,276 @@
+"""The unified policy/session API (PR 2 tentpole).
+
+Contracts under test:
+
+* registry parity — every registered policy reproduces its legacy ``run_*``
+  shim cost-for-cost (exact: both run the identical engine path);
+* streaming == offline — a ``CacheSession`` fed ANY chunking of a trace
+  (size 1, 7, 4096, and chunks that split T_CG windows) reproduces the
+  offline ``run_policy`` costs (1e-9 relative, the engine's cross-batching
+  float-summation-order tolerance; integer counters exact);
+* snapshot/restore — a session snapshotted mid-stream (including through a
+  ``repro.checkpoint`` disk round-trip) resumes BITWISE-identically:
+  expiries ``E``, ``anchor``, partition, costs, window bookkeeping.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AKPCConfig,
+    CacheSession,
+    CostParams,
+    RunResult,
+    get_policy,
+    list_policies,
+    load_snapshot,
+    run_akpc,
+    run_akpc_variant,
+    run_dp_greedy,
+    run_no_packing,
+    run_packcache2,
+    run_policy,
+)
+from repro.traces import SynthConfig, synth_trace
+
+PARAMS = CostParams()
+T_CG = 0.73            # never divides the batch grid: windows split chunks
+TOP_FRAC = 1.0
+
+INT_FIELDS = ("n_requests", "n_item_requests", "n_misses", "n_hits",
+              "items_transferred")
+FLOAT_FIELDS = ("transfer", "caching", "keepalive_rent", "total")
+
+
+def _trace(n_requests=9000, seed=3, m=12):
+    return synth_trace(SynthConfig(
+        kind="netflix", n_items=60, n_servers=m, n_requests=n_requests,
+        t_max=30.0, bundle_cover=1.0, bundle_zipf=0.7, seed=seed))
+
+
+def _policy(name):
+    kw = {"params": PARAMS}
+    if name in ("packcache", "akpc", "akpc_no_acm", "akpc_base"):
+        kw.update(t_cg=T_CG, top_frac=TOP_FRAC)
+    if name == "dp_greedy":
+        kw.update(top_frac=TOP_FRAC)
+    return get_policy(name, **kw)
+
+
+def assert_same_costs(ref, got, rtol=0.0):
+    a = ref.as_dict() if not isinstance(ref, dict) else ref
+    b = got.as_dict() if not isinstance(got, dict) else got
+    for f in INT_FIELDS:
+        assert a[f] == b[f], f"{f}: {a[f]} != {b[f]}"
+    for f in FLOAT_FIELDS:
+        if rtol == 0.0:
+            assert a[f] == b[f], f"{f}: {a[f]} != {b[f]}"
+        else:
+            assert np.isclose(a[f], b[f], rtol=rtol, atol=1e-9), \
+                f"{f}: {a[f]} != {b[f]}"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_lists_the_paper_method_set():
+    names = list_policies()
+    for required in ("akpc", "akpc_no_acm", "akpc_base", "packcache",
+                     "dp_greedy", "no_packing"):
+        assert required in names
+    with pytest.raises(KeyError):
+        get_policy("nope_not_a_policy")
+
+
+def test_get_policy_returns_fresh_state():
+    a = _policy("akpc")
+    b = _policy("akpc")
+    assert a is not b
+    tr = _trace(3000)
+    run_policy(a, tr)
+    assert a.n_windows > 0 and b.n_windows == 0
+
+
+def test_registry_parity_with_legacy_shims():
+    """Every registered policy == its legacy run_* shim, cost for cost."""
+    tr = _trace()
+    legacy = {
+        "no_packing": run_no_packing(tr, PARAMS),
+        "packcache": run_packcache2(tr, PARAMS, t_cg=T_CG, top_frac=TOP_FRAC),
+        "dp_greedy": run_dp_greedy(tr, PARAMS, top_frac=TOP_FRAC),
+        "akpc": run_akpc(tr, AKPCConfig(
+            params=PARAMS, t_cg=T_CG, top_frac=TOP_FRAC)).costs,
+        "akpc_no_acm": run_akpc_variant(
+            tr, PARAMS, split=True, approx_merge=False, t_cg=T_CG,
+            top_frac=TOP_FRAC).costs,
+        "akpc_base": run_akpc_variant(
+            tr, PARAMS, split=False, approx_merge=False, t_cg=T_CG,
+            top_frac=TOP_FRAC).costs,
+    }
+    for name, want in legacy.items():
+        got = run_policy(_policy(name), tr)
+        assert isinstance(got, RunResult)
+        assert got.policy == name
+        assert_same_costs(want, got.costs)       # exact
+
+
+def test_run_result_subsumes_akpc_result():
+    tr = _trace(4000)
+    res = run_policy(_policy("akpc"), tr)
+    old = run_akpc(tr, AKPCConfig(params=PARAMS, t_cg=T_CG, top_frac=TOP_FRAC))
+    assert res.n_windows == old.n_windows > 0
+    assert np.array_equal(res.clique_sizes, old.clique_sizes)
+    assert len(res.size_history) == len(old.size_history)
+    d = res.as_dict()
+    assert d["policy"] == "akpc" and d["total"] == res.total
+
+
+# ---------------------------------------------------------------------------
+# streaming == offline
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk_size", [1, 7, 4096])
+@pytest.mark.parametrize("name", ["no_packing", "packcache", "akpc"])
+def test_streaming_matches_offline_any_chunking(name, chunk_size):
+    tr = _trace()
+    off = run_policy(_policy(name), tr)
+    sess = CacheSession(_policy(name), tr.n, tr.m)
+    sess.feed_trace(tr, chunk_size=chunk_size)
+    assert_same_costs(off.costs, sess.costs, rtol=1e-9)
+    res = sess.result()
+    assert res.n_windows == off.n_windows
+    assert np.array_equal(res.clique_sizes, off.clique_sizes)
+
+
+def test_streaming_dp_greedy_needs_trace_or_partition():
+    tr = _trace(3000)
+    with pytest.raises(ValueError):
+        CacheSession(_policy("dp_greedy"), tr.n, tr.m)
+    off = run_policy(_policy("dp_greedy"), tr)
+    sess = CacheSession(_policy("dp_greedy"), tr.n, tr.m, trace=tr)
+    sess.feed_trace(tr, chunk_size=17)
+    assert_same_costs(off.costs, sess.costs, rtol=1e-9)
+
+
+def test_streaming_chunks_splitting_windows():
+    """Ragged chunk sizes whose boundaries never align with T_CG windows."""
+    tr = _trace()
+    off = run_policy(_policy("akpc"), tr)
+    sess = CacheSession(_policy("akpc"), tr.n, tr.m)
+    pos, k = 0, 0
+    sizes = [1, 3, 13, 77, 501, 2048]
+    while pos < tr.n_requests:
+        cs = sizes[k % len(sizes)]
+        k += 1
+        sess.feed(tr.items[pos:pos + cs], tr.servers[pos:pos + cs],
+                  tr.times[pos:pos + cs])
+        pos += cs
+    assert_same_costs(off.costs, sess.costs, rtol=1e-9)
+
+
+def test_feed_rejects_time_travel():
+    tr = _trace(100)
+    sess = CacheSession(_policy("no_packing"), tr.n, tr.m)
+    sess.feed(tr.items[50:], tr.servers[50:], tr.times[50:])
+    with pytest.raises(ValueError):
+        sess.feed(tr.items[:50], tr.servers[:50], tr.times[:50])
+
+
+def test_feed_single_request_rows():
+    """1-D item rows (one request at a time) drive the online loop."""
+    tr = _trace(400)
+    off = run_policy(_policy("akpc"), tr)
+    sess = CacheSession(_policy("akpc"), tr.n, tr.m)
+    for i in range(tr.n_requests):
+        sess.feed(tr.items[i], [tr.servers[i]], [tr.times[i]])
+    assert_same_costs(off.costs, sess.costs, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore
+# ---------------------------------------------------------------------------
+def _chunks(tr, cs):
+    return [(s, min(s + cs, tr.n_requests)) for s in range(0, tr.n_requests, cs)]
+
+
+@pytest.mark.parametrize("name", ["akpc", "packcache", "no_packing"])
+def test_snapshot_restore_resumes_bitwise(name):
+    tr = _trace()
+    mk = lambda: CacheSession(_policy(name), tr.n, tr.m)
+    chunks = _chunks(tr, 1111)
+    cut = len(chunks) // 2
+
+    full = mk()
+    for s, e in chunks:
+        full.feed(tr.items[s:e], tr.servers[s:e], tr.times[s:e])
+
+    half = mk()
+    for s, e in chunks[:cut]:
+        half.feed(tr.items[s:e], tr.servers[s:e], tr.times[s:e])
+    resumed = mk().restore(half.snapshot())
+    for s, e in chunks[cut:]:
+        resumed.feed(tr.items[s:e], tr.servers[s:e], tr.times[s:e])
+
+    assert np.array_equal(full.engine.state.E, resumed.engine.state.E)
+    assert np.array_equal(full.engine.state.anchor, resumed.engine.state.anchor)
+    assert full.partition.cliques == resumed.partition.cliques
+    assert full.costs.as_dict() == resumed.costs.as_dict()   # bitwise
+    a, b = full.result(), resumed.result()
+    assert a.n_windows == b.n_windows
+    assert all(np.array_equal(x, y)
+               for x, y in zip(a.size_history, b.size_history))
+
+
+def test_snapshot_roundtrip_through_checkpoint(tmp_path):
+    """save() -> repro.checkpoint dir -> load_snapshot() is lossless."""
+    tr = _trace(6000)
+    mk = lambda: CacheSession(_policy("akpc"), tr.n, tr.m)
+    half = tr.n_requests // 2
+
+    a = mk()
+    a.feed(tr.items[:half], tr.servers[:half], tr.times[:half])
+    a.save(str(tmp_path), step=1)
+    b = mk().restore(load_snapshot(str(tmp_path)))
+
+    assert np.array_equal(a.engine.state.E, b.engine.state.E)
+    assert a.partition.cliques == b.partition.cliques
+    assert a.costs.as_dict() == b.costs.as_dict()
+    # resuming both produces identical results
+    for s in (a, b):
+        s.feed(tr.items[half:], tr.servers[half:], tr.times[half:])
+    assert a.costs.as_dict() == b.costs.as_dict()
+    assert np.array_equal(a.engine.state.E, b.engine.state.E)
+
+
+def test_snapshot_restore_mid_window():
+    """Snapshot taken with an OPEN T_CG window: the buffered window requests
+    must survive so the next Event 1 sees the identical window."""
+    tr = _trace()
+    mk = lambda: CacheSession(_policy("akpc"), tr.n, tr.m)
+    # cut mid-stream at a request index that is NOT a window boundary
+    cut = 1234
+    full = mk()
+    full.feed_trace(tr, chunk_size=999)
+
+    half = mk()
+    half.feed(tr.items[:cut], tr.servers[:cut], tr.times[:cut])
+    snap = half.snapshot()
+    assert snap["session"]["win_items"].shape[0] > 0     # window open
+    resumed = mk().restore(snap)
+    resumed.feed(tr.items[cut:], tr.servers[cut:], tr.times[cut:])
+    # same windows mined, same final state, costs within float-sum order
+    assert resumed.result().n_windows == full.result().n_windows
+    assert resumed.partition.cliques == full.partition.cliques
+    assert_same_costs(full.costs, resumed.costs, rtol=1e-9)
+
+
+def test_costs_readable_mid_stream():
+    tr = _trace(2000)
+    sess = CacheSession(_policy("akpc"), tr.n, tr.m)
+    seen = []
+    for s, e in _chunks(tr, 500):
+        c = sess.feed(tr.items[s:e], tr.servers[s:e], tr.times[s:e])
+        seen.append((c.n_requests, c.total))
+    ns, totals = zip(*seen)
+    assert list(ns) == [500, 1000, 1500, 2000]
+    assert all(t2 >= t1 for t1, t2 in zip(totals, totals[1:]))
