@@ -36,6 +36,9 @@ class AKPCConfig:
     params: CostParams = dataclasses.field(default_factory=CostParams)
     t_cg: float = 50.0               # clique-generation period (Fig. 3)
     top_frac: float = 0.1            # CRM restricted to top-10% items (§V.A)
+    # hot-set denominator: "window" = fraction of the window's distinct
+    # accessed items (paper §V.A), "catalog" = historical fraction of n
+    top_frac_of: str = "window"
     enable_split: bool = True        # CS  module
     enable_approx_merge: bool = True # ACM module
     caching_charge: CachingCharge = "requested"
@@ -43,9 +46,11 @@ class AKPCConfig:
     # requests per vectorised engine batch; None = engine default, 1 = the
     # historical per-request scalar replay (bit-compatible)
     batch_size: int | None = None
-    # accelerated hooks (Pallas kernel wrappers); None = numpy oracles
+    # accelerated hooks (Pallas kernel wrappers); None + kernels="auto"
+    # autowires the TPU kernels when a TPU backend is attached
     crm_matmul: Callable | None = None
     pair_edges: Callable | None = None
+    kernels: str = "auto"            # "auto" | "off"
 
 
 @dataclasses.dataclass

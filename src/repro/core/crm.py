@@ -4,21 +4,29 @@ For every request window ``W`` (the requests of the last ``T_CG`` period), the
 CDN builds a raw co-occurrence matrix ``CRM[i1, i2] = #requests containing
 both i1 and i2``, min-max normalises it and binarises at threshold ``theta``.
 
-To bound the cost of this (the paper limits the matrix to the top-x% hottest
-items of the window) we map the window's hot items into a compact index space
-first; items outside the hot set never receive CRM edges and therefore stay
-singleton cliques.
+To bound the cost of this, the paper limits the matrix to the top-x% hottest
+items *of the window* (§V.A).  ``top_frac`` is therefore taken over the
+window's accessed-item support by default; ``top_frac_of="catalog"`` keeps
+the historical fraction-of-n semantics for cost parity with earlier runs.
+Hot items are mapped into a compact index space first; items outside the hot
+set never receive CRM edges and therefore stay singleton cliques.
 
 TPU path: counting co-occurrences is a rank-B update ``CRM += H^T @ H`` with
 ``H`` the one-hot request/item incidence matrix, i.e. a matmul, which is what
-``repro.kernels.crm_update`` implements on the MXU.  The numpy path below is
-the oracle used by the simulator and the tests.
+``repro.kernels.crm_update`` implements on the MXU.  The numpy path
+accumulates the same counts from the window's item pairs directly (requests
+are short, so the pair list is ~d_max^2 per request — far smaller than the
+dense (B, h) incidence product) and is bit-identical to the matmul form.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+#: padded-row width above which the pairwise scatter would materialise more
+#: index pairs than the dense incidence product it replaces
+_SCATTER_MAX_WIDTH = 128
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,11 +66,43 @@ def cooccurrence_counts(items: np.ndarray, n: int) -> np.ndarray:
     """Raw CRM(W): symmetric co-occurrence counts with zero diagonal.
 
     Exactly Alg. 2 lines 1-4: for every request, every unordered item pair
-    increments both symmetric entries once.
+    increments both symmetric entries once.  Counts come from a unique-key
+    reduction over the window's (request-deduplicated) item pairs — the
+    sparse equivalent of ``H^T @ H`` with 0/1 incidence, identical output.
     """
-    H = incidence_matrix(items, n)
-    crm = (H.T @ H).astype(np.int64)
-    np.fill_diagonal(crm, 0)
+    items = np.asarray(items)
+    crm = np.zeros((n, n), dtype=np.int64)
+    if items.ndim != 2 or 0 in items.shape:
+        return crm
+    B, d = items.shape
+    if d > _SCATTER_MAX_WIDTH or B * n * n <= (1 << 25):
+        # wide rows, or an index space so small the dense product is cheaper
+        # than sorting the window
+        H = incidence_matrix(items, n)
+        crm[...] = (H.T @ H).astype(np.int64)
+        np.fill_diagonal(crm, 0)
+        return crm
+    # incidence is 0/1: an item repeated inside one request counts once
+    s = np.sort(items, axis=1)
+    dup = s[:, 1:] == s[:, :-1]
+    if dup.any():
+        s[:, 1:][dup] = -1
+        s = np.sort(s, axis=1)          # re-pack valid ids into the tail
+    c = (s >= 0).sum(axis=1)            # distinct items per request
+    key_parts = []
+    for cc in np.unique(c):             # group rows by cardinality: the pair
+        if cc < 2:                      # grid is sum(c_r^2), not B * d^2
+            continue
+        rows = s[c == cc, d - cc:].astype(np.int64)
+        ii, jj = np.nonzero(~np.eye(cc, dtype=bool))
+        key_parts.append((rows[:, ii] * n + rows[:, jj]).ravel())
+    if key_parts:
+        keys = np.concatenate(key_parts)
+        if n * n <= (1 << 22):          # count in place: O(keys + n^2)
+            crm.reshape(-1)[:] = np.bincount(keys, minlength=n * n)
+        else:
+            uk, uc = np.unique(keys, return_counts=True)
+            crm.reshape(-1)[uk] = uc
     return crm
 
 
@@ -72,16 +112,30 @@ def minmax_normalise(crm: np.ndarray) -> np.ndarray:
     hi = crm.max()
     if hi <= lo:
         return np.zeros_like(crm, dtype=np.float32)
+    if lo == 0:                         # the common case: skip the subtract
+        return (crm / hi).astype(np.float32)
     return ((crm - lo) / (hi - lo)).astype(np.float32)
 
 
 def hot_items_of_window(
-    items: np.ndarray, n: int, top_frac: float
+    items: np.ndarray, n: int, top_frac: float, top_frac_of: str = "window"
 ) -> np.ndarray:
-    """ids of the ``top_frac`` most frequently accessed items of the window."""
+    """ids of the ``top_frac`` most frequently accessed items of the window.
+
+    ``top_frac_of="window"`` (default, paper §V.A) takes the fraction over
+    the window's distinct accessed items, so a sparse window on a huge
+    catalog yields a proportionally small CRM.  ``"catalog"`` reproduces the
+    historical fraction-of-n hot-set size (every accessed item is hot
+    whenever the window support is below ``n * top_frac``).
+    """
+    if top_frac_of not in ("window", "catalog"):
+        raise ValueError(
+            f"top_frac_of must be 'window' or 'catalog', got {top_frac_of!r}"
+        )
     flat = items[items >= 0]
     counts = np.bincount(flat, minlength=n)
-    n_hot = max(1, int(round(n * top_frac)))
+    base = n if top_frac_of == "catalog" else int((counts > 0).sum())
+    n_hot = max(1, int(round(base * top_frac)))
     order = np.argsort(-counts, kind="stable")
     hot = order[:n_hot]
     hot = hot[counts[hot] > 0]          # never include never-accessed items
@@ -94,13 +148,15 @@ def build_window_crm(
     theta: float,
     top_frac: float = 0.1,
     crm_matmul=None,
+    top_frac_of: str = "window",
 ) -> WindowCRM:
     """Alg. 2 end to end for one window.
 
     ``crm_matmul``: optional accelerated ``(H) -> H^T H`` implementation
-    (e.g. the Pallas kernel wrapper); defaults to numpy.
+    (e.g. the Pallas kernel wrapper); defaults to the numpy pair scatter.
+    ``top_frac_of``: hot-set denominator, see :func:`hot_items_of_window`.
     """
-    hot = hot_items_of_window(items, n, top_frac)
+    hot = hot_items_of_window(items, n, top_frac, top_frac_of)
     h = hot.shape[0]
     # remap window items into the compact hot index space; cold items -> -1
     lut = np.full(n, -1, dtype=np.int32)
@@ -121,10 +177,42 @@ def build_window_crm(
 def edge_diff(
     prev: WindowCRM | None, cur: WindowCRM
 ) -> tuple[set[tuple[int, int]], set[tuple[int, int]]]:
-    """Delta-E between consecutive binary CRMs in GLOBAL item ids (Alg. 4 input).
+    """Delta-E between consecutive binary CRMs as Python sets (legacy form).
 
-    Returns (added_edges, removed_edges).
+    Returns (added_edges, removed_edges) in GLOBAL item ids.  The CGM hot
+    path uses :func:`edge_diff_arrays`; this set form remains for tests and
+    the scalar oracle.
     """
     cur_edges = cur.edge_set()
     prev_edges = prev.edge_set() if prev is not None else set()
     return cur_edges - prev_edges, prev_edges - cur_edges
+
+
+def edge_diff_arrays(
+    prev: WindowCRM | None, cur: WindowCRM
+) -> tuple[np.ndarray, np.ndarray]:
+    """Delta-E between consecutive binary CRMs as (e, 2) int64 arrays.
+
+    Boolean-matrix diff over the union hot index space (Alg. 4 input):
+    rows are (global_u, global_v) with u < v, lexicographically sorted —
+    the same order the scalar oracle iterates its edge sets in.
+    """
+    if prev is None:
+        iu, iv = np.nonzero(np.triu(cur.binary, k=1))
+        added = np.stack(
+            [cur.hot_items[iu], cur.hot_items[iv]], axis=1
+        ).astype(np.int64)
+        return added, np.zeros((0, 2), dtype=np.int64)
+    union = np.union1d(prev.hot_items, cur.hot_items)
+    U = union.shape[0]
+    P = np.zeros((U, U), dtype=bool)
+    C = np.zeros((U, U), dtype=bool)
+    pi = np.searchsorted(union, prev.hot_items)
+    ci = np.searchsorted(union, cur.hot_items)
+    P[np.ix_(pi, pi)] = prev.binary
+    C[np.ix_(ci, ci)] = cur.binary
+    au, av = np.nonzero(np.triu(C & ~P, k=1))
+    ru, rv = np.nonzero(np.triu(P & ~C, k=1))
+    added = np.stack([union[au], union[av]], axis=1).astype(np.int64)
+    removed = np.stack([union[ru], union[rv]], axis=1).astype(np.int64)
+    return added, removed

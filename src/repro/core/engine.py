@@ -209,55 +209,71 @@ class ReplayEngine:
         window_items: np.ndarray | None = None,
         window_servers: np.ndarray | None = None,
     ) -> None:
-        """Translate cache state onto the new partition.
+        """Translate cache state onto the new partition (vectorised).
 
-        * cliques identical to a previous clique keep their row (and anchor);
+        * cliques identical to a previous clique keep their row (and anchor):
+          matched without hashing tuples — a new clique equals an old one iff
+          all its members map to one old clique of the same size;
         * changed cliques are present at j iff EVERY member was nominally
-          alive at j (presence = min of member expiries);
+          alive at j (presence = segment-min of member expiries over the
+          partition's packed member order);
         * newly formed multi-item cliques are seeded with one packed copy at
           the server that accessed their members most during the window
           (Alg. 1 line 5), free of charge (packing runs in the background,
           §III.C).
         """
         old = self.state
-        old_index: dict[tuple[int, ...], int] = {
-            c: i for i, c in enumerate(old.partition.cliques)
-        }
-        # nominal per-item expiry under the old partition
-        item_E = old.E[old.partition.clique_of]          # (n, m)
         k = partition.k
+        if k == 0:
+            self.state = CacheState.fresh(partition, self.m)
+            self._sizes = np.zeros(0, dtype=np.int64)
+            return
         E = np.zeros((k, self.m), dtype=np.float64)
         anchor = np.full(k, -1, dtype=np.int32)
+        new_sizes = partition.sizes().astype(np.int64)
+        old_sizes = old.partition.sizes().astype(np.int64)
+        old_of = old.partition.clique_of
 
-        seed_counts = None
-        if (
-            self.seed_new_cliques
-            and window_items is not None
-            and window_servers is not None
-        ):
-            # item -> per-server access counts over the window
-            seed_counts = np.zeros((self.n, self.m), dtype=np.int64)
-            reps = (window_items >= 0).sum(axis=1)
-            srv = np.repeat(window_servers, reps)
-            itm = window_items[window_items >= 0]
-            np.add.at(seed_counts, (itm, srv), 1)
+        # -- set-equality match against the old partition ------------------
+        packed = partition.packed()                      # (k, w) -1 padded
+        cand = old_of[packed[:, 0]].astype(np.int64)     # old clique of 1st member
+        same = (old_of[np.maximum(packed, 0)] == cand[:, None]) | (packed < 0)
+        matched = same.all(axis=1) & (old_sizes[cand] == new_sizes)
+        E[matched] = old.E[cand[matched]]
+        anchor[matched] = old.anchor[cand[matched]]
 
-        for i, c in enumerate(partition.cliques):
-            prev_i = old_index.get(c)
-            if prev_i is not None:
-                E[i] = old.E[prev_i]
-                anchor[i] = old.anchor[prev_i]
-                continue
-            members = list(c)
-            rows = item_E[members]                       # (|c|, m)
-            present = (rows > now).all(axis=0)
-            E[i] = np.where(present, rows.min(axis=0), 0.0)
-            if E[i].max() > 0:
-                anchor[i] = int(np.argmax(E[i]))
-            elif len(c) > 1 and seed_counts is not None:
-                j = int(np.argmax(seed_counts[members].sum(axis=0)))
-                E[i, j] = now + self.params.dt
-                anchor[i] = j
+        changed = ~matched
+        if changed.any():
+            # nominal per-item expiry under the old partition
+            item_E = old.E[old_of]                       # (n, m)
+            order = partition.member_order()             # grouped by clique
+            starts = np.zeros(k, np.int64)
+            np.cumsum(new_sizes[:-1], out=starts[1:])
+            min_E = np.minimum.reduceat(item_E[order], starts, axis=0)
+            fresh = np.where(min_E > now, min_E, 0.0)    # (k, m)
+            E[changed] = fresh[changed]
+            row_max = fresh.max(axis=1)
+            present = changed & (row_max > 0)
+            anchor[present] = np.argmax(fresh, axis=1)[present].astype(np.int32)
+
+            need_seed = changed & (row_max <= 0) & (new_sizes > 1)
+            if (
+                self.seed_new_cliques
+                and window_items is not None
+                and window_servers is not None
+                and need_seed.any()
+            ):
+                # item -> per-server access counts over the window
+                seed_counts = np.zeros((self.n, self.m), dtype=np.int64)
+                reps = (window_items >= 0).sum(axis=1)
+                srv = np.repeat(window_servers, reps)
+                itm = window_items[window_items >= 0]
+                np.add.at(seed_counts, (itm, srv), 1)
+                seed_sum = np.add.reduceat(seed_counts[order], starts, axis=0)
+                js = np.argmax(seed_sum, axis=1)
+                rows = np.nonzero(need_seed)[0]
+                E[rows, js[rows]] = now + self.params.dt
+                anchor[rows] = js[rows].astype(np.int32)
         self.state = CacheState(partition=partition, E=E, anchor=anchor, m=self.m)
         self._sizes = partition.sizes().astype(np.int64)
 

@@ -220,7 +220,8 @@ def list_policies() -> list[str]:
 # pairwise matching shared by PackCache / DP_Greedy (moved from baselines.py)
 # ---------------------------------------------------------------------------
 def greedy_pair_matching(
-    items: np.ndarray, n: int, theta: float, top_frac: float
+    items: np.ndarray, n: int, theta: float, top_frac: float,
+    top_frac_of: str = "window",
 ) -> CliquePartition:
     """Greedy max-weight matching of items into disjoint pairs.
 
@@ -228,7 +229,7 @@ def greedy_pair_matching(
     proposed method uses), weights from the normalised CRM; items left
     unmatched stay singletons.
     """
-    crm = build_window_crm(items, n, theta, top_frac)
+    crm = build_window_crm(items, n, theta, top_frac, top_frac_of=top_frac_of)
     w = np.where(crm.binary, crm.norm, 0.0)
     iu, iv = np.nonzero(np.triu(w, k=1))
     order = np.argsort(-w[iu, iv], kind="stable")
@@ -276,12 +277,14 @@ class PackCache2Policy(BasePolicy):
         params: CostParams | None = None,
         t_cg: float = 50.0,
         top_frac: float = 0.1,
+        top_frac_of: str = "window",
         caching_charge: CachingCharge = "requested",
         batch_size: int | None = None,
     ):
         super().__init__(params)
         self.t_cg = t_cg
         self.top_frac = top_frac
+        self.top_frac_of = top_frac_of
         self.caching_charge = caching_charge
         self.batch_size = batch_size
 
@@ -289,7 +292,7 @@ class PackCache2Policy(BasePolicy):
         del servers, now
         t0 = _time.perf_counter()
         part = greedy_pair_matching(items, self.n, self.params.theta,
-                                    self.top_frac)
+                                    self.top_frac, self.top_frac_of)
         self._record(part, _time.perf_counter() - t0)
         return part
 
@@ -309,6 +312,7 @@ class DPGreedyPolicy(BasePolicy):
         self,
         params: CostParams | None = None,
         top_frac: float = 0.1,
+        top_frac_of: str = "window",
         partition: CliquePartition | None = None,
         caching_charge: CachingCharge = "requested",
         batch_size: int | None = None,
@@ -316,6 +320,7 @@ class DPGreedyPolicy(BasePolicy):
         self._user_partition = partition
         super().__init__(params)
         self.top_frac = top_frac
+        self.top_frac_of = top_frac_of
         self.caching_charge = caching_charge
         self.batch_size = batch_size
 
@@ -332,7 +337,8 @@ class DPGreedyPolicy(BasePolicy):
                     "`partition` or give the session/driver a full trace"
                 )
             self._fixed = greedy_pair_matching(
-                trace.items, trace.n, self.params.theta, self.top_frac
+                trace.items, trace.n, self.params.theta, self.top_frac,
+                self.top_frac_of,
             )
         self._record(self._fixed, _time.perf_counter() - t0)
         return self._fixed
@@ -356,6 +362,7 @@ class AKPCPolicy(BasePolicy):
         params: CostParams | None = None,
         t_cg: float | None = None,
         top_frac: float | None = None,
+        top_frac_of: str | None = None,
         split: bool | None = None,
         approx_merge: bool | None = None,
         caching_charge: CachingCharge | None = None,
@@ -363,6 +370,7 @@ class AKPCPolicy(BasePolicy):
         batch_size: int | None = None,
         crm_matmul: Callable | None = None,
         pair_edges: Callable | None = None,
+        kernels: str | None = None,
         name: str | None = None,
     ):
         cfg = config or AKPCConfig()
@@ -370,6 +378,7 @@ class AKPCPolicy(BasePolicy):
             "params": params,
             "t_cg": t_cg,
             "top_frac": top_frac,
+            "top_frac_of": top_frac_of,
             "enable_split": split,
             "enable_approx_merge": approx_merge,
             "caching_charge": caching_charge,
@@ -377,6 +386,7 @@ class AKPCPolicy(BasePolicy):
             "batch_size": batch_size,
             "crm_matmul": crm_matmul,
             "pair_edges": pair_edges,
+            "kernels": kernels,
         }
         cfg = dataclasses.replace(
             cfg, **{k: v for k, v in over.items() if v is not None}
@@ -393,6 +403,17 @@ class AKPCPolicy(BasePolicy):
     def bind(self, n: int, m: int) -> None:
         super().bind(n, m)
         self._prev_crm: WindowCRM | None = None
+        # kernel hooks: explicit config wins; "auto" wires the Pallas TPU
+        # kernels in as defaults whenever a TPU backend is attached
+        cfg = self.config
+        mm, pe = cfg.crm_matmul, cfg.pair_edges
+        if cfg.kernels == "auto" and (mm is None or pe is None):
+            from ..kernels.autowire import default_cgm_hooks
+
+            auto_mm, auto_pe = default_cgm_hooks()
+            mm = mm if mm is not None else auto_mm
+            pe = pe if pe is not None else auto_pe
+        self._crm_matmul, self._pair_edges = mm, pe
 
     # -- Event 1: clique generation on a window of requests ----------------
     def on_window(self, items, servers, now):
@@ -401,7 +422,8 @@ class AKPCPolicy(BasePolicy):
         t0 = _time.perf_counter()
         crm = build_window_crm(
             items, self.n, cfg.params.theta, cfg.top_frac,
-            crm_matmul=cfg.crm_matmul,
+            crm_matmul=self._crm_matmul,
+            top_frac_of=cfg.top_frac_of,
         )
         omega = cfg.params.omega if cfg.enable_split else self.n
         part = generate_cliques(
@@ -411,7 +433,7 @@ class AKPCPolicy(BasePolicy):
             self.n,
             omega,
             cfg.params.gamma,
-            pair_edges=cfg.pair_edges,
+            pair_edges=self._pair_edges,
             enable_split=cfg.enable_split,
             enable_approx_merge=cfg.enable_approx_merge,
         )

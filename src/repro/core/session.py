@@ -43,12 +43,13 @@ from .policy import CachePolicy, RunResult, get_policy
 # partition <-> dense array (snapshots hold numpy only)
 # ---------------------------------------------------------------------------
 def pack_partition(part: CliquePartition) -> np.ndarray:
-    """(k, max|c|) int64, -1 padded, rows in clique-index order."""
-    w = max((len(c) for c in part.cliques), default=1)
-    a = np.full((len(part.cliques), max(w, 1)), -1, np.int64)
-    for i, c in enumerate(part.cliques):
-        a[i, : len(c)] = c
-    return a
+    """(k, max|c|) int64, -1 padded, rows in clique-index order.
+
+    Shim over :meth:`CliquePartition.packed` — snapshots, the engine and the
+    packed-lookup kernels all share that one array-native layout.  Copied so
+    mutating a snapshot never corrupts the partition's cache.
+    """
+    return part.packed().copy()
 
 
 def unpack_partition(n: int, packed: np.ndarray) -> CliquePartition:

@@ -1,0 +1,38 @@
+"""Backend-aware default wiring of the CGM Pallas kernels.
+
+The clique-generation hot path has two accelerable matmuls (DESIGN.md §8):
+
+* ``crm_matmul``  — Alg. 2 co-occurrence accumulation ``H^T @ H``
+                    (``kernels.crm_update``);
+* ``pair_edges``  — the Alg. 3 merge-scan pair-edge matrix ``M A M^T``
+                    (``kernels.clique_density``).
+
+On a TPU backend both compile to MXU matmuls and beat the numpy oracles; in
+interpret mode (CPU-only containers) they are strictly slower than the numpy
+paths they validate, so autowiring only engages when a real TPU is attached.
+``AKPCConfig(kernels="auto")`` (the default) calls this; ``kernels="off"``
+keeps the numpy oracles regardless of backend.  JAX is probed defensively —
+the pure-numpy core must keep working in containers without the accelerator
+toolchain.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+
+def default_cgm_hooks() -> tuple[Callable | None, Callable | None]:
+    """(crm_matmul, pair_edges) Pallas wrappers iff a TPU backend is live.
+
+    Returns (None, None) — i.e. "use the numpy oracles" — when JAX is
+    missing, broken, or running on a non-TPU backend.
+    """
+    try:
+        import jax
+
+        if jax.default_backend() != "tpu":
+            return None, None
+        from .ops import crm_matmul, pair_edges
+
+        return crm_matmul, pair_edges
+    except Exception:
+        return None, None

@@ -1,8 +1,17 @@
 """Alg. 3/4 — clique partition invariants + split/merge behaviour."""
+import sys
+
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.cliques import CliquePartition, generate_cliques
+from repro.core import cliques_ref
+from repro.core.cliques import (
+    CliquePartition,
+    _CrmView,
+    generate_cliques,
+    split_oversized,
+)
 from repro.core.crm import build_window_crm
 
 
@@ -74,3 +83,116 @@ def test_incremental_reuse():
     p1 = generate_cliques(None, None, crm, n, 5, 0.85)
     p2 = generate_cliques(p1, crm, crm, n, 5, 0.85)
     assert p1.canonical() == p2.canonical()
+
+
+# ---------------------------------------------------------------------------
+# from_cliques validation (empty groups / bad ids silently corrupted the
+# engine's size-dependent transfer/rent math before PR 3)
+# ---------------------------------------------------------------------------
+def test_from_cliques_rejects_empty_group():
+    with pytest.raises(ValueError, match="empty clique group"):
+        CliquePartition.from_cliques(5, [(0, 1), ()])
+
+
+def test_from_cliques_rejects_out_of_range_ids():
+    with pytest.raises(ValueError, match="outside"):
+        CliquePartition.from_cliques(5, [(0, 5)])
+    with pytest.raises(ValueError, match="outside"):
+        CliquePartition.from_cliques(5, [(-1, 2)])
+
+
+def test_from_cliques_rejects_duplicates():
+    with pytest.raises(ValueError, match="in two cliques"):
+        CliquePartition.from_cliques(6, [(0, 1), (1, 2)])
+    with pytest.raises(ValueError, match="in two cliques"):
+        CliquePartition.from_cliques(6, [(3, 3)])
+
+
+def test_from_cliques_valid_roundtrip():
+    part = CliquePartition.from_cliques(6, [(4, 1), (2, 3)])
+    assert part.cliques[:2] == [(1, 4), (2, 3)]
+    assert sorted(part.cliques[2:]) == [(0,), (5,)]
+    assert (part.sizes() == np.array([2, 2, 1, 1])).all()
+
+
+# ---------------------------------------------------------------------------
+# packed array-native layout (shared with session.pack_partition)
+# ---------------------------------------------------------------------------
+def test_packed_layout():
+    part = CliquePartition.from_cliques(7, [(2, 0, 5), (3, 6)])
+    want = np.array(
+        [[0, 2, 5], [3, 6, -1], [1, -1, -1], [4, -1, -1]], np.int64
+    )
+    assert (part.packed() == want).all()
+    from repro.core.session import pack_partition, unpack_partition
+
+    assert (pack_partition(part) == want).all()
+    back = unpack_partition(7, pack_partition(part))
+    assert back.cliques == part.cliques
+    assert (back.clique_of == part.clique_of).all()
+
+
+# ---------------------------------------------------------------------------
+# split_oversized: iterative worklist (the oracle recursion overflows)
+# ---------------------------------------------------------------------------
+def _cold_views(n):
+    """Fast + oracle views over a CRM whose hot set is {0, 1} only."""
+    crm = build_window_crm(np.array([[0, 1]], np.int32), n, theta=0.0,
+                           top_frac=1.0)
+    return _CrmView(crm, n), cliques_ref._CrmView(crm, n)
+
+
+def test_split_oversized_5000_members_omega4():
+    """A 5000-member group (e.g. via run_policy(initial_partition=...))
+    must split without RecursionError and cover every member."""
+    n = 6000
+    view, _ = _cold_views(n)
+    big = tuple(range(2, 5002))
+    parts = split_oversized(big, 4, view)
+    assert max(len(p) for p in parts) <= 4
+    assert sorted(d for p in parts for d in p) == list(big)
+
+    # end to end: the oversized group arrives through a previous partition
+    prev = CliquePartition.from_cliques(n, [big])
+    crm = build_window_crm(np.array([[0, 1]], np.int32), n, theta=0.0,
+                           top_frac=1.0)
+    part = generate_cliques(prev, None, crm, n, omega=4, gamma=0.85)
+    assert int(part.sizes().max()) <= 4
+    assert (np.sort(np.concatenate([np.array(c) for c in part.cliques]))
+            == np.arange(n)).all()
+
+
+def test_split_oversized_matches_oracle_and_oracle_recurses():
+    """Worklist == recursive oracle where the oracle survives; the oracle's
+    one-stack-frame-per-split recursion dies once peels exceed the limit."""
+    n = 400
+    view, oview = _cold_views(n)
+    group = tuple(range(2, 202))        # 200 cold members
+    for omega in (3, 4, 9):
+        assert (split_oversized(group, omega, view)
+                == cliques_ref.split_oversized(group, omega, oview))
+    import inspect
+
+    limit = sys.getrecursionlimit()
+    try:
+        # headroom far below the ~200 frames the oracle's peel recursion
+        # needs, but comfortably above what the worklist + numpy use
+        sys.setrecursionlimit(len(inspect.stack()) + 100)
+        with pytest.raises(RecursionError):
+            cliques_ref.split_oversized(group, 4, oview)
+        assert len(split_oversized(group, 4, view)) == 197
+    finally:
+        sys.setrecursionlimit(limit)
+
+
+def test_split_oversized_hot_group_matches_oracle():
+    """Weakest-edge search + weighted sides on a fully hot group."""
+    rng = np.random.default_rng(2)
+    n = 30
+    crm = build_window_crm(_window(rng, n, 150), n, theta=0.05, top_frac=1.0)
+    view = _CrmView(crm, n)
+    oview = cliques_ref._CrmView(crm, n)
+    g = tuple(range(n))
+    for omega in (3, 5, 11):
+        assert (split_oversized(g, omega, view)
+                == cliques_ref.split_oversized(g, omega, oview))

@@ -1,0 +1,121 @@
+"""Oracle parity for the vectorized Clique Generation Module (PR 3).
+
+``repro.core.cliques`` (incremental-merge, array-native) must return
+partitions element-for-element identical to ``repro.core.cliques_ref``
+(the legacy scalar implementation, frozen as the oracle) — same cliques
+in the same index order, same ``clique_of`` — over an
+(omega x gamma x theta) grid on netflix/spotify-style synthetic traces,
+with windows chained (prev partition + prev CRM) exactly as AKPC runs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import cliques as fast
+from repro.core import cliques_ref as ref
+from repro.core.cliques import CliquePartition, _CrmView
+from repro.core.crm import build_window_crm, edge_diff, edge_diff_arrays
+from repro.traces import SynthConfig, synth_trace
+
+N_ITEMS = 48
+N_WINDOWS = 3
+
+
+def _windows(kind: str, seed: int = 0):
+    tr = synth_trace(SynthConfig(
+        kind=kind, n_items=N_ITEMS, n_servers=10, n_requests=240,
+        t_max=12.0, bundle_cover=1.0, seed=seed))
+    per = tr.items.shape[0] // N_WINDOWS
+    return [tr.items[w * per: (w + 1) * per] for w in range(N_WINDOWS)]
+
+
+def _assert_identical(a: CliquePartition, b: CliquePartition, ctx: str):
+    assert a.cliques == b.cliques, ctx
+    assert (a.clique_of == b.clique_of).all(), ctx
+
+
+@pytest.mark.parametrize("kind", ["netflix", "spotify"])
+@pytest.mark.parametrize("omega", [3, 4, 5])
+@pytest.mark.parametrize("gamma", [0.6, 0.85, 0.95])
+@pytest.mark.parametrize("theta", [0.1, 0.3])
+def test_generate_cliques_parity_grid(kind, omega, gamma, theta):
+    """Chained windows: new == oracle at every clique-generation event."""
+    wins = _windows(kind)
+    pf = pr = None
+    cf = cr = None
+    for w, items in enumerate(wins):
+        crm = build_window_crm(items, N_ITEMS, theta, top_frac=0.5)
+        nf = fast.generate_cliques(pf, cf, crm, N_ITEMS, omega, gamma)
+        nr = ref.generate_cliques(pr, cr, crm, N_ITEMS, omega, gamma)
+        _assert_identical(
+            nf, nr, f"{kind} omega={omega} gamma={gamma} theta={theta} w={w}"
+        )
+        pf, cf = nf, crm
+        pr, cr = nr, crm
+
+
+@pytest.mark.parametrize("omega,gamma", [(2, 0.5), (5, 0.4)])
+def test_parity_unpruned_regime(omega, gamma):
+    """gamma <= (omega-2)/omega or omega <= 2: the edge pruning must stay off."""
+    for items in _windows("netflix", seed=7):
+        crm = build_window_crm(items, N_ITEMS, 0.1, top_frac=1.0)
+        nf = fast.generate_cliques(None, None, crm, N_ITEMS, omega, gamma)
+        nr = ref.generate_cliques(None, None, crm, N_ITEMS, omega, gamma)
+        _assert_identical(nf, nr, f"omega={omega} gamma={gamma}")
+
+
+def test_ablation_variant_parity():
+    """enable_split / enable_approx_merge combinations match the oracle."""
+    wins = _windows("spotify", seed=3)
+    for split in (True, False):
+        for merge in (True, False):
+            pf = pr = None
+            cf = cr = None
+            for items in wins:
+                crm = build_window_crm(items, N_ITEMS, 0.15, top_frac=0.5)
+                nf = fast.generate_cliques(
+                    pf, cf, crm, N_ITEMS, 5, 0.85,
+                    enable_split=split, enable_approx_merge=merge)
+                nr = ref.generate_cliques(
+                    pr, cr, crm, N_ITEMS, 5, 0.85,
+                    enable_split=split, enable_approx_merge=merge)
+                _assert_identical(nf, nr, f"split={split} merge={merge}")
+                pf, cf = nf, crm
+                pr, cr = nr, crm
+
+
+def test_edge_diff_arrays_matches_sets():
+    """Boolean-matrix diff == legacy set diff, rows lexicographically sorted."""
+    wins = _windows("netflix", seed=5)
+    prev = None
+    for items in wins:
+        cur = build_window_crm(items, N_ITEMS, 0.1, top_frac=0.4)
+        a_set, r_set = edge_diff(prev, cur)
+        a_arr, r_arr = edge_diff_arrays(prev, cur)
+        assert [tuple(e) for e in a_arr.tolist()] == sorted(a_set)
+        assert [tuple(e) for e in r_arr.tolist()] == sorted(r_set)
+        prev = cur
+
+
+def test_pair_edges_kernel_parity_interpret():
+    """Pallas clique_density (interpret mode) drives the incremental merge
+    to the same partitions as the numpy matmul path."""
+    jax = pytest.importorskip("jax")
+    del jax
+    from repro.kernels.clique_density import clique_pair_edges
+
+    def pair_edges(M, A):
+        return np.asarray(clique_pair_edges(M, A, interpret=True))
+
+    items = _windows("spotify", seed=11)[0]
+    crm = build_window_crm(items, N_ITEMS, 0.1, top_frac=1.0)
+    view = _CrmView(crm, N_ITEMS)
+    groups = [(i,) for i in range(N_ITEMS)]
+    base = fast.approximate_merge(groups, view, 4, 0.7)
+    kern = fast.approximate_merge(groups, view, 4, 0.7, pair_edges=pair_edges)
+    orac = ref.approximate_merge(groups, ref._CrmView(crm, N_ITEMS), 4, 0.7)
+    assert base == kern == orac
+    # and end-to-end through generate_cliques
+    a = fast.generate_cliques(None, None, crm, N_ITEMS, 4, 0.7,
+                              pair_edges=pair_edges)
+    b = ref.generate_cliques(None, None, crm, N_ITEMS, 4, 0.7)
+    _assert_identical(a, b, "kernel end-to-end")

@@ -1,7 +1,13 @@
 """Alg. 2 — CRM construction on the paper's own worked example (§IV.A)."""
 import numpy as np
 
-from repro.core.crm import build_window_crm, cooccurrence_counts, edge_diff
+from repro.core.crm import (
+    build_window_crm,
+    cooccurrence_counts,
+    edge_diff,
+    hot_items_of_window,
+    incidence_matrix,
+)
 
 
 def test_paper_worked_example():
@@ -31,3 +37,50 @@ def test_edge_diff():
     w2 = build_window_crm(b, 5, theta=0.1, top_frac=1.0)
     added, removed = edge_diff(w1, w2)
     assert (2, 3) in added and (1, 2) in removed
+
+
+def test_hot_set_fraction_of_window_support():
+    """Paper §V.A: top-x% hottest items OF THE WINDOW — a 100-item window on
+    a 10^5-item catalog must build a <= 100-row CRM, not an O(n*top_frac)
+    one."""
+    import pytest
+
+    n = 100_000
+    rng = np.random.default_rng(0)
+    touched = rng.choice(n, size=100, replace=False).astype(np.int32)
+    items = np.full((300, 2), -1, np.int32)
+    items[:, 0] = touched[np.arange(300) % 100]     # every touched item hit
+    items[:150, 1] = rng.choice(touched, size=150)
+    crm = build_window_crm(items, n, theta=0.1, top_frac=0.1)
+    assert crm.n_hot <= 100
+    assert crm.n_hot == 10              # round(100 distinct * 0.1)
+    assert set(crm.hot_items.tolist()) <= set(touched.tolist())
+
+    # legacy semantics stay available for cost parity with earlier runs
+    legacy = hot_items_of_window(items, n, 0.1, top_frac_of="catalog")
+    assert legacy.shape[0] == 100       # all accessed items pass the n*10% bar
+
+    with pytest.raises(ValueError, match="top_frac_of"):
+        hot_items_of_window(items, n, 0.1, top_frac_of="bogus")
+
+
+def test_top_frac_one_is_insensitive_to_denominator():
+    rng = np.random.default_rng(1)
+    items = np.where(rng.random((40, 3)) < 0.8,
+                     rng.integers(0, 20, (40, 3)), -1).astype(np.int32)
+    w = hot_items_of_window(items, 20, 1.0, top_frac_of="window")
+    c = hot_items_of_window(items, 20, 1.0, top_frac_of="catalog")
+    assert (w == c).all()
+
+
+def test_cooccurrence_scatter_matches_incidence_matmul():
+    """The sparse pair scatter must equal H^T H (0/1 incidence) exactly,
+    including duplicate items inside one request."""
+    rng = np.random.default_rng(3)
+    for n, B, d in [(10, 500, 4), (300, 800, 6), (2100, 20, 6), (7, 1, 5)]:
+        items = np.where(rng.random((B, d)) < 0.7,
+                         rng.integers(0, n, (B, d)), -1).astype(np.int32)
+        H = incidence_matrix(items, n)
+        want = (H.T @ H).astype(np.int64)
+        np.fill_diagonal(want, 0)
+        assert (cooccurrence_counts(items, n) == want).all()
