@@ -20,7 +20,10 @@ import time
 
 import numpy as np
 
-from repro.core import CostParams, get_policy, opt_lower_bound, run_policy
+from repro.core import (
+    CacheEnvironment, CostParams, get_cost_model, get_policy, opt_lower_bound,
+    run_policy,
+)
 from repro.traces import paper_trace
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "experiments/results")
@@ -32,12 +35,18 @@ def get_trace(kind: str, n_requests: int, seed: int = 0):
     return paper_trace(kind, n_requests=n_requests, seed=seed)
 
 
-def t_cg_for(trace, params: CostParams | None = None) -> float:
+def t_cg_for(trace, params: CostParams | None = None,
+             env: CacheEnvironment | None = None,
+             cost_model: str = "table1") -> float:
     """Clique-generation period: a small multiple of the cache TTL dt —
     long enough to observe co-access, short enough to track drift.
     (Regenerating much faster than dt churns partitions and loses cached
-    presence; see EXPERIMENTS.md §Fig5 notes.)"""
-    dt = (params or CostParams()).dt
+    presence; see EXPERIMENTS.md §Fig5 notes.)  The TTL comes from the
+    registered cost model (max over servers under heterogeneous prices),
+    not from CostParams internals."""
+    if env is None:
+        env = CacheEnvironment(trace.n, trace.m, params or CostParams())
+    dt = float(get_cost_model(cost_model, env).dt().max())
     span = float(trace.times[-1] - trace.times[0])
     return float(min(max(0.3 * dt, span / 50.0), max(span / 4.0, 1e-6)))
 
@@ -53,14 +62,27 @@ def method_policies(params: CostParams, t_cg: float, top_frac: float) -> dict:
     }
 
 
-def run_methods(trace, params: CostParams, methods=None, top_frac: float = 1.0):
-    """Returns {method: {total, transfer, caching, seconds}}."""
-    t_cg = t_cg_for(trace, params)
+def run_methods(trace, params: CostParams, methods=None, top_frac: float = 1.0,
+                env: CacheEnvironment | None = None,
+                cost_model: str = "table1"):
+    """Returns {method: {total, transfer, caching, seconds}}.
+
+    ``env``/``cost_model`` select the pricing scenario (default: the paper's
+    homogeneous Table-I regime; fig10 passes heterogeneous environments).
+    """
+    # one resolution for policies AND the opt bound, so both price the
+    # same scenario (threads trace.sizes into a price-only env)
+    env = CacheEnvironment.resolve(env, trace, params)
+    t_cg = t_cg_for(trace, params, env=env, cost_model=cost_model)
     out = {}
     for name, kw in method_policies(params, t_cg, top_frac).items():
         if methods is not None and name not in methods:
             continue
-        res = run_policy(get_policy(name, params=params, **kw), trace)
+        res = run_policy(
+            get_policy(name, params=params, env=env, cost_model=cost_model,
+                       **kw),
+            trace,
+        )
         out[name] = {
             "total": res.total,
             "transfer": res.costs.transfer,
@@ -70,20 +92,36 @@ def run_methods(trace, params: CostParams, methods=None, top_frac: float = 1.0):
         if (res.clique_sizes > 1).any():
             out[name]["clique_sizes"] = np.bincount(res.clique_sizes).tolist()
     if methods is None or "opt" in methods:
-        t0 = time.perf_counter()
-        costs = opt_lower_bound(trace, params)
-        out["opt"] = {
-            "total": costs.total,
-            "transfer": costs.transfer,
-            "caching": costs.caching,
-            "seconds": round(time.perf_counter() - t0, 2),
-        }
+        from repro.core.baselines import OPT_BOUND_MODELS
+
+        if cost_model in OPT_BOUND_MODELS:
+            t0 = time.perf_counter()
+            costs = opt_lower_bound(trace, params, env=env,
+                                    cost_model=cost_model)
+            out["opt"] = {
+                "total": costs.total,
+                "transfer": costs.transfer,
+                "caching": costs.caching,
+                "seconds": round(time.perf_counter() - t0, 2),
+            }
+        # else: no valid lower bound of this form (e.g. tiered) — callers
+        # compare against no_packing instead
     return out
 
 
-def relative_to_opt(res: dict) -> dict:
-    opt = res["opt"]["total"]
-    return {k: round(v["total"] / opt, 4) for k, v in res.items()}
+def relative_to_opt(res: dict, reference: str = "opt") -> dict:
+    """Totals relative to ``reference`` (default: the OPT lower bound).
+
+    run_methods omits "opt" for cost models without a valid bound (e.g.
+    tiered pricing) — there, pick the reference EXPLICITLY, e.g.
+    ``relative_to_opt(res, reference="no_packing")``, so opt-relative and
+    baseline-relative numbers can never be confused."""
+    if reference not in res:
+        raise KeyError(
+            f"no {reference!r} entry in results (no valid OPT bound for "
+            'this cost model?); pass reference="no_packing" explicitly')
+    base = res[reference]["total"]
+    return {k: round(v["total"] / base, 4) for k, v in res.items()}
 
 
 def emit(rows: list[tuple]) -> None:

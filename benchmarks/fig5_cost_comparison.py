@@ -11,9 +11,10 @@ def main() -> list[tuple]:
     rows, payload = [], {}
     for kind in ("netflix", "spotify"):
         tr = get_trace(kind, N_REQUESTS)
-        res = run_methods(tr, params)
+        # the paper's scenario == the registry's default "table1" model
+        res = run_methods(tr, params, cost_model="table1")
         rel = relative_to_opt(res)
-        payload[kind] = {"raw": res, "relative": rel}
+        payload[kind] = {"raw": res, "relative": rel, "cost_model": "table1"}
         for m, v in rel.items():
             ct = res[m]["transfer"] / res["opt"]["total"]
             rows.append((f"fig5/{kind}/{m}", int(res[m]["seconds"] * 1e6),

@@ -13,17 +13,19 @@ METHODS = ("no_packing", "packcache", "akpc", "opt")
 
 
 def main() -> list[tuple]:
-    rows, payload = [], {"alpha": {}, "rho": {}}
+    rows, payload = [], {"alpha": {}, "rho": {}, "cost_model": "table1"}
     for kind in ("netflix", "spotify"):
         tr = get_trace(kind, N_SWEEP)
         for a in ALPHAS:
-            res = run_methods(tr, CostParams(alpha=a), methods=METHODS)
+            res = run_methods(tr, CostParams(alpha=a), methods=METHODS,
+                              cost_model="table1")
             rel = relative_to_opt(res)
             payload["alpha"].setdefault(kind, {})[a] = rel
             rows.append((f"fig6a/{kind}/alpha={a}", 0,
                          ";".join(f"{m}={rel[m]}" for m in METHODS)))
         for r in RHOS:
-            res = run_methods(tr, CostParams(rho=r), methods=METHODS)
+            res = run_methods(tr, CostParams(rho=r), methods=METHODS,
+                              cost_model="table1")
             rel = relative_to_opt(res)
             payload["rho"].setdefault(kind, {})[r] = rel
             rows.append((f"fig6b/{kind}/rho={r}", 0,

@@ -18,6 +18,7 @@ def main() -> None:
         fig7_hyperparams,
         fig8_scalability,
         fig9_cliques_runtime,
+        fig10_heterogeneous,
         integration_bench,
         kernel_bench,
         replay_bench,
@@ -33,6 +34,7 @@ def main() -> None:
         ("fig7", fig7_hyperparams),
         ("fig8", fig8_scalability),
         ("fig9", fig9_cliques_runtime),
+        ("fig10", fig10_heterogeneous),
         ("kernels", kernel_bench),
         ("integration", integration_bench),
         ("roofline", roofline_report),

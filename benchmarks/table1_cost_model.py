@@ -1,17 +1,30 @@
-"""Table I — transfer/caching costs for packed vs unpacked bundles."""
+"""Table I — transfer/caching costs for packed vs unpacked bundles.
+
+Constructed through the cost-model registry (no ``CostParams`` formula
+internals): the ``table1`` model IS Table I, and the ``tiered`` model with
+its default schedule (one breakpoint at volume 1, marginal rate alpha)
+reproduces it exactly on unit sizes — Table I is the alpha-linear special
+case of concave tiered pricing (DESIGN.md §9).
+"""
 from __future__ import annotations
 
 from .common import emit, save_json
-from repro.core import CostParams
+from repro.core import CacheEnvironment, CostParams, get_cost_model
 
 
 def main() -> list[tuple]:
-    p = CostParams()
+    env = CacheEnvironment(n=8, m=1, params=CostParams())
+    model = get_cost_model("table1", env)
+    tiered = get_cost_model("tiered", env)     # default = alpha-linear
+    dt = float(model.dt()[0])
     rows, payload = [], {}
     for k in (1, 2, 3, 5):
-        unp = p.transfer_cost(k, packed=False)
-        pkd = p.transfer_cost(k, packed=True)
-        cache = p.caching_cost(k, p.dt)
+        unp = model.transfer_cost(k, packed=False)
+        pkd = model.transfer_cost(k, packed=True)
+        cache = model.caching_cost(k, dt)
+        if tiered.transfer_cost(k, packed=True) != pkd:   # survives python -O
+            raise RuntimeError(
+                "tiered default must reproduce Table I (alpha-linear tier)")
         payload[k] = {"unpacked": unp, "packed": pkd, "caching": cache}
         rows.append((f"table1/k={k}", 0,
                      f"unpacked={unp};packed={round(pkd,3)};caching={cache}"))

@@ -9,7 +9,8 @@ import argparse
 import numpy as np
 
 from repro.core import (
-    CacheSession, CostParams, get_policy, opt_lower_bound, run_policy,
+    CacheEnvironment, CacheSession, CostParams, get_cost_model, get_policy,
+    opt_lower_bound, run_policy,
 )
 from repro.traces import paper_trace
 
@@ -25,7 +26,11 @@ def main():
     print(f"trace: {tr.name}  {tr.n_requests} requests, "
           f"{tr.n} items, {tr.m} servers")
 
-    t_cg = 0.3 * params.dt
+    # the pricing scenario, from the cost-model registry (no CostParams
+    # formula internals): the paper's Table-I regime is the "table1" model
+    env = CacheEnvironment.from_trace(tr, params)
+    model = get_cost_model("table1", env)
+    t_cg = 0.3 * float(model.dt().max())
     runs = [
         ("No Packing", "no_packing", {}),
         ("DP_Greedy (offline 2-pack)", "dp_greedy", dict(top_frac=1.0)),

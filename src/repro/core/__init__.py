@@ -18,7 +18,21 @@ from .baselines import (
 )
 from .cliques import CliquePartition, generate_cliques
 from .competitive import adversarial_trace, per_request_ratio_check, replay_adversary
-from .cost import CostBreakdown, CostParams, competitive_bound, competitive_bound_corrected
+from .cost import (
+    CacheEnvironment,
+    CostBreakdown,
+    CostModel,
+    CostParams,
+    HeterogeneousCostModel,
+    Table1CostModel,
+    TieredCostModel,
+    competitive_bound,
+    competitive_bound_corrected,
+    competitive_bound_env,
+    get_cost_model,
+    list_cost_models,
+    register_cost_model,
+)
 from .crm import WindowCRM, build_window_crm
 from .engine import DEFAULT_BATCH_SIZE, BatchOutcome, CacheState, ReplayEngine
 from .policy import (
@@ -42,13 +56,18 @@ __all__ = [
     "AKPCResult",
     "BasePolicy",
     "BatchOutcome",
+    "CacheEnvironment",
     "CachePolicy",
     "CacheSession",
     "CacheState",
     "CliquePartition",
     "CostBreakdown",
+    "CostModel",
     "CostParams",
     "DEFAULT_BATCH_SIZE",
+    "HeterogeneousCostModel",
+    "Table1CostModel",
+    "TieredCostModel",
     "DPGreedyPolicy",
     "NoPackingPolicy",
     "PackCache2Policy",
@@ -59,13 +78,17 @@ __all__ = [
     "build_window_crm",
     "competitive_bound",
     "competitive_bound_corrected",
+    "competitive_bound_env",
     "generate_cliques",
+    "get_cost_model",
     "get_policy",
     "greedy_pair_matching",
+    "list_cost_models",
     "list_policies",
     "load_snapshot",
     "opt_lower_bound",
     "per_request_ratio_check",
+    "register_cost_model",
     "register_policy",
     "replay_adversary",
     "run_akpc",

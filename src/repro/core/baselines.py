@@ -29,11 +29,12 @@ from __future__ import annotations
 import numpy as np
 
 from ..traces.loader import Trace
-from .cost import CostBreakdown, CostParams
+from .cost import CacheEnvironment, CostBreakdown, CostParams
 from .engine import CachingCharge
 from .policy import get_policy, greedy_pair_matching, run_policy
 
 __all__ = [
+    "OPT_BOUND_MODELS",
     "greedy_pair_matching",
     "opt_lower_bound",
     "run_dp_greedy",
@@ -41,14 +42,20 @@ __all__ = [
     "run_packcache2",
 ]
 
+#: cost models whose pricing admits the opt_lower_bound argument
+OPT_BOUND_MODELS = ("table1", "heterogeneous")
+
 
 def run_no_packing(
     trace: Trace,
     params: CostParams,
     caching_charge: CachingCharge = "requested",
     batch_size: int | None = None,
+    env: CacheEnvironment | None = None,
+    cost_model: str = "table1",
 ) -> CostBreakdown:
-    pol = get_policy("no_packing", params=params, caching_charge=caching_charge)
+    pol = get_policy("no_packing", params=params, caching_charge=caching_charge,
+                     env=env, cost_model=cost_model)
     return run_policy(pol, trace, batch_size=batch_size).costs
 
 
@@ -59,10 +66,13 @@ def run_packcache2(
     top_frac: float = 0.1,
     caching_charge: CachingCharge = "requested",
     batch_size: int | None = None,
+    env: CacheEnvironment | None = None,
+    cost_model: str = "table1",
 ) -> CostBreakdown:
     """Online 2-packing (PackCache, Wu et al. [2])."""
     pol = get_policy("packcache", params=params, t_cg=t_cg, top_frac=top_frac,
-                     caching_charge=caching_charge)
+                     caching_charge=caching_charge, env=env,
+                     cost_model=cost_model)
     return run_policy(pol, trace, batch_size=batch_size).costs
 
 
@@ -72,19 +82,53 @@ def run_dp_greedy(
     top_frac: float = 0.1,
     caching_charge: CachingCharge = "requested",
     batch_size: int | None = None,
+    env: CacheEnvironment | None = None,
+    cost_model: str = "table1",
 ) -> CostBreakdown:
     """Offline 2-packing (DP_Greedy, Huang et al. [4])."""
     pol = get_policy("dp_greedy", params=params, top_frac=top_frac,
-                     caching_charge=caching_charge)
+                     caching_charge=caching_charge, env=env,
+                     cost_model=cost_model)
     return run_policy(pol, trace, batch_size=batch_size).costs
 
 
 # ---------------------------------------------------------------------------
 # OPT lower bound
 # ---------------------------------------------------------------------------
-def opt_lower_bound(trace: Trace, params: CostParams) -> CostBreakdown:
-    """Rigorous lower bound on the offline optimal cost (see module doc)."""
-    c_min = (params.alpha + (1.0 - params.alpha) / params.omega) * params.lam
+def opt_lower_bound(
+    trace: Trace,
+    params: CostParams | None = None,
+    env: CacheEnvironment | None = None,
+    cost_model: str = "table1",
+) -> CostBreakdown:
+    """Rigorous lower bound on the offline optimal cost (see module doc).
+
+    With a heterogeneous ``env`` (per-server prices / item sizes) the same
+    argument holds per (item, server) sequence at THAT server's prices and
+    THAT item's volume: every first access pays at least the cheapest
+    per-item packed share ``(alpha + (1-alpha)/omega) * lam_j * s_d`` and
+    every re-access after gap g at least ``min(mu_j * s_d * g, share)``.
+    The homogeneous path is kept verbatim (bit-identical to pre-PR-4 runs).
+
+    ONLY valid for the ``table1`` and ``heterogeneous`` cost models (their
+    packed per-item share is bounded below by the omega-pack share) —
+    enforced with a ValueError.  ``tiered`` schedules with marginal rates
+    below alpha can undercut the share, so no lower bound of this form
+    exists; fig10-style comparisons there use ``no_packing`` as the
+    reference instead.
+    """
+    if cost_model not in OPT_BOUND_MODELS:
+        raise ValueError(
+            f"opt_lower_bound is only valid for {OPT_BOUND_MODELS}; "
+            f"{cost_model!r} pricing can undercut the per-item packed share")
+    if params is None:
+        params = env.params if env is not None else CostParams()
+    elif env is not None and params != env.params:
+        # same contract as ReplayEngine: a conflicting explicit params
+        # would silently skew the packed share / rent rates
+        raise ValueError(
+            "params and env.params disagree; build the environment with "
+            "the same CostParams you pass to opt_lower_bound")
     # flatten to (item, server, time) triplets
     mask = trace.items >= 0
     reps = mask.sum(axis=1)
@@ -101,14 +145,33 @@ def opt_lower_bound(trace: Trace, params: CostParams) -> CostBreakdown:
     cont = ~new_seq
     gaps[cont] = tm_s[cont] - tm_s[np.nonzero(cont)[0] - 1]
 
-    costs = CostBreakdown()
+    costs = CostBreakdown(model=cost_model)
     first = new_seq
-    costs.transfer += float(first.sum()) * c_min
-    keep = params.mu * gaps[cont]
-    refetch = np.minimum(keep, c_min)
-    costs.transfer += float(refetch[keep >= c_min].sum())
-    costs.caching += float(refetch[keep < c_min].sum())
+    share = params.alpha + (1.0 - params.alpha) / params.omega
+    # per-server/size pricing applies only when the MODEL prices that way:
+    # table1 ignores env prices/sizes by design, so its bound must too (the
+    # env branch would otherwise exceed the achievable table1 costs)
+    if cost_model != "heterogeneous" or env is None or env.homogeneous:
+        c_min = share * params.lam
+        costs.transfer += float(first.sum()) * c_min
+        keep = params.mu * gaps[cont]
+        refetch = np.minimum(keep, c_min)
+        costs.transfer += float(refetch[keep >= c_min].sum())
+        costs.caching += float(refetch[keep < c_min].sum())
+        costs.n_misses = int(first.sum() + (keep >= c_min).sum())
+    else:
+        lam = env.lam_per_server()
+        mu = env.mu_per_server()
+        s = env.sizes()
+        it_s, sv_s = it[order], sv[order]
+        c_min = share * lam[sv_s] * s[it_s]
+        costs.transfer += float(c_min[first].sum())
+        keep = mu[sv_s[cont]] * s[it_s[cont]] * gaps[cont]
+        cm = c_min[cont]
+        refetch = np.minimum(keep, cm)
+        costs.transfer += float(refetch[keep >= cm].sum())
+        costs.caching += float(refetch[keep < cm].sum())
+        costs.n_misses = int(first.sum() + (keep >= cm).sum())
     costs.n_requests = trace.n_requests
     costs.n_item_requests = int(mask.sum())
-    costs.n_misses = int(first.sum() + (keep >= c_min).sum())
     return costs

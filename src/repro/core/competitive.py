@@ -17,7 +17,13 @@ import numpy as np
 
 from ..traces.loader import Trace
 from .cliques import CliquePartition
-from .cost import CostParams, competitive_bound, competitive_bound_corrected
+from .cost import (
+    CacheEnvironment,
+    CostParams,
+    competitive_bound,
+    competitive_bound_corrected,
+    competitive_bound_env,
+)
 from .engine import ReplayEngine
 
 
@@ -58,23 +64,47 @@ def adversarial_trace(
     return AdversarySetup(trace=trace, partition=part, S=S, omega=omega)
 
 
-def replay_adversary(setup: AdversarySetup, params: CostParams) -> tuple[float, float, float]:
-    """Returns (akpc_cost, opt_cost_model, corrected_bound).
+def replay_adversary(
+    setup: AdversarySetup,
+    params: CostParams,
+    env: CacheEnvironment | None = None,
+    cost_model="table1",
+) -> tuple[float, float, float]:
+    """Returns (akpc_cost, opt_cost_model, bound).
 
     Thm 2: the realised ratio equals the bound EXACTLY — for the bound that
     actually follows from the paper's case analysis (competitive_bound_
     corrected; the paper's printed closed form has an algebra slip, see
-    cost.py).
+    cost.py).  With a heterogeneous ``env`` the OPT model prices each
+    phase's packed transfer under the SAME cost model and the bound is the
+    max-over-servers generalisation ``competitive_bound_env``.
     """
     eng = ReplayEngine(setup.trace.n, setup.trace.m, params,
-                       caching_charge="requested", seed_new_cliques=False)
+                       caching_charge="requested", seed_new_cliques=False,
+                       env=env, cost_model=cost_model)
     eng.install_partition(setup.partition, now=0.0)
     eng.replay(setup.trace, clique_generator=None)
     akpc = eng.costs.total
     S = setup.S
-    per_phase_opt = (1.0 + (S - 1) * params.alpha) * params.lam
-    opt = per_phase_opt * setup.trace.n_requests
-    return akpc, opt, competitive_bound_corrected(S, setup.omega, params.alpha)
+    # resolved model name (so CostModel instances hit the same branch as
+    # their registry names); the Table-I closed form requires BOTH a
+    # homogeneous scenario and Table-I pricing — a custom model with a
+    # default env must still price OPT under its own hooks
+    homogeneous = env is None or env.homogeneous
+    if homogeneous and eng.model.name == "table1":
+        per_phase_opt = (1.0 + (S - 1) * params.alpha) * params.lam
+        opt = per_phase_opt * setup.trace.n_requests
+        bound = competitive_bound_corrected(S, setup.omega, params.alpha)
+    else:
+        tr = setup.trace
+        sizes = eng.env.sizes()
+        mask = tr.items >= 0
+        vols = np.where(mask, sizes[np.maximum(tr.items, 0)], 0.0).sum(axis=1)
+        opt = float(eng.model.transfer_cost_batch(
+            np.full(tr.n_requests, S, dtype=np.int64), vols,
+            tr.servers.astype(np.int64)).sum())
+        bound = competitive_bound_env(eng.env, S, setup.omega)
+    return akpc, opt, bound
 
 
 def per_request_ratio_check(

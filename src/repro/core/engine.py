@@ -56,6 +56,29 @@ bit-compatible with the historical per-request Python loop, and larger
 batches agree cost-for-cost up to float summation order (see
 tests/test_engine_batched.py).
 
+Pluggable cost models + per-server dt (PR 4, DESIGN.md §9)
+----------------------------------------------------------
+
+All cost arithmetic is routed through the three batched hooks of a
+registered :class:`~repro.core.cost.CostModel` bound to a
+:class:`~repro.core.cost.CacheEnvironment` (per-server prices, per-item
+sizes).  The default ``table1`` model performs the identical float ops of
+the historical inline ``CostParams`` formulas, so default replays stay
+bit-identical.
+
+Fact 1 above ("anchor = server of the most recent access") holds ONLY for a
+server-constant dt.  When the model's ``dt()`` varies per server
+(``heterogeneous``: dt_j = rho*lam_j/mu_j), an earlier access at a
+long-dt server can outlive a later access at a short-dt server, so anchor
+resolution becomes a RUNNING SEGMENT-MAX over the (clique)-sorted events of
+the written expiries ``t_e + dt_{j_e}`` (ties -> latest, matching the
+scalar ``touch`` rule's ``>=`` update), seeded per clique with the
+pre-batch ``(anchor, E[c, anchor])`` pair.  The scan is a vectorised
+Hillis-Steele doubling over the event axis (O(E log E)); the constant-dt
+lag fast path is preserved and picked automatically.  Fact 2 is unaffected:
+within one (clique, server) pair dt is constant, so pair expiries stay
+lags/segment-ends.
+
 The per-batch item->clique membership lookup is routed through
 ``repro.kernels.packed_lookup.clique_lookup``: the Pallas scalar-prefetch
 gather on TPU backends, a NumPy fancy-index everywhere else (including when
@@ -69,7 +92,13 @@ from typing import Callable, Iterable, Literal
 import numpy as np
 
 from .cliques import CliquePartition
-from .cost import CostBreakdown, CostParams
+from .cost import (
+    CacheEnvironment,
+    CostBreakdown,
+    CostModel,
+    CostParams,
+    get_cost_model,
+)
 
 CachingCharge = Literal["requested", "stored"]
 
@@ -179,14 +208,32 @@ class ReplayEngine:
         self,
         n: int,
         m: int,
-        params: CostParams,
+        params: CostParams | None = None,
         caching_charge: CachingCharge = "requested",
         seed_new_cliques: bool = True,
         lookup: Callable[[np.ndarray, np.ndarray], np.ndarray] | None = None,
+        env: CacheEnvironment | None = None,
+        cost_model: str | CostModel = "table1",
     ):
         self.n = n
         self.m = m
-        self.params = params
+        if env is None:
+            env = CacheEnvironment(n=n, m=m, params=params or CostParams())
+        elif (env.n, env.m) != (n, m):
+            raise ValueError(
+                f"environment shape ({env.n}, {env.m}) != engine ({n}, {m})")
+        elif params is not None and params != env.params:
+            # the bound cost model prices via env.params; a conflicting
+            # explicit params would be silently ignored otherwise
+            raise ValueError(
+                "params and env.params disagree; build the environment with "
+                "the same CostParams you pass to the engine/policy")
+        self.env = env
+        self.params = params if params is not None else env.params
+        self.model = get_cost_model(cost_model, env)
+        self._dt_arr = np.asarray(self.model.dt(), dtype=np.float64)
+        self._dt_const = m == 0 or bool((self._dt_arr == self._dt_arr[0]).all())
+        self._item_sizes = env.sizes() if self.model.uses_sizes else None
         self.caching_charge = caching_charge
         self.seed_new_cliques = seed_new_cliques
         if lookup is None:
@@ -196,8 +243,19 @@ class ReplayEngine:
                 lookup = _numpy_clique_lookup
         self._lookup = lookup
         self.state = CacheState.fresh(CliquePartition.singletons(n), m)
-        self._sizes = self.state.partition.sizes().astype(np.int64)
-        self.costs = CostBreakdown()
+        self._set_partition_caches(self.state.partition)
+        self.costs = CostBreakdown(model=self.model.name)
+
+    def _set_partition_caches(self, partition: CliquePartition) -> None:
+        """Per-clique member counts + (for size-aware models) total volumes."""
+        self._sizes = partition.sizes().astype(np.int64)
+        if self._item_sizes is None or partition.k == 0:
+            self._csizes = None
+            return
+        order = partition.member_order()
+        starts = np.zeros(partition.k, np.int64)
+        np.cumsum(self._sizes[:-1], out=starts[1:])
+        self._csizes = np.add.reduceat(self._item_sizes[order], starts)
 
     # ------------------------------------------------------------------
     # Alg. 1 Event 1 — install a freshly generated partition
@@ -226,7 +284,7 @@ class ReplayEngine:
         k = partition.k
         if k == 0:
             self.state = CacheState.fresh(partition, self.m)
-            self._sizes = np.zeros(0, dtype=np.int64)
+            self._set_partition_caches(partition)
             return
         E = np.zeros((k, self.m), dtype=np.float64)
         anchor = np.full(k, -1, dtype=np.int32)
@@ -272,10 +330,10 @@ class ReplayEngine:
                 seed_sum = np.add.reduceat(seed_counts[order], starts, axis=0)
                 js = np.argmax(seed_sum, axis=1)
                 rows = np.nonzero(need_seed)[0]
-                E[rows, js[rows]] = now + self.params.dt
+                E[rows, js[rows]] = now + self._dt_arr[js[rows]]
                 anchor[rows] = js[rows].astype(np.int32)
         self.state = CacheState(partition=partition, E=E, anchor=anchor, m=self.m)
-        self._sizes = partition.sizes().astype(np.int64)
+        self._set_partition_caches(partition)
 
     # ------------------------------------------------------------------
     # Alg. 5 — request handling, one batch at a time
@@ -293,13 +351,12 @@ class ReplayEngine:
         Rows whose items are all -1 are counted as (empty) requests but
         produce no events.
         """
-        p = self.params
         st = self.state
+        model = self.model
         items = np.atleast_2d(np.asarray(items))
         B = items.shape[0]
         servers = np.asarray(servers, dtype=np.int64).reshape(B)
         times = np.asarray(times, dtype=np.float64).reshape(B)
-        dt = p.dt
 
         self.costs.n_requests += B
         valid = items >= 0
@@ -323,26 +380,36 @@ class ReplayEngine:
         # --- dedupe (request, clique) pairs, keep |D_i ∩ c| counts --------
         # unique over packed keys sorts by (request, clique) — the order the
         # scalar loop visits cliques
-        ev_key, n_req = np.unique(flat_r * k + cl, return_counts=True)
+        if self._csizes is not None:
+            ev_key, inv, n_req = np.unique(
+                flat_r * k + cl, return_inverse=True, return_counts=True)
+            # summed sizes of the REQUESTED items of each event (|D_i ∩ c|)
+            req_size = np.bincount(
+                inv.reshape(-1), weights=self._item_sizes[items[valid]],
+                minlength=ev_key.shape[0])
+        else:
+            ev_key, n_req = np.unique(flat_r * k + cl, return_counts=True)
+            req_size = None
         ev_r = ev_key // k
         ev_c = ev_key % k
         ev_j = servers[ev_r]
         ev_t = times[ev_r]
         ne = ev_key.shape[0]
 
+        # per-event dt: scalar on the constant-dt fast path (bit-identical
+        # broadcasting), per-server gather otherwise
+        if self._dt_const:
+            dt_e: np.ndarray | float = (
+                float(self._dt_arr[0]) if self._dt_arr.size else self.params.dt
+            )
+        else:
+            dt_e = self._dt_arr[ev_j]
+
         # --- within-batch lags (module docstring, facts 1 and 2) ----------
-        # per clique: previous event's server == the anchor seen by this one
         o_c = np.argsort(ev_c, kind="stable")          # (clique, time) order
         cs = ev_c[o_c]
         first_c_s = np.ones(ne, dtype=bool)
         first_c_s[1:] = cs[1:] != cs[:-1]
-        prev_j_s = np.full(ne, -1, dtype=np.int64)
-        prev_j_s[1:] = ev_j[o_c][:-1]
-        prev_j_s[first_c_s] = -1
-        first_c = np.empty(ne, dtype=bool)
-        first_c[o_c] = first_c_s
-        prev_j = np.empty(ne, dtype=np.int64)
-        prev_j[o_c] = prev_j_s
 
         # per (clique, server): previous event's time -> pre-access expiry
         key_cj = ev_c * self.m + ev_j
@@ -358,38 +425,55 @@ class ReplayEngine:
         prev_cj_t = np.empty(ne, dtype=np.float64)
         prev_cj_t[o_cj] = prev_t_s
 
-        # --- aliveness + effective expiry ---------------------------------
-        E_before = np.where(first_cj, st.E[ev_c, ev_j], prev_cj_t + dt)
-        anchor_alive = np.where(
-            first_c,
-            (st.anchor[ev_c] == ev_j) & (E_before > 0.0),
-            prev_j == ev_j,
-        )
+        E_before = np.where(first_cj, st.E[ev_c, ev_j], prev_cj_t + dt_e)
+
+        # --- anchor resolution --------------------------------------------
+        if self._dt_const:
+            # fast path (fact 1): anchor == server of the clique's previous
+            # event; first events consult the pre-batch anchor array
+            prev_j_s = np.full(ne, -1, dtype=np.int64)
+            prev_j_s[1:] = ev_j[o_c][:-1]
+            prev_j_s[first_c_s] = -1
+            first_c = np.empty(ne, dtype=bool)
+            first_c[o_c] = first_c_s
+            prev_j = np.empty(ne, dtype=np.int64)
+            prev_j[o_c] = prev_j_s
+            anchor_alive = np.where(
+                first_c,
+                (st.anchor[ev_c] == ev_j) & (E_before > 0.0),
+                prev_j == ev_j,
+            )
+        else:
+            anchor_seen, final_lc, final_anchor = self._anchor_scan(
+                ev_t, ev_j, ev_c, dt_e, o_c, cs, first_c_s)
+            anchor_alive = (anchor_seen == ev_j) & (E_before > 0.0)
+
         fresh = E_before > ev_t
         alive = fresh | anchor_alive
         miss = ~alive
 
         # Alg. 6 ratcheting of lapsed anchor copies (+ lazily accounted rent)
         lapsed = alive & ~fresh
-        steps = np.ceil((ev_t - E_before) / dt)
-        r = E_before + steps * dt
-        r = np.where(r <= ev_t, r + dt, r)
+        steps = np.ceil((ev_t - E_before) / dt_e)
+        r = E_before + steps * dt_e
+        r = np.where(r <= ev_t, r + dt_e, r)
         e_eff = np.where(fresh, E_before, np.where(lapsed, r, ev_t))
-        rent = np.where(
-            lapsed, self._sizes[ev_c] * p.mu * (e_eff - E_before), 0.0
-        )
 
-        # --- costs --------------------------------------------------------
+        # --- costs (vectorized CostModel hooks) ---------------------------
         size = self._sizes[ev_c]
-        if p.cost_mode == "paper_literal":
-            packed_cost = p.alpha * p.mu * size
-        else:
-            packed_cost = (1.0 + (size - 1) * p.alpha) * p.lam
-        tc = np.where(miss, np.where(size > 1, packed_cost, size * p.lam), 0.0)
+        csize = self._csizes[ev_c] if self._csizes is not None else size
+        rate_stored = model.caching_rate(size, csize, ev_j)
+        rent = np.where(lapsed, rate_stored * (e_eff - E_before), 0.0)
 
-        n_charged = n_req if self.caching_charge == "requested" else size
-        dur = np.maximum((ev_t + dt) - np.maximum(e_eff, ev_t), 0.0)
-        ccost = n_charged * p.mu * dur
+        tc = np.where(miss, model.transfer_cost_batch(size, csize, ev_j), 0.0)
+
+        if self.caching_charge == "requested":
+            rate = model.caching_rate(
+                n_req, req_size if req_size is not None else n_req, ev_j)
+        else:
+            rate = rate_stored
+        dur = np.maximum((ev_t + dt_e) - np.maximum(e_eff, ev_t), 0.0)
+        ccost = rate * dur
 
         self.costs.transfer += float(tc.sum())
         self.costs.caching += float(ccost.sum())
@@ -399,26 +483,100 @@ class ReplayEngine:
         self.costs.n_hits += ne - nm
         self.costs.items_transferred += int(size[miss].sum())
 
-        # --- state update: segment-last expiry + last-access anchor -------
+        # --- state update: segment-last expiry + final anchor -------------
         last_cj_s = np.ones(ne, dtype=bool)
         last_cj_s[:-1] = kcs[1:] != kcs[:-1]
         li = o_cj[last_cj_s]
-        st.E[ev_c[li], ev_j[li]] = ev_t[li] + dt
+        if self._dt_const:
+            st.E[ev_c[li], ev_j[li]] = ev_t[li] + dt_e
+        else:
+            st.E[ev_c[li], ev_j[li]] = ev_t[li] + self._dt_arr[ev_j[li]]
 
-        last_c_s = np.ones(ne, dtype=bool)
-        last_c_s[:-1] = cs[1:] != cs[:-1]
-        lc = o_c[last_c_s]
-        # guard (matters only for out-of-order manual calls): keep the old
-        # anchor when its expiry still beats the batch's last touch
-        a_cur = st.anchor[ev_c[lc]].astype(np.int64)
-        a_E = st.E[ev_c[lc], np.maximum(a_cur, 0)]
-        upd = (a_cur < 0) | (ev_t[lc] + dt >= a_E)
-        st.anchor[ev_c[lc[upd]]] = ev_j[lc[upd]]
+        if self._dt_const:
+            last_c_s = np.ones(ne, dtype=bool)
+            last_c_s[:-1] = cs[1:] != cs[:-1]
+            lc = o_c[last_c_s]
+            # guard (matters only for out-of-order manual calls): keep the
+            # old anchor when its expiry still beats the batch's last touch
+            a_cur = st.anchor[ev_c[lc]].astype(np.int64)
+            a_E = st.E[ev_c[lc], np.maximum(a_cur, 0)]
+            upd = (a_cur < 0) | (ev_t[lc] + dt_e >= a_E)
+            st.anchor[ev_c[lc[upd]]] = ev_j[lc[upd]]
+        else:
+            st.anchor[final_lc] = final_anchor
 
         return BatchOutcome(
             req=ev_r, cliques=ev_c, n_req=n_req, miss=miss,
             transfer=tc, caching=ccost,
         )
+
+    def _anchor_scan(
+        self,
+        ev_t: np.ndarray,
+        ev_j: np.ndarray,
+        ev_c: np.ndarray,
+        dt_e: np.ndarray,
+        o_c: np.ndarray,
+        cs: np.ndarray,
+        first_c_s: np.ndarray,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-server-dt anchor resolution (general path, DESIGN.md §9).
+
+        Replays the scalar ``touch`` anchor recurrence — ``anchor := j`` iff
+        ``t + dt_j >= E[c, anchor]`` — as a segmented RUNNING ARGMAX (ties ->
+        latest) over the written expiries ``e = t + dt_j`` of each clique's
+        events, seeded with the pre-batch ``(anchor, E[c, anchor])``.
+        Returns ``(anchor_seen, final_cliques, final_anchor)``: the anchor
+        each event observes BEFORE it touches, and the post-batch anchor per
+        touched clique.
+        """
+        st = self.state
+        ne = ev_t.shape[0]
+        e_val = ev_t + dt_e
+        js = ev_j[o_c]
+        v = e_val[o_c].copy()
+        bidx = np.arange(ne, dtype=np.int64)
+        # Hillis-Steele doubling: after each round, (v, bidx)[i] is the max
+        # written expiry (and its latest writer) over a suffix window of the
+        # clique segment ending at i; segments are contiguous in `cs`, so
+        # rounds beyond the longest segment are no-ops — bound d by it
+        starts = np.nonzero(first_c_s)[0]
+        max_run = int(np.diff(np.append(starts, ne)).max())
+        d = 1
+        while d < max_run:
+            same = cs[d:] == cs[:-d]
+            take = same & (v[:-d] > v[d:])      # earlier wins only if STRICTLY
+            v[d:] = np.where(take, v[:-d], v[d:])
+            bidx[d:] = np.where(take, bidx[:-d], bidx[d:])
+            d <<= 1
+
+        # pre-batch seed per event (clique-constant): (anchor, E[c, anchor])
+        a0 = st.anchor[ev_c].astype(np.int64)
+        Ea0 = np.where(
+            a0 >= 0, st.E[ev_c, np.maximum(a0, 0)], -np.inf)
+        a0_s = a0[o_c]
+        Ea0_s = Ea0[o_c]
+
+        # anchor seen by event i = combine(seed, prefix up to i-1)
+        prev_v = np.full(ne, -np.inf)
+        prev_v[1:] = v[:-1]
+        prev_v[first_c_s] = -np.inf
+        prev_b = np.zeros(ne, dtype=np.int64)
+        prev_b[1:] = bidx[:-1]
+        prev_b[first_c_s] = 0
+        inbatch = ~first_c_s & (prev_v >= Ea0_s)
+        anchor_seen_s = np.where(inbatch, js[prev_b], a0_s)
+        anchor_seen = np.empty(ne, dtype=np.int64)
+        anchor_seen[o_c] = anchor_seen_s
+
+        # post-batch anchor per clique = combine(seed, full segment)
+        last_c_s = np.ones(ne, dtype=bool)
+        last_c_s[:-1] = cs[1:] != cs[:-1]
+        lasts = np.nonzero(last_c_s)[0]
+        win = v[lasts] >= Ea0_s[lasts]
+        final_anchor = np.where(
+            win, js[bidx[lasts]], a0_s[lasts]).astype(np.int32)
+        return anchor_seen, cs[lasts], final_anchor
 
     # ------------------------------------------------------------------
     # thin single-request wrapper (bit-compatible with the old scalar loop)

@@ -44,7 +44,7 @@ import numpy as np
 
 from .akpc import AKPCConfig
 from .cliques import CliquePartition, generate_cliques
-from .cost import CostBreakdown, CostParams
+from .cost import CacheEnvironment, CostBreakdown, CostModel, CostParams
 from .crm import WindowCRM, build_window_crm
 from .engine import CachingCharge, ReplayEngine
 
@@ -125,8 +125,17 @@ class BasePolicy:
     batch_size: int | None = None
     config: Any = None
 
-    def __init__(self, params: CostParams | None = None):
-        self.params = params or CostParams()
+    def __init__(
+        self,
+        params: CostParams | None = None,
+        env: CacheEnvironment | None = None,
+        cost_model: str | CostModel = "table1",
+    ):
+        if params is None:
+            params = env.params if env is not None else CostParams()
+        self.params = params
+        self.env = env                  # None = derive from the trace/catalog
+        self.cost_model = cost_model
         self.bind(0, 0)
 
     # -- lifecycle ---------------------------------------------------------
@@ -259,8 +268,10 @@ class NoPackingPolicy(BasePolicy):
         params: CostParams | None = None,
         caching_charge: CachingCharge = "requested",
         batch_size: int | None = None,
+        env: CacheEnvironment | None = None,
+        cost_model: str | CostModel = "table1",
     ):
-        super().__init__(params)
+        super().__init__(params, env=env, cost_model=cost_model)
         self.caching_charge = caching_charge
         self.batch_size = batch_size
 
@@ -280,8 +291,10 @@ class PackCache2Policy(BasePolicy):
         top_frac_of: str = "window",
         caching_charge: CachingCharge = "requested",
         batch_size: int | None = None,
+        env: CacheEnvironment | None = None,
+        cost_model: str | CostModel = "table1",
     ):
-        super().__init__(params)
+        super().__init__(params, env=env, cost_model=cost_model)
         self.t_cg = t_cg
         self.top_frac = top_frac
         self.top_frac_of = top_frac_of
@@ -316,9 +329,11 @@ class DPGreedyPolicy(BasePolicy):
         partition: CliquePartition | None = None,
         caching_charge: CachingCharge = "requested",
         batch_size: int | None = None,
+        env: CacheEnvironment | None = None,
+        cost_model: str | CostModel = "table1",
     ):
         self._user_partition = partition
-        super().__init__(params)
+        super().__init__(params, env=env, cost_model=cost_model)
         self.top_frac = top_frac
         self.top_frac_of = top_frac_of
         self.caching_charge = caching_charge
@@ -372,8 +387,23 @@ class AKPCPolicy(BasePolicy):
         pair_edges: Callable | None = None,
         kernels: str | None = None,
         name: str | None = None,
+        env: CacheEnvironment | None = None,
+        cost_model: str | CostModel = "table1",
     ):
         cfg = config or AKPCConfig()
+        if params is None and env is not None:
+            if cfg.params == CostParams():
+                # a default-params config is "params unset": the env's
+                # prices drive the algorithm too
+                params = env.params
+            elif cfg.params != env.params:
+                # a CUSTOMIZED config params must not be silently clobbered
+                # (nor silently ignored by the env-priced engine) — same
+                # loud contract as ReplayEngine/opt_lower_bound
+                raise ValueError(
+                    "config.params and env.params disagree; build the "
+                    "environment with the config's CostParams (or pass "
+                    "params= explicitly)")
         over = {
             "params": params,
             "t_cg": t_cg,
@@ -394,7 +424,7 @@ class AKPCPolicy(BasePolicy):
         self.config = cfg
         if name is not None:
             self.name = name
-        super().__init__(cfg.params)
+        super().__init__(cfg.params, env=env, cost_model=cost_model)
         self.t_cg = cfg.t_cg
         self.caching_charge = cfg.caching_charge
         self.seed_new_cliques = cfg.seed_new_cliques
@@ -510,12 +540,16 @@ def run_policy(
         policy = get_policy(policy)
     t0 = _time.perf_counter()
     policy.bind(trace.n, trace.m)
+    env = CacheEnvironment.resolve(
+        getattr(policy, "env", None), trace, policy.params)
     eng = ReplayEngine(
         trace.n,
         trace.m,
         policy.params,
         caching_charge=getattr(policy, "caching_charge", "requested"),
         seed_new_cliques=getattr(policy, "seed_new_cliques", True),
+        env=env,
+        cost_model=getattr(policy, "cost_model", "table1"),
     )
     part0 = (
         policy.initial_partition(trace)

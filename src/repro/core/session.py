@@ -34,9 +34,28 @@ import time as _time
 import numpy as np
 
 from .cliques import CliquePartition
-from .cost import CostBreakdown
+from .cost import CacheEnvironment, CostBreakdown
 from .engine import DEFAULT_BATCH_SIZE, CacheState, ReplayEngine
 from .policy import CachePolicy, RunResult, get_policy
+
+
+def _tag_to_array(tag: str) -> np.ndarray:
+    """Cost-model tag as a uint8 byte array (checkpoint stores numerics)."""
+    return np.frombuffer(tag.encode("utf-8"), dtype=np.uint8).copy()
+
+
+def _tag_from_array(a) -> str:
+    return bytes(np.asarray(a, dtype=np.uint8)).decode("utf-8")
+
+
+def _params_array(params) -> np.ndarray:
+    """Numeric CostParams fields in declared order (the snapshot wire
+    format shared by snapshot() and restore(); cost_mode travels as a
+    tag)."""
+    return np.array([
+        float(getattr(params, f.name))
+        for f in dataclasses.fields(params) if f.name != "cost_mode"
+    ])
 
 
 # ---------------------------------------------------------------------------
@@ -77,6 +96,7 @@ class CacheSession:
         *,
         trace=None,
         batch_size: int | None = None,
+        env: CacheEnvironment | None = None,
     ):
         if isinstance(policy, str):
             policy = get_policy(policy)
@@ -84,12 +104,22 @@ class CacheSession:
         self.n = n
         self.m = m
         policy.bind(n, m)
+        if env is None:
+            env = getattr(policy, "env", None)
+        if trace is not None:
+            # same resolution rule as the offline run_policy driver
+            env = CacheEnvironment.resolve(env, trace, policy.params)
+        elif env is None:
+            env = CacheEnvironment(n=n, m=m, params=policy.params)
+        self.env = env
         self.engine = ReplayEngine(
             n,
             m,
             policy.params,
             caching_charge=getattr(policy, "caching_charge", "requested"),
             seed_new_cliques=getattr(policy, "seed_new_cliques", True),
+            env=env,
+            cost_model=getattr(policy, "cost_model", "table1"),
         )
         part0 = policy.initial_partition(trace) if hasattr(
             policy, "initial_partition") else None
@@ -176,7 +206,22 @@ class CacheSession:
         return self.engine.costs
 
     def feed_trace(self, trace, chunk_size: int | None = None) -> CostBreakdown:
-        """Stream a full trace through :meth:`feed` in ``chunk_size`` pieces."""
+        """Stream a full trace through :meth:`feed` in ``chunk_size`` pieces.
+
+        Refuses a sized trace when this session's size-aware model would
+        price it with a size-less environment — that would silently break
+        the streaming == offline contract (the offline driver derives the
+        environment from the trace).  Construct the session with
+        ``trace=...`` or ``env=CacheEnvironment.from_trace(...)`` instead.
+        """
+        sizes = getattr(trace, "sizes", None)
+        if sizes is not None and self.engine.model.uses_sizes \
+                and self.engine.env.item_sizes is None:
+            # (an env with explicit sizes is a deliberate override and wins,
+            # exactly as in the offline driver)
+            raise ValueError(
+                "trace carries item sizes but the session's environment has "
+                "none; pass trace= or env= at construction")
         cs = int(chunk_size or self.batch_size)
         for s in range(0, trace.n_requests, cs):
             self.feed(
@@ -229,13 +274,34 @@ class CacheSession:
         st = self.engine.state
         c = self.engine.costs
         w_it, w_sv = self._window_arrays()
+        env = self.engine.env
         return {
             "engine": {
                 "E": st.E.copy(),
                 "anchor": st.anchor.copy(),
                 "partition": pack_partition(st.partition),
+                # cost-model tag + environment arrays: a restored session
+                # must price requests under the SAME scenario (restore
+                # validates; empty arrays = homogeneous defaults)
+                "cost_model": _tag_to_array(self.engine.model.name),
+                "model_config": self.engine.model.config_array(),
+                "env": {
+                    "lam_j": (env.lam_j.copy() if env.lam_j is not None
+                              else np.zeros(0)),
+                    "mu_j": (env.mu_j.copy() if env.mu_j is not None
+                             else np.zeros(0)),
+                    "item_sizes": (env.item_sizes.copy()
+                                   if env.item_sizes is not None
+                                   else np.zeros(0)),
+                    # scalar pricing knobs + the cost_mode tag
+                    "params": _params_array(env.params),
+                    "cost_mode": _tag_to_array(env.params.cost_mode),
+                },
                 "costs": {
-                    f.name: np.asarray(getattr(c, f.name))
+                    f.name: (
+                        _tag_to_array(c.model) if f.name == "model"
+                        else np.asarray(getattr(c, f.name))
+                    )
                     for f in dataclasses.fields(c)
                 },
             },
@@ -254,8 +320,52 @@ class CacheSession:
         }
 
     def restore(self, snap: dict) -> "CacheSession":
-        """Load a :meth:`snapshot`; the session resumes bit-identically."""
+        """Load a :meth:`snapshot`; the session resumes bit-identically.
+
+        Refuses snapshots taken under a different cost model or environment
+        than this session's — resuming them would silently mix accounting
+        regimes (same contract as :meth:`CostBreakdown.merge`).
+        """
         eng = snap["engine"]
+        if "cost_model" in eng:
+            want = _tag_from_array(eng["cost_model"])
+            have = self.engine.model.name
+            if want != have:
+                raise ValueError(
+                    f"snapshot was taken under cost model {want!r}, session "
+                    f"runs {have!r}")
+        env = self.engine.env
+        snap_env = eng.get("env", {})
+        if "cost_mode" in snap_env and \
+                _tag_from_array(snap_env["cost_mode"]) != env.params.cost_mode:
+            raise ValueError(
+                f"snapshot cost_mode {_tag_from_array(snap_env['cost_mode'])!r}"
+                f" != session {env.params.cost_mode!r}")
+        my_params = _params_array(env.params)
+        for key, mine in (
+            ("lam_j", env.lam_j), ("mu_j", env.mu_j),
+            ("item_sizes", env.item_sizes),
+            ("params", my_params),
+        ):
+            if key == "params" and "params" not in snap_env:
+                continue                              # pre-PR-4 snapshots
+            theirs = np.asarray(snap_env.get(key, np.zeros(0)))
+            mine = np.zeros(0) if mine is None else mine
+            if theirs.shape != mine.shape:
+                raise ValueError(
+                    f"snapshot environment mismatch on {key}: shape "
+                    f"{theirs.shape} vs {mine.shape}")
+            if not np.array_equal(theirs, mine):
+                raise ValueError(
+                    f"snapshot environment mismatch on {key}: values differ "
+                    f"(max abs diff {np.abs(theirs - mine).max():.3g})")
+        if "model_config" in eng:
+            theirs = np.asarray(eng["model_config"])
+            mine = self.engine.model.config_array()
+            if theirs.shape != mine.shape or not np.array_equal(theirs, mine):
+                raise ValueError(
+                    "snapshot was taken under a differently-configured "
+                    f"{self.engine.model.name!r} model (e.g. tier schedule)")
         part = unpack_partition(self.n, eng["partition"])
         E = np.array(eng["E"], dtype=np.float64, copy=True)
         anchor = np.array(eng["anchor"], dtype=np.int32, copy=True)
@@ -267,9 +377,13 @@ class CacheSession:
         self.engine.state = CacheState(
             partition=part, E=E, anchor=anchor, m=self.m
         )
-        self.engine._sizes = part.sizes().astype(np.int64)
+        self.engine._set_partition_caches(part)   # member counts + volumes
         c = self.engine.costs
         for f in dataclasses.fields(c):
+            if f.name == "model":
+                if "model" in eng["costs"]:           # pre-PR-4 snapshots
+                    c.model = _tag_from_array(eng["costs"]["model"])
+                continue
             cast = type(getattr(c, f.name))       # int or float field
             setattr(c, f.name, cast(np.asarray(eng["costs"][f.name]).item()))
         ses = snap["session"]

@@ -19,14 +19,21 @@ import dataclasses
 
 import numpy as np
 
-from ..core.cost import CostParams
+from ..core.cost import CacheEnvironment, CostParams
 from ..core.policy import get_policy
 from ..core.session import CacheSession
 
 
 class ShardStore:
     """Authoritative token store: ``n_shards`` shards of ``shard_tokens``
-    synthetic tokens each, grouped into ``n_domains`` mixture domains."""
+    synthetic tokens each, grouped into ``n_domains`` mixture domains.
+
+    Every shard also has an ON-WIRE byte size (``shard_bytes``): shards
+    compress differently, so the bytes actually transferred/rented vary per
+    shard even at a fixed token count.  ``item_sizes()`` exposes them as
+    mean-1 volumes for the size-aware cost models (PR 4) — the AKPC cache
+    then prices shard fetches by real bytes instead of "1 unit per shard".
+    """
 
     def __init__(self, n_shards: int = 256, shard_tokens: int = 4096,
                  vocab: int = 32000, n_domains: int = 8, seed: int = 0):
@@ -36,6 +43,20 @@ class ShardStore:
         self.n_domains = n_domains
         self.seed = seed
         self.domain_of = np.arange(n_shards) % n_domains
+        # simulated compression ratio in [0.35, 1.0] (domain-correlated:
+        # same-domain shards share vocabulary statistics)
+        rng = np.random.default_rng((seed, 0xB17E5))
+        dom_ratio = rng.uniform(0.45, 0.9, n_domains)
+        ratio = np.clip(
+            dom_ratio[self.domain_of] + rng.normal(0.0, 0.05, n_shards),
+            0.35, 1.0,
+        )
+        self.shard_bytes = (ratio * shard_tokens * 4).astype(np.int64)
+
+    def item_sizes(self) -> np.ndarray:
+        """(n_shards,) mean-1 volumes proportional to on-wire bytes."""
+        b = self.shard_bytes.astype(np.float64)
+        return b / b.mean()
 
     def read(self, shard_id: int) -> np.ndarray:
         """Deterministic synthetic shard: domain-dependent unigram mixture."""
@@ -75,7 +96,8 @@ class PackedDataPipeline:
 
     def __init__(self, store: ShardStore, *, batch_rows: int, seq_len: int,
                  host_id: int = 0, n_hosts: int = 1, seed: int = 0,
-                 params: CostParams | None = None, t_cg: float = 64.0):
+                 params: CostParams | None = None, t_cg: float = 64.0,
+                 cost_model: str = "table1"):
         self.store = store
         self.batch_rows = batch_rows
         self.seq_len = seq_len
@@ -84,13 +106,24 @@ class PackedDataPipeline:
         self.seed = seed
         self.step = 0
         params = params or CostParams(alpha=0.5, rho=4.0)
+        # shard byte-sizes are the environment's item sizes; the default
+        # table1 model ignores them (unit accounting, telemetry unchanged),
+        # cost_model="tiered"/"heterogeneous" prices fetches by real bytes
+        env = CacheEnvironment(
+            n=store.n_shards, m=n_hosts, params=params,
+            item_sizes=store.item_sizes(),
+        )
         self._make_session = lambda: CacheSession(
-            get_policy("akpc", params=params, t_cg=t_cg, top_frac=1.0),
+            get_policy("akpc", params=params, t_cg=t_cg, top_frac=1.0,
+                       cost_model=cost_model),
             store.n_shards,
             n_hosts,
+            env=env,
         )
         self.cache = self._make_session()
         self.params = params
+        self.env = env
+        self.cost_model = cost_model
         self.telemetry = PipelineTelemetry()
 
     # -- determinism / checkpointing ---------------------------------------

@@ -27,7 +27,7 @@ import dataclasses
 import numpy as np
 
 from ..core.baselines import run_no_packing
-from ..core.cost import CostParams
+from ..core.cost import CacheEnvironment, CostParams
 from ..core.policy import get_policy
 from ..core.session import CacheSession
 from ..traces.loader import Trace
@@ -48,18 +48,41 @@ class ExpertCacheStats:
 
 
 class ExpertCacheManager:
+    """``expert_bytes`` (n_experts,) — per-expert weight-table bytes (e.g.
+    ``w.nbytes`` per expert row, which differ across experts under
+    quantisation / LoRA deltas).  They become the cache environment's item
+    sizes so the size-aware cost models (``cost_model="heterogeneous"`` /
+    ``"tiered"``) price a miss by the bytes actually DMA'd and rent by the
+    HBM actually held; the default ``table1`` keeps the paper's unit
+    accounting."""
+
     def __init__(self, n_experts: int, n_hosts: int,
                  params: CostParams | None = None, t_cg: float = 32.0,
-                 d_max: int = 8):
+                 d_max: int = 8,
+                 expert_bytes: np.ndarray | None = None,
+                 cost_model: str = "table1"):
         self.n_experts = n_experts
         self.n_hosts = n_hosts
         self.params = params or CostParams(alpha=0.6, rho=4.0, omega=5)
         self.t_cg = t_cg
         self.d_max = d_max
+        self.cost_model = cost_model
+        sizes = None
+        if expert_bytes is not None:
+            b = np.asarray(expert_bytes, dtype=np.float64)
+            if b.shape != (n_experts,):
+                raise ValueError(
+                    f"expert_bytes must have shape ({n_experts},), "
+                    f"got {b.shape}")
+            sizes = b / b.mean()          # mean-1 volumes
+        self.env = CacheEnvironment(
+            n=n_experts, m=n_hosts, params=self.params, item_sizes=sizes)
         self.session = CacheSession(
-            get_policy("akpc", params=self.params, t_cg=t_cg, top_frac=1.0),
+            get_policy("akpc", params=self.params, t_cg=t_cg, top_frac=1.0,
+                       cost_model=cost_model),
             n_experts,
             n_hosts,
+            env=self.env,
         )
         self._hist: list[tuple[np.ndarray, int, float]] = []
         self._t = 0.0
@@ -153,7 +176,10 @@ class ExpertCacheManager:
                 times[i] = t
             tr = Trace(times=times, servers=servers, items=items,
                        n=self.n_experts, m=self.n_hosts, name="expert-trace")
-            nopack = run_no_packing(tr, self.params).total
+            # same environment + cost model as the AKPC session, so the
+            # saving is apples-to-apples
+            nopack = run_no_packing(tr, self.params, env=self.env,
+                                    cost_model=self.cost_model).total
         else:
             nopack = 0.0
         return ExpertCacheStats(

@@ -25,12 +25,28 @@ class Trace:
     n: int                      # catalog size |U|
     m: int                      # number of servers |S|
     name: str = "trace"
+    sizes: np.ndarray | None = None   # (n,) per-item sizes; None = unit items
 
     def __post_init__(self):
+        # real ValueErrors, not asserts: asserts vanish under `python -O`,
+        # silently letting malformed traces through in optimized runs
         R = self.times.shape[0]
-        assert self.servers.shape == (R,)
-        assert self.items.ndim == 2 and self.items.shape[0] == R
-        assert (np.diff(self.times) >= 0).all(), "trace must be time-sorted"
+        if self.servers.shape != (R,):
+            raise ValueError(
+                f"servers must have shape ({R},), got {self.servers.shape}")
+        if self.items.ndim != 2 or self.items.shape[0] != R:
+            raise ValueError(
+                f"items must have shape ({R}, d_max), got {self.items.shape}")
+        if not (np.diff(self.times) >= 0).all():
+            raise ValueError("trace must be time-sorted (non-decreasing times)")
+        if self.sizes is not None:
+            s = np.asarray(self.sizes, dtype=np.float64)
+            if s.shape != (self.n,):
+                raise ValueError(
+                    f"sizes must have shape ({self.n},), got {s.shape}")
+            if not np.all(np.isfinite(s)) or (s <= 0).any():
+                raise ValueError("sizes must be finite and positive")
+            object.__setattr__(self, "sizes", s)
 
     @property
     def n_requests(self) -> int:
@@ -48,6 +64,7 @@ class Trace:
             n=self.n,
             m=self.m,
             name=self.name,
+            sizes=self.sizes,
         )
 
     def head(self, k: int) -> "Trace":
@@ -69,11 +86,16 @@ class Trace:
             n=self.n,
             m=self.m,
             name=self.name,
+            # npz cannot hold None: unit-size traces save an empty array
+            sizes=self.sizes if self.sizes is not None else np.zeros(0),
         )
 
     @classmethod
     def load(cls, path: str) -> "Trace":
         z = np.load(path, allow_pickle=False)
+        sizes = None
+        if "sizes" in z.files and z["sizes"].size:     # pre-sizes npz compat
+            sizes = z["sizes"]
         return cls(
             times=z["times"],
             servers=z["servers"],
@@ -81,6 +103,7 @@ class Trace:
             n=int(z["n"]),
             m=int(z["m"]),
             name=str(z["name"]),
+            sizes=sizes,
         )
 
 

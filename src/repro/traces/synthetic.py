@@ -52,6 +52,12 @@ class SynthConfig:
     # Real CDN edge nodes serve geographically clustered preferences [17-19].
     server_affinity: int = 0
     p_affinity_escape: float = 0.1   # P(session ignores the server preference)
+    # per-item sizes (PR 4 CostModel axis): "unit" keeps the paper's
+    # unit-size items (Trace.sizes = None); "lognormal" draws mean-1
+    # lognormal volumes with log-std size_sigma; "pareto" a heavy tail
+    # (think mixed episode lengths / track bitrates)
+    size_dist: str = "unit"          # "unit" | "lognormal" | "pareto"
+    size_sigma: float = 0.75         # lognormal log-std / pareto tail shape
 
     def bundle_size_range(self) -> tuple[int, int]:
         return (4, 10) if self.kind == "netflix" else (8, 20)
@@ -96,6 +102,20 @@ def paper_trace_batches(
 ) -> TraceBatches:
     """Table-II trace as padded batch tensors for the vectorised engine."""
     return batch_tensors(paper_trace(kind, n_requests=n_requests, seed=seed), batch_size)
+
+
+def _item_sizes(cfg: SynthConfig, rng: np.random.Generator) -> np.ndarray | None:
+    """Per-item volumes for the size-aware cost models (mean ~1)."""
+    if cfg.size_dist == "unit":
+        return None
+    if cfg.size_dist == "lognormal":
+        sig = cfg.size_sigma
+        return np.exp(rng.normal(-0.5 * sig**2, sig, cfg.n_items))
+    if cfg.size_dist == "pareto":
+        a = max(1.0 + 1.0 / max(cfg.size_sigma, 1e-6), 1.05)
+        raw = 1.0 + rng.pareto(a, cfg.n_items)       # Lomax + 1, support >= 1
+        return raw / raw.mean()
+    raise ValueError(f"unknown size_dist: {cfg.size_dist!r}")
 
 
 def _zipf_choice(rng: np.random.Generator, n: int, s: float, size: int) -> np.ndarray:
@@ -198,6 +218,9 @@ def synth_trace(cfg: SynthConfig) -> Trace:
 
     # --- sort by time, truncate -------------------------------------------
     order = np.argsort(times, kind="stable")[: cfg.n_requests]
+    # sizes come from a DERIVED rng so the request stream is identical across
+    # size_dist settings (same seed -> same requests, only sizes differ)
+    sizes = _item_sizes(cfg, np.random.default_rng((cfg.seed, 0x517E)))
     return Trace(
         times=times[order],
         servers=servers[order],
@@ -205,4 +228,5 @@ def synth_trace(cfg: SynthConfig) -> Trace:
         n=cfg.n_items,
         m=cfg.n_servers,
         name=f"{cfg.kind}-synth-s{cfg.seed}",
+        sizes=sizes,
     )

@@ -1,0 +1,586 @@
+"""Cost-model laws + replay parity for the pluggable CostModel layer (PR 4).
+
+Four contract groups:
+
+* REGISTRY + LAWS — for every registered model on a grid of environments:
+  packed <= unpacked whenever alpha <= 1, costs non-negative, monotone in
+  size and duration, and the batched hooks equal the per-event scalar path.
+* TABLE1 BIT-COMPAT — a frozen per-request scalar oracle written against the
+  pre-PR ``CostParams`` formulas reproduces the engine's ``table1`` replay
+  EXACTLY at batch_size=1 (the engine's scalar-order guarantee) and at 1e-9
+  under default batching, on the fig5-style paper trace grid.
+* PER-SERVER-DT PARITY — the heterogeneous model's batched replay (general
+  segment-max anchor path) matches a per-request scalar oracle at 1e-9 for
+  every chunking the session tests exercise (1, 7, 4096, ragged).
+* BREAKDOWN/TRACE HYGIENE — CostBreakdown.merge refuses cross-model sums;
+  Trace validation raises ValueError (not bare asserts).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CacheEnvironment,
+    CacheSession,
+    CostBreakdown,
+    CostParams,
+    competitive_bound_corrected,
+    competitive_bound_env,
+    get_cost_model,
+    get_policy,
+    list_cost_models,
+    run_policy,
+)
+from repro.core.cliques import CliquePartition
+from repro.core.engine import ReplayEngine
+from repro.traces import SynthConfig, Trace, paper_trace, synth_trace
+
+MODELS = ("table1", "tiered", "heterogeneous")
+
+
+def make_env(n=24, m=6, alpha=0.8, rho=1.0, price_sigma=0.0, size_sigma=0.0,
+             seed=0):
+    return CacheEnvironment.skewed(
+        n, m, CostParams(alpha=alpha, rho=rho),
+        price_sigma=price_sigma, size_sigma=size_sigma, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_lists_shipped_models():
+    names = list_cost_models()
+    for required in MODELS:
+        assert required in names
+    with pytest.raises(KeyError):
+        get_cost_model("nope_not_a_model")
+
+
+def test_unbound_model_raises():
+    one = np.ones(1, dtype=np.int64)
+    for name in MODELS:
+        m = get_cost_model(name)
+        with pytest.raises(RuntimeError):
+            m.dt()
+        with pytest.raises(RuntimeError):
+            m.transfer_cost_batch(one, np.ones(1), one * 0)
+        with pytest.raises(RuntimeError):
+            m.caching_rate(one, np.ones(1), one * 0)
+
+
+def test_akpc_config_plus_env_uses_env_params():
+    """A config's untouched default params must not clash with an explicit
+    env (env.params drives the algorithm unless params= is passed)."""
+    from repro.core import AKPCConfig
+
+    tr = _sized_trace(1000)
+    env = CacheEnvironment.skewed(tr.n, tr.m, CostParams(alpha=0.5),
+                                  price_sigma=0.5, seed=1)
+    res = run_policy(get_policy(
+        "akpc", config=AKPCConfig(t_cg=0.73, top_frac=1.0), env=env,
+        cost_model="heterogeneous"), tr)
+    assert res.costs.model == "heterogeneous"
+    assert res.config.params == env.params
+    # ...but a CUSTOMIZED config params conflicting with env is refused
+    with pytest.raises(ValueError):
+        get_policy("akpc",
+                   config=AKPCConfig(params=CostParams(alpha=0.3), t_cg=0.73),
+                   env=env)
+
+
+def test_engine_rejects_conflicting_params_and_env():
+    """Explicit params that disagree with env.params must not be silently
+    ignored (the model prices via env.params)."""
+    env = CacheEnvironment(n=8, m=2, params=CostParams(alpha=0.8))
+    with pytest.raises(ValueError):
+        ReplayEngine(8, 2, CostParams(alpha=0.3), env=env)
+    ReplayEngine(8, 2, CostParams(alpha=0.8), env=env)      # equal: fine
+
+
+def test_shared_model_instance_is_copied_on_rebind():
+    """One CostModel instance across two engines must not repoint the first
+    engine's pricing arrays."""
+    e1 = make_env(price_sigma=0.5, seed=1)
+    e2 = make_env(price_sigma=0.5, seed=2)
+    m = get_cost_model("heterogeneous", e1)
+    dt1 = m.dt().copy()
+    m2 = get_cost_model(m, e2)
+    assert m2 is not m
+    assert np.array_equal(m.dt(), dt1)          # original still on env 1
+    assert not np.array_equal(m2.dt(), dt1)
+
+
+def test_skewed_axes_are_independent():
+    """Sweeping price_sigma must not move the item sizes (and vice versa)."""
+    a = CacheEnvironment.skewed(12, 4, price_sigma=0.0, size_sigma=0.75, seed=0)
+    b = CacheEnvironment.skewed(12, 4, price_sigma=0.5, size_sigma=0.75, seed=0)
+    assert np.array_equal(a.item_sizes, b.item_sizes)
+    c = CacheEnvironment.skewed(12, 4, price_sigma=0.5, size_sigma=0.0, seed=0)
+    assert np.array_equal(b.lam_j, c.lam_j) and np.array_equal(b.mu_j, c.mu_j)
+
+
+def test_run_policy_threads_trace_sizes_into_price_only_env():
+    """Offline driver fills a size-less env from the trace — and matches
+    streaming, which does the same when given the trace."""
+    tr = _sized_trace(2000)
+    params = CostParams()
+    mk = lambda: get_policy(
+        "akpc", params=params, t_cg=0.73, top_frac=1.0,
+        env=CacheEnvironment.skewed(tr.n, tr.m, params, price_sigma=1.0,
+                                    seed=4),
+        cost_model="heterogeneous")
+    off = run_policy(mk(), tr)
+    assert off.costs.model == "heterogeneous"
+    sized_env = CacheEnvironment.from_trace(
+        tr, params, lam_j=mk().env.lam_j, mu_j=mk().env.mu_j)
+    explicit = run_policy(get_policy(
+        "akpc", params=params, t_cg=0.73, top_frac=1.0, env=sized_env,
+        cost_model="heterogeneous"), tr)
+    assert off.costs.as_dict() == explicit.costs.as_dict()
+    sess = CacheSession(mk(), tr.n, tr.m, trace=tr)
+    sess.feed_trace(tr, chunk_size=333)
+    assert np.isclose(sess.costs.total, off.costs.total, rtol=1e-9)
+
+
+def test_environment_validation():
+    with pytest.raises(ValueError):
+        CacheEnvironment(n=4, m=2, lam_j=np.ones(3))          # wrong shape
+    with pytest.raises(ValueError):
+        CacheEnvironment(n=4, m=2, mu_j=np.array([1.0, -1.0]))  # negative
+    with pytest.raises(ValueError):
+        CacheEnvironment(n=4, m=2, item_sizes=np.zeros(4))      # zero sizes
+
+
+# ---------------------------------------------------------------------------
+# model laws (every registered model, environment grid)
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 12), st.floats(0.05, 1.0),
+       st.floats(0.0, 1.0), st.floats(0.0, 1.0), st.integers(0, 5))
+@settings(max_examples=12)
+def test_packed_leq_unpacked_and_nonneg(p, alpha, psig, ssig, server):
+    env = make_env(alpha=alpha, price_sigma=psig, size_sigma=ssig, seed=p)
+    for name in MODELS:
+        model = get_cost_model(name, env)
+        sizes = env.sizes()[:p]
+        packed = model.transfer_cost(p, packed=True, sizes=sizes, server=server)
+        unpacked = model.transfer_cost(p, packed=False, sizes=sizes,
+                                       server=server)
+        assert packed >= 0.0 and unpacked >= 0.0, name
+        assert packed <= unpacked + 1e-9 * max(1.0, unpacked), name
+        assert model.caching_cost(p, 1.0, sizes=sizes, server=server) >= 0.0
+
+
+@given(st.floats(0.1, 5.0), st.floats(0.1, 5.0), st.floats(0.05, 4.0),
+       st.integers(0, 5))
+@settings(max_examples=12)
+def test_monotone_in_size_and_duration(v1, dv, dur, server):
+    env = make_env(price_sigma=0.7, size_sigma=0.5, seed=3)
+    for name in MODELS:
+        model = get_cost_model(name, env)
+        j = np.array([server], dtype=np.int64)
+        one = np.array([1], dtype=np.int64)
+        lo = model.transfer_cost_batch(one, np.array([v1]), j)[0]
+        hi = model.transfer_cost_batch(one, np.array([v1 + dv]), j)[0]
+        assert hi >= lo - 1e-12, name              # transfer monotone in size
+        r_lo = model.caching_rate(one, np.array([v1]), j)[0]
+        r_hi = model.caching_rate(one, np.array([v1 + dv]), j)[0]
+        assert r_hi >= r_lo - 1e-12, name          # rent monotone in size
+        c1 = model.caching_cost(1, dur, sizes=np.array([v1]), server=server)
+        c2 = model.caching_cost(1, 2.0 * dur, sizes=np.array([v1]),
+                                server=server)
+        assert c2 >= c1 - 1e-12, name              # rent monotone in duration
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_batched_hooks_equal_scalar_path(name):
+    """transfer_cost_batch/caching_rate of E events == E singleton calls."""
+    env = make_env(n=40, m=8, price_sigma=0.9, size_sigma=0.8, seed=11)
+    model = get_cost_model(name, env)
+    rng = np.random.default_rng(5)
+    E = 64
+    counts = rng.integers(1, 6, E)
+    sizes = rng.uniform(0.2, 8.0, E)
+    servers = rng.integers(0, env.m, E)
+    tb = model.transfer_cost_batch(counts, sizes, servers)
+    rb = model.caching_rate(counts, sizes, servers)
+    for e in range(E):
+        one = model.transfer_cost_batch(
+            counts[e : e + 1], sizes[e : e + 1], servers[e : e + 1])
+        assert one.shape == (1,) and one[0] == tb[e]
+        rone = model.caching_rate(
+            counts[e : e + 1], sizes[e : e + 1], servers[e : e + 1])
+        assert rone[0] == rb[e]
+
+
+def test_table1_matches_costparams_formulas():
+    """The table1 model IS the pre-PR CostParams arithmetic."""
+    for mode in ("consistent", "paper_literal"):
+        p = CostParams(lam=1.7, mu=0.6, rho=2.0, alpha=0.45, cost_mode=mode)
+        env = CacheEnvironment(n=10, m=4, params=p)
+        model = get_cost_model("table1", env)
+        assert np.all(model.dt() == p.dt)
+        for k in range(0, 8):
+            assert model.transfer_cost(k, packed=True) == \
+                p.transfer_cost(k, packed=True)
+            assert model.transfer_cost(k, packed=False) == \
+                p.transfer_cost(k, packed=False)
+            assert model.caching_cost(k, 1.3) == p.caching_cost(k, 1.3)
+
+
+def test_tiered_default_is_table1_on_unit_sizes():
+    """Table I == the alpha-linear special case of the tiered model."""
+    env = CacheEnvironment(n=10, m=3, params=CostParams(alpha=0.8))
+    t1 = get_cost_model("table1", env)
+    td = get_cost_model("tiered", env)
+    for k in range(1, 9):
+        assert math.isclose(td.transfer_cost(k, packed=True),
+                            t1.transfer_cost(k, packed=True), rel_tol=1e-12)
+        assert math.isclose(td.transfer_cost(k, packed=False),
+                            t1.transfer_cost(k, packed=False), rel_tol=1e-12)
+
+
+def test_tiered_rejects_convex_schedules():
+    env = CacheEnvironment(n=4, m=2)
+    with pytest.raises(ValueError):
+        get_cost_model("tiered", env, breaks=(1.0,), rates=(0.5, 1.0))
+    with pytest.raises(ValueError):
+        get_cost_model("tiered", env, breaks=(2.0, 1.0), rates=(1, 1, 1))
+
+
+# ---------------------------------------------------------------------------
+# per-request scalar oracle (frozen Alg. 5/6 with per-server dt)
+# ---------------------------------------------------------------------------
+def fixed_partition(n: int, w: int = 4) -> CliquePartition:
+    return CliquePartition.from_cliques(
+        n, [tuple(range(i, min(i + w, n))) for i in range(0, n, w)])
+
+
+def oracle_replay(trace, env, model_name, part, caching_charge="requested"):
+    """Per-request Python replay of Alg. 5/6.  For ``table1`` all arithmetic
+    goes through the PRE-PR ``CostParams`` formulas; other models use their
+    scalar hooks.  Returns a plain dict of the cost accumulators + state."""
+    model = get_cost_model(model_name, env)
+    params = env.params
+    dt = model.dt()
+    s_item = env.sizes()
+    cnt = np.array([len(c) for c in part.cliques], dtype=np.int64)
+    csz = np.array([s_item[list(c)].sum() for c in part.cliques])
+    E = np.zeros((part.k, env.m))
+    anchor = np.full(part.k, -1, dtype=np.int64)
+    T = C = RENT = 0.0
+    n_miss = 0
+
+    def rate(nc, sz, j):
+        if model_name == "table1":
+            return nc * params.mu                      # pre-PR formula
+        return float(model.caching_rate(
+            np.array([nc]), np.array([sz]), np.array([j]))[0])
+
+    def transfer(c, j):
+        if model_name == "table1":                     # pre-PR formula
+            return params.transfer_cost(int(cnt[c]), packed=cnt[c] > 1)
+        return float(model.transfer_cost_batch(
+            cnt[c : c + 1], csz[c : c + 1], np.array([j]))[0])
+
+    for i in range(trace.n_requests):
+        t = float(trace.times[i])
+        j = int(trace.servers[i])
+        ds = trace.items[i][trace.items[i] >= 0]
+        if ds.size == 0:
+            continue
+        cls, counts = np.unique(part.clique_of[ds], return_counts=True)
+        # per-request partial sums, merged into the accumulators afterwards
+        # — the engine's float summation order (tc.sum() per handle_batch)
+        t_r = c_r = rent_r = 0.0
+        for c, nreq in zip(cls.tolist(), counts.tolist()):
+            dtj = float(dt[j])
+            e = float(E[c, j])
+            fresh = e > t
+            anch = anchor[c] == j and e > 0.0
+            if fresh:
+                e_eff = e
+            elif anch:                                 # Alg. 6 ratchet
+                steps = np.ceil((t - e) / dtj)
+                r = e + steps * dtj
+                if r <= t:
+                    r += dtj
+                e_eff = r
+                rent_r += rate(int(cnt[c]), float(csz[c]), j) * (e_eff - e)
+            else:                                      # miss
+                e_eff = t
+                t_r += transfer(c, j)
+                n_miss += 1
+            if caching_charge == "requested":
+                rq = float(s_item[ds[part.clique_of[ds] == c]].sum())
+                rr = rate(nreq, rq, j)
+            else:
+                rr = rate(int(cnt[c]), float(csz[c]), j)
+            c_r += rr * max((t + dtj) - max(e_eff, t), 0.0)
+            E[c, j] = t + dtj
+            if anchor[c] < 0 or t + dtj >= E[c, anchor[c]]:
+                anchor[c] = j
+        T += t_r
+        C += c_r
+        RENT += rent_r
+    return dict(transfer=T, caching=C, keepalive_rent=RENT,
+                n_misses=n_miss, E=E, anchor=anchor)
+
+
+def _sized_trace(n_requests=5000, m=9, seed=3, size_dist="lognormal"):
+    return synth_trace(SynthConfig(
+        kind="netflix", n_items=48, n_servers=m, n_requests=n_requests,
+        t_max=24.0, bundle_cover=1.0, bundle_zipf=0.7, seed=seed,
+        size_dist=size_dist))
+
+
+@pytest.mark.parametrize("kind", ["netflix", "spotify"])
+def test_table1_replay_bit_identical_to_costparams_oracle(kind):
+    """fig5 trace grid: engine(table1, batch_size=1) == the pre-PR scalar
+    CostParams replay EXACTLY; default batching at 1e-9."""
+    tr = paper_trace(kind, n_requests=4000)
+    env = CacheEnvironment.from_trace(tr, CostParams())
+    part = fixed_partition(tr.n)
+    want = oracle_replay(tr, env, "table1", part)
+
+    eng = ReplayEngine(tr.n, tr.m, env.params, env=env, cost_model="table1")
+    eng.install_partition(part, now=0.0)
+    eng.replay(tr, batch_size=1)
+    assert eng.costs.transfer == want["transfer"]          # bit-for-bit
+    assert eng.costs.caching == want["caching"]
+    assert eng.costs.keepalive_rent == want["keepalive_rent"]
+    assert eng.costs.n_misses == want["n_misses"]
+    assert np.array_equal(eng.state.E, want["E"])
+    assert np.array_equal(eng.state.anchor, want["anchor"])
+
+    batched = ReplayEngine(tr.n, tr.m, env.params, env=env, cost_model="table1")
+    batched.install_partition(part, now=0.0)
+    batched.replay(tr)
+    for f in ("transfer", "caching", "keepalive_rent"):
+        assert np.isclose(getattr(batched.costs, f), want[f], rtol=1e-9)
+
+
+def test_default_run_is_table1_bit_for_bit():
+    """cost_model='table1' + explicit env == the undecorated default."""
+    tr = _sized_trace(4000)       # has sizes; table1 must ignore them
+    pol_a = get_policy("akpc", params=CostParams(), t_cg=0.73, top_frac=1.0)
+    pol_b = get_policy("akpc", params=CostParams(), t_cg=0.73, top_frac=1.0,
+                       env=CacheEnvironment.from_trace(tr, CostParams()),
+                       cost_model="table1")
+    a = run_policy(pol_a, tr).costs.as_dict()
+    b = run_policy(pol_b, tr).costs.as_dict()
+    assert a == b
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 4096, "ragged"])
+def test_heterogeneous_replay_matches_scalar_oracle(chunk):
+    """Per-server-dt batched replay == scalar oracle at 1e-9 for every
+    chunking the session tests exercise."""
+    tr = _sized_trace()
+    params = CostParams()
+    skew = CacheEnvironment.skewed(tr.n, tr.m, params, price_sigma=0.9, seed=7)
+    env = CacheEnvironment(n=tr.n, m=tr.m, params=params,
+                           lam_j=skew.lam_j, mu_j=skew.mu_j,
+                           item_sizes=tr.sizes)
+    part = fixed_partition(tr.n)
+    want = oracle_replay(tr, env, "heterogeneous", part)
+
+    pol = get_policy("dp_greedy", params=params, partition=part,
+                     env=env, cost_model="heterogeneous")
+    sess = CacheSession(pol, tr.n, tr.m)
+    assert not sess.engine._dt_const            # the general path is live
+    if chunk == "ragged":
+        sizes = [1, 3, 13, 77, 501, 2048]
+        pos = k = 0
+        while pos < tr.n_requests:
+            cs = sizes[k % len(sizes)]
+            k += 1
+            sess.feed(tr.items[pos:pos + cs], tr.servers[pos:pos + cs],
+                      tr.times[pos:pos + cs])
+            pos += cs
+    else:
+        sess.feed_trace(tr, chunk_size=chunk)
+    for f in ("transfer", "caching", "keepalive_rent"):
+        assert np.isclose(getattr(sess.costs, f), want[f],
+                          rtol=1e-9, atol=1e-9), f
+    assert sess.costs.n_misses == want["n_misses"]
+    assert np.allclose(sess.engine.state.E, want["E"], rtol=1e-9)
+    assert np.array_equal(sess.engine.state.anchor, want["anchor"])
+
+
+def test_heterogeneous_streaming_matches_offline_windowed():
+    """AKPC with T_CG windows under the heterogeneous model: any chunking
+    reproduces the offline driver (same contract as the table1 session
+    tests, now on the general anchor path)."""
+    tr = _sized_trace(6000)
+    params = CostParams()
+    env = CacheEnvironment(
+        n=tr.n, m=tr.m, params=params,
+        lam_j=CacheEnvironment.skewed(tr.n, tr.m, params, 0.8, seed=2).lam_j,
+        item_sizes=tr.sizes)
+    mk = lambda: get_policy("akpc", params=params, t_cg=0.73, top_frac=1.0,
+                            env=env, cost_model="heterogeneous")
+    off = run_policy(mk(), tr)
+    sess = CacheSession(mk(), tr.n, tr.m)
+    sess.feed_trace(tr, chunk_size=509)
+    for f in ("transfer", "caching", "keepalive_rent"):
+        assert np.isclose(getattr(sess.costs, f), getattr(off.costs, f),
+                          rtol=1e-9)
+    assert sess.costs.n_misses == off.costs.n_misses
+
+
+def test_feed_trace_refuses_dropped_sizes():
+    """A size-aware session built without the trace's sizes must refuse the
+    sized trace instead of silently pricing unit items (streaming would
+    diverge from the offline driver)."""
+    tr = _sized_trace(500)
+    pol = get_policy("akpc", params=CostParams(), t_cg=0.73, top_frac=1.0,
+                     cost_model="heterogeneous")
+    sess = CacheSession(pol, tr.n, tr.m)          # env derived WITHOUT sizes
+    with pytest.raises(ValueError):
+        sess.feed_trace(tr, chunk_size=100)
+    ok = CacheSession(
+        get_policy("akpc", params=CostParams(), t_cg=0.73, top_frac=1.0,
+                   cost_model="heterogeneous"),
+        tr.n, tr.m, trace=tr)                     # from_trace picks up sizes
+    ok.feed_trace(tr, chunk_size=100)
+    off = run_policy(
+        get_policy("akpc", params=CostParams(), t_cg=0.73, top_frac=1.0,
+                   cost_model="heterogeneous"), tr)
+    assert np.isclose(ok.costs.total, off.costs.total, rtol=1e-9)
+
+
+def test_heterogeneous_snapshot_roundtrip_and_model_guard():
+    tr = _sized_trace(3000)
+    params = CostParams()
+    env = CacheEnvironment.skewed(tr.n, tr.m, params, price_sigma=0.7,
+                                  size_sigma=0.4, seed=9)
+    mk = lambda cm="heterogeneous": CacheSession(
+        get_policy("akpc", params=params, t_cg=0.73, top_frac=1.0,
+                   env=env, cost_model=cm), tr.n, tr.m)
+    half = tr.n_requests // 2
+    a = mk()
+    a.feed(tr.items[:half], tr.servers[:half], tr.times[:half])
+    snap = a.snapshot()
+    b = mk().restore(snap)
+    for s in (a, b):
+        s.feed(tr.items[half:], tr.servers[half:], tr.times[half:])
+    assert a.costs.as_dict() == b.costs.as_dict()
+    assert a.costs.model == "heterogeneous"
+    assert np.array_equal(a.engine.state.E, b.engine.state.E)
+    # a session priced under a different model must refuse the snapshot
+    with pytest.raises(ValueError):
+        mk("table1").restore(snap)
+
+
+def test_restore_refuses_different_pricing_scenario():
+    """Same model name but different CostParams (or tier schedule) is a
+    different accounting scenario — restore must refuse it."""
+    tr = _sized_trace(400)
+    mk = lambda p: CacheSession(
+        get_policy("akpc", params=p, t_cg=0.73, top_frac=1.0), tr.n, tr.m)
+    a = mk(CostParams(alpha=0.9, lam=5.0))
+    a.feed(tr.items[:200], tr.servers[:200], tr.times[:200])
+    snap = a.snapshot()
+    with pytest.raises(ValueError):
+        mk(CostParams(alpha=0.5, lam=1.0)).restore(snap)
+    mk(CostParams(alpha=0.9, lam=5.0)).restore(snap)        # same: fine
+
+
+def test_opt_lower_bound_rejects_unsupported_models():
+    from repro.core import opt_lower_bound
+
+    tr = _sized_trace(300)
+    with pytest.raises(ValueError):
+        opt_lower_bound(tr, CostParams(), cost_model="tiered")
+    opt_lower_bound(tr, CostParams(), cost_model="heterogeneous")
+
+
+def test_opt_lower_bound_table1_ignores_env_prices_like_the_model():
+    """table1 pricing ignores env prices, so its lower bound must too —
+    otherwise a priced env inflates the 'bound' above achievable costs."""
+    from repro.core import opt_lower_bound, run_no_packing
+
+    tr = _sized_trace(2000)
+    p = CostParams()
+    env = CacheEnvironment(n=tr.n, m=tr.m, params=p,
+                           lam_j=np.full(tr.m, 5.0), mu_j=np.full(tr.m, 5.0))
+    lb = opt_lower_bound(tr, p, env=env, cost_model="table1").total
+    actual = run_no_packing(tr, p, env=env, cost_model="table1").total
+    assert lb <= actual
+    assert lb == opt_lower_bound(tr, p).total      # same as homogeneous
+
+
+# ---------------------------------------------------------------------------
+# competitive bound generalisation
+# ---------------------------------------------------------------------------
+def test_bound_env_reduces_to_corrected():
+    env = CacheEnvironment(n=10, m=4, params=CostParams(alpha=0.8, rho=1.0))
+    for S in (1, 2, 5):
+        for omega in (2, 5):
+            assert math.isclose(
+                competitive_bound_env(env, S, omega),
+                competitive_bound_corrected(S, omega, 0.8), rel_tol=1e-12)
+
+
+def test_bound_env_grows_with_size_skew():
+    p = CostParams(alpha=0.8)
+    flat = CacheEnvironment(n=10, m=4, params=p)
+    skewed = CacheEnvironment(n=10, m=4, params=p,
+                              item_sizes=np.linspace(0.5, 2.0, 10))
+    assert competitive_bound_env(skewed, 3, 5) > competitive_bound_env(flat, 3, 5)
+
+
+# ---------------------------------------------------------------------------
+# breakdown + trace hygiene
+# ---------------------------------------------------------------------------
+def test_merge_rejects_cross_model_breakdowns():
+    a = CostBreakdown(transfer=1.0, model="table1")
+    b = CostBreakdown(transfer=2.0, model="heterogeneous")
+    with pytest.raises(ValueError):
+        a.merge(b)
+    c = CostBreakdown(transfer=2.0, caching=3.0, n_requests=4, model="table1")
+    a.merge(c)
+    assert a.transfer == 3.0 and a.caching == 3.0 and a.n_requests == 4
+    assert a.model == "table1"
+
+
+def test_merge_sums_every_numeric_field():
+    kw = {f.name: 2 for f in dataclasses.fields(CostBreakdown)
+          if f.name != "model"}
+    a, b = CostBreakdown(**kw), CostBreakdown(**kw)
+    a.merge(b)
+    for f in dataclasses.fields(CostBreakdown):
+        if f.name != "model":
+            assert getattr(a, f.name) == 4
+
+
+def test_trace_validation_raises_valueerror():
+    t = np.array([0.0, 1.0])
+    sv = np.array([0, 1], dtype=np.int32)
+    it = np.zeros((2, 2), dtype=np.int32)
+    with pytest.raises(ValueError):
+        Trace(times=t, servers=sv[:1], items=it, n=4, m=2)      # bad servers
+    with pytest.raises(ValueError):
+        Trace(times=t, servers=sv, items=it[:1], n=4, m=2)      # bad items
+    with pytest.raises(ValueError):
+        Trace(times=t[::-1], servers=sv, items=it, n=4, m=2)    # unsorted
+    with pytest.raises(ValueError):
+        Trace(times=t, servers=sv, items=it, n=4, m=2,
+              sizes=np.array([1.0, 2.0]))                       # wrong shape
+    with pytest.raises(ValueError):
+        Trace(times=t, servers=sv, items=it, n=4, m=2,
+              sizes=np.array([1.0, 0.0, 1.0, 1.0]))             # zero size
+
+
+def test_trace_sizes_survive_save_load(tmp_path):
+    tr = _sized_trace(300)
+    assert tr.sizes is not None
+    path = str(tmp_path / "t.npz")
+    tr.save(path)
+    back = Trace.load(path)
+    assert np.array_equal(back.sizes, tr.sizes)
+    assert back.slice(10, 50).sizes is tr.sizes or \
+        np.array_equal(back.slice(10, 50).sizes, tr.sizes)
