@@ -62,6 +62,41 @@ def method_policies(params: CostParams, t_cg: float, top_frac: float) -> dict:
     }
 
 
+def _result_entry(res) -> dict:
+    """One method's payload entry from a RunResult (shared by the serial
+    run_methods and the sweep-backed run_method_grid, so both paths emit
+    the identical JSON shape)."""
+    entry = {
+        "total": res.total,
+        "transfer": res.costs.transfer,
+        "caching": res.costs.caching,
+        "seconds": round(res.wall_seconds, 2),
+    }
+    if (res.clique_sizes > 1).any():
+        entry["clique_sizes"] = np.bincount(res.clique_sizes).tolist()
+    return entry
+
+
+def _maybe_add_opt(out: dict, trace, params, env, cost_model, methods) -> None:
+    """Attach the OPT lower bound when requested and valid for the model."""
+    if methods is not None and "opt" not in methods:
+        return
+    from repro.core.baselines import OPT_BOUND_MODELS
+
+    if cost_model not in OPT_BOUND_MODELS:
+        # no valid lower bound of this form (e.g. tiered) — callers
+        # compare against no_packing instead
+        return
+    t0 = time.perf_counter()
+    costs = opt_lower_bound(trace, params, env=env, cost_model=cost_model)
+    out["opt"] = {
+        "total": costs.total,
+        "transfer": costs.transfer,
+        "caching": costs.caching,
+        "seconds": round(time.perf_counter() - t0, 2),
+    }
+
+
 def run_methods(trace, params: CostParams, methods=None, top_frac: float = 1.0,
                 env: CacheEnvironment | None = None,
                 cost_model: str = "table1"):
@@ -83,29 +118,64 @@ def run_methods(trace, params: CostParams, methods=None, top_frac: float = 1.0,
                        **kw),
             trace,
         )
-        out[name] = {
-            "total": res.total,
-            "transfer": res.costs.transfer,
-            "caching": res.costs.caching,
-            "seconds": round(res.wall_seconds, 2),
-        }
-        if (res.clique_sizes > 1).any():
-            out[name]["clique_sizes"] = np.bincount(res.clique_sizes).tolist()
-    if methods is None or "opt" in methods:
-        from repro.core.baselines import OPT_BOUND_MODELS
+        out[name] = _result_entry(res)
+    _maybe_add_opt(out, trace, params, env, cost_model, methods)
+    return out
 
-        if cost_model in OPT_BOUND_MODELS:
-            t0 = time.perf_counter()
-            costs = opt_lower_bound(trace, params, env=env,
-                                    cost_model=cost_model)
-            out["opt"] = {
-                "total": costs.total,
-                "transfer": costs.transfer,
-                "caching": costs.caching,
-                "seconds": round(time.perf_counter() - t0, 2),
-            }
-        # else: no valid lower bound of this form (e.g. tiered) — callers
-        # compare against no_packing instead
+
+def run_method_grid(grid: list[dict], backend: str | None = None) -> list[dict]:
+    """Sweep MANY (trace, params, scenario) points in ONE vmapped call.
+
+    Each grid entry takes the :func:`run_methods` keyword set
+    (``trace`` required; ``params``, ``methods``, ``top_frac``, ``env``,
+    ``cost_model`` optional) and each returned entry has the same
+    ``{method: {total, transfer, caching, seconds}}`` shape — so the fig
+    drivers swap a loop of ``run_methods`` calls for one
+    ``run_method_grid`` call without changing their payloads.
+
+    All policy replays go through :class:`repro.core.SweepEngine`:
+    scenarios sharing (trace x clique-gen hyperparameters) share one
+    host schedule, and every group replays as one vmapped device scan
+    (``REPRO_SWEEP_BACKEND=numpy`` restores the serial loop; it also
+    engages automatically when JAX is missing or a cost model has no JAX
+    formula).  OPT lower bounds are closed-form and stay host-side.
+    """
+    from repro.core import SweepEngine, SweepPoint
+    from repro.core.engine_jax import HAS_JAX, JAX_COST_MODELS
+
+    if backend is None:
+        backend = os.environ.get("REPRO_SWEEP_BACKEND", "")
+        backend = backend or ("jax" if HAS_JAX else "numpy")
+    if backend == "jax" and any(
+            g.get("cost_model", "table1") not in JAX_COST_MODELS
+            for g in grid):
+        backend = "numpy"
+
+    pts, slots, resolved = [], [], []
+    for gi, g in enumerate(grid):
+        trace = g["trace"]
+        params = g.get("params") or CostParams()
+        env = CacheEnvironment.resolve(g.get("env"), trace, params)
+        cost_model = g.get("cost_model", "table1")
+        methods = g.get("methods")
+        t_cg = t_cg_for(trace, params, env=env, cost_model=cost_model)
+        resolved.append((trace, params, env, cost_model, methods))
+        for name, kw in method_policies(
+                params, t_cg, g.get("top_frac", 1.0)).items():
+            if methods is not None and name not in methods:
+                continue
+            pts.append(SweepPoint(
+                name, trace,
+                dict(params=params, env=env, cost_model=cost_model, **kw)))
+            slots.append(gi)
+
+    res = SweepEngine(backend=backend).run(pts)
+    out: list[dict] = [{} for _ in grid]
+    for pt, gi, r in zip(pts, slots, res):
+        out[gi][pt.policy] = _result_entry(r)
+
+    for gi, (trace, params, env, cost_model, methods) in enumerate(resolved):
+        _maybe_add_opt(out[gi], trace, params, env, cost_model, methods)
     return out
 
 

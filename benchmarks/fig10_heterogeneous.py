@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import sys
 
-from .common import N_SWEEP, emit, get_trace, run_methods, save_json
+from .common import N_SWEEP, emit, get_trace, run_method_grid, run_methods, save_json
 from repro.core import CacheEnvironment, CostParams
 from repro.traces import SynthConfig, synth_trace
 
@@ -53,24 +53,30 @@ def env_for(trace, params: CostParams, price_sigma: float,
 
 
 def run_grid(n_requests: int, kind: str = "netflix") -> dict:
+    """The full (size_dist x price_sigma) grid as ONE sweep call (PR 5):
+    each scenario prices the heterogeneous model's per-server dt, so every
+    point runs the engine's general anchor path — vmapped on device."""
     params = CostParams()
     payload: dict = {"cost_model": COST_MODEL, "kind": kind,
                      "n_requests": n_requests, "grid": {}}
+    grid, keys = [], []
     for size_dist in SIZE_DISTS:
         tr = sized_trace(kind, n_requests, size_dist)
         for sigma in PRICE_SIGMAS:
-            env = env_for(tr, params, sigma)
-            res = run_methods(tr, params, methods=METHODS, env=env,
-                              cost_model=COST_MODEL)
-            key = f"{size_dist}/sigma={sigma}"
-            payload["grid"][key] = {
-                m: {"total": v["total"], "transfer": v["transfer"],
-                    "caching": v["caching"]}
-                for m, v in res.items()
-            }
-            payload["grid"][key]["akpc_vs_no_packing_saving_pct"] = round(
-                100.0 * (1.0 - res["akpc"]["total"]
-                         / res["no_packing"]["total"]), 2)
+            grid.append({"trace": tr, "params": params, "methods": METHODS,
+                         "env": env_for(tr, params, sigma),
+                         "cost_model": COST_MODEL})
+            keys.append(f"{size_dist}/sigma={sigma}")
+    results = run_method_grid(grid)
+    for key, res in zip(keys, results):
+        payload["grid"][key] = {
+            m: {"total": v["total"], "transfer": v["transfer"],
+                "caching": v["caching"]}
+            for m, v in res.items()
+        }
+        payload["grid"][key]["akpc_vs_no_packing_saving_pct"] = round(
+            100.0 * (1.0 - res["akpc"]["total"]
+                     / res["no_packing"]["total"]), 2)
     return payload
 
 

@@ -1,18 +1,31 @@
 """Fig. 5 — total cost of every method vs OPT on both traces (stacked
-transfer/caching components)."""
+transfer/caching components).
+
+Both traces' full method sets are replayed in ONE ``run_method_grid``
+sweep call (vmapped JAX scan backend; PR 5) instead of serial per-method
+replays.
+"""
 from __future__ import annotations
 
-from .common import N_REQUESTS, emit, get_trace, relative_to_opt, run_methods, save_json
+from .common import (
+    N_REQUESTS, emit, get_trace, relative_to_opt, run_method_grid, save_json,
+)
 from repro.core import CostParams
+
+KINDS = ("netflix", "spotify")
 
 
 def main() -> list[tuple]:
     params = CostParams()                     # Table II base values
+    # the paper's scenario == the registry's default "table1" model
+    grid = [
+        {"trace": get_trace(kind, N_REQUESTS), "params": params,
+         "cost_model": "table1"}
+        for kind in KINDS
+    ]
+    results = run_method_grid(grid)
     rows, payload = [], {}
-    for kind in ("netflix", "spotify"):
-        tr = get_trace(kind, N_REQUESTS)
-        # the paper's scenario == the registry's default "table1" model
-        res = run_methods(tr, params, cost_model="table1")
+    for kind, res in zip(KINDS, results):
         rel = relative_to_opt(res)
         payload[kind] = {"raw": res, "relative": rel, "cost_model": "table1"}
         for m, v in rel.items():

@@ -1,35 +1,45 @@
 """Fig. 6 — sensitivity to (a) discount factor alpha, (b) cost ratio
-rho = lambda/mu (the paper reuses the symbol gamma for this; we keep rho)."""
+rho = lambda/mu (the paper reuses the symbol gamma for this; we keep rho).
+
+The whole (trace x alpha + trace x rho) grid goes through ONE
+``run_method_grid`` sweep call (PR 5): the alpha axis shares a single
+clique-generation schedule per trace (alpha never enters the CGM), and
+every schedule group replays as one vmapped device scan.
+"""
 from __future__ import annotations
 
-import dataclasses
-
-from .common import N_SWEEP, emit, get_trace, relative_to_opt, run_methods, save_json
+from .common import (
+    N_SWEEP, emit, get_trace, relative_to_opt, run_method_grid, save_json,
+)
 from repro.core import CostParams
 
 ALPHAS = [0.6, 0.7, 0.8, 0.85, 0.9, 1.0]
 RHOS = [1.0, 2.0, 4.0, 6.0, 10.0]
 METHODS = ("no_packing", "packcache", "akpc", "opt")
+KINDS = ("netflix", "spotify")
 
 
 def main() -> list[tuple]:
-    rows, payload = [], {"alpha": {}, "rho": {}, "cost_model": "table1"}
-    for kind in ("netflix", "spotify"):
+    grid, keys = [], []
+    for kind in KINDS:
         tr = get_trace(kind, N_SWEEP)
         for a in ALPHAS:
-            res = run_methods(tr, CostParams(alpha=a), methods=METHODS,
-                              cost_model="table1")
-            rel = relative_to_opt(res)
-            payload["alpha"].setdefault(kind, {})[a] = rel
-            rows.append((f"fig6a/{kind}/alpha={a}", 0,
-                         ";".join(f"{m}={rel[m]}" for m in METHODS)))
+            grid.append({"trace": tr, "params": CostParams(alpha=a),
+                         "methods": METHODS, "cost_model": "table1"})
+            keys.append(("alpha", kind, a))
         for r in RHOS:
-            res = run_methods(tr, CostParams(rho=r), methods=METHODS,
-                              cost_model="table1")
-            rel = relative_to_opt(res)
-            payload["rho"].setdefault(kind, {})[r] = rel
-            rows.append((f"fig6b/{kind}/rho={r}", 0,
-                         ";".join(f"{m}={rel[m]}" for m in METHODS)))
+            grid.append({"trace": tr, "params": CostParams(rho=r),
+                         "methods": METHODS, "cost_model": "table1"})
+            keys.append(("rho", kind, r))
+    results = run_method_grid(grid)
+
+    rows, payload = [], {"alpha": {}, "rho": {}, "cost_model": "table1"}
+    for (axis, kind, val), res in zip(keys, results):
+        rel = relative_to_opt(res)
+        payload[axis].setdefault(kind, {})[val] = rel
+        tag = "fig6a" if axis == "alpha" else "fig6b"
+        rows.append((f"{tag}/{kind}/{axis}={val}", 0,
+                     ";".join(f"{m}={rel[m]}" for m in METHODS)))
     save_json("fig6_sensitivity", payload)
     emit(rows)
     return rows

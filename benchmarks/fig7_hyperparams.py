@@ -1,38 +1,47 @@
 """Fig. 7 — hyper-parameter sensitivity: (a) CRM threshold theta,
-(b) clique-approximation threshold gamma, (c) max clique size omega."""
+(b) clique-approximation threshold gamma, (c) max clique size omega.
+
+All three axes over both traces run as ONE ``run_method_grid`` sweep
+call (PR 5).  Unlike fig6, every point here changes the clique-generation
+module itself, so each point keeps its own host schedule — the win is the
+vmapped replay of the points that share static shapes.
+"""
 from __future__ import annotations
 
-from .common import N_SWEEP, emit, get_trace, relative_to_opt, run_methods, save_json
+from .common import (
+    N_SWEEP, emit, get_trace, relative_to_opt, run_method_grid, save_json,
+)
 from repro.core import CostParams
 
 THETAS = [0.05, 0.1, 0.15, 0.2, 0.3, 0.5]
 GAMMAS = [0.6, 0.7, 0.8, 0.85, 0.9, 1.0]
 OMEGAS = [2, 3, 5, 7, 10]
 METHODS = ("akpc", "akpc_base", "opt")
+KINDS = ("netflix", "spotify")
 
 
 def main() -> list[tuple]:
-    rows, payload = [], {"theta": {}, "gamma": {}, "omega": {}}
-    for kind in ("netflix", "spotify"):
+    grid, keys = [], []
+    for kind in KINDS:
         tr = get_trace(kind, N_SWEEP)
-        for th in THETAS:
-            rel = relative_to_opt(run_methods(
-                tr, CostParams(theta=th), methods=METHODS))
-            payload["theta"].setdefault(kind, {})[th] = rel
-            rows.append((f"fig7a/{kind}/theta={th}", 0,
-                         f"akpc={rel['akpc']};base={rel['akpc_base']}"))
-        for g in GAMMAS:
-            rel = relative_to_opt(run_methods(
-                tr, CostParams(gamma=g), methods=METHODS))
-            payload["gamma"].setdefault(kind, {})[g] = rel
-            rows.append((f"fig7b/{kind}/gamma={g}", 0,
-                         f"akpc={rel['akpc']};base={rel['akpc_base']}"))
-        for w in OMEGAS:
-            rel = relative_to_opt(run_methods(
-                tr, CostParams(omega=w), methods=METHODS))
-            payload["omega"].setdefault(kind, {})[w] = rel
-            rows.append((f"fig7c/{kind}/omega={w}", 0,
-                         f"akpc={rel['akpc']};base={rel['akpc_base']}"))
+        for axis, values, mk in (
+            ("theta", THETAS, lambda v: CostParams(theta=v)),
+            ("gamma", GAMMAS, lambda v: CostParams(gamma=v)),
+            ("omega", OMEGAS, lambda v: CostParams(omega=v)),
+        ):
+            for v in values:
+                grid.append({"trace": tr, "params": mk(v),
+                             "methods": METHODS, "cost_model": "table1"})
+                keys.append((axis, kind, v))
+    results = run_method_grid(grid)
+
+    rows, payload = [], {"theta": {}, "gamma": {}, "omega": {}}
+    tags = {"theta": "fig7a", "gamma": "fig7b", "omega": "fig7c"}
+    for (axis, kind, val), res in zip(keys, results):
+        rel = relative_to_opt(res)
+        payload[axis].setdefault(kind, {})[val] = rel
+        rows.append((f"{tags[axis]}/{kind}/{axis}={val}", 0,
+                     f"akpc={rel['akpc']};base={rel['akpc_base']}"))
     save_json("fig7_hyperparams", payload)
     emit(rows)
     return rows

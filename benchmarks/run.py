@@ -23,11 +23,13 @@ def main() -> None:
         kernel_bench,
         replay_bench,
         roofline_report,
+        sweep_bench,
         table1_cost_model,
     )
 
     suites = [
         ("replay", replay_bench),
+        ("sweep", sweep_bench),
         ("table1", table1_cost_model),
         ("fig5", fig5_cost_comparison),
         ("fig6", fig6_sensitivity),

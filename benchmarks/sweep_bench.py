@@ -1,0 +1,136 @@
+"""Vmapped sweep vs serial per-point replay on a fig6-style grid.
+
+The PR-5 acceptance benchmark: an (alpha x rho) sensitivity grid of AKPC
+points — the exact shape of benchmarks/fig6_sensitivity.py — replayed two
+ways on the same machine:
+
+* **serial**: the pre-PR-5 loop — one ``run_policy`` (NumPy engine) per
+  grid point, clique generation re-run every time;
+* **sweep**:  one ``SweepEngine`` call — points sharing (trace, CGM
+  hyperparameters) share a host schedule (every alpha row shares one
+  clique-generation pass per rho), and each schedule group replays as a
+  single vmapped ``jit``/``lax.scan`` on device.
+
+Cost parity at 1e-9 between the two paths is asserted for EVERY point
+before any timing is trusted.  Results land in
+``experiments/results/BENCH_sweep.json`` so the perf trajectory records
+both paths and the measured speedup.
+
+Env knobs:
+  REPRO_SWEEP_BENCH_REQUESTS   trace length per point   (default 150000)
+  REPRO_SWEEP_BENCH_ALPHAS     alpha-axis size          (default 64)
+  REPRO_SWEEP_BENCH_RHOS       rho-axis size            (default 4)
+
+``--smoke`` (CI): 60k-request trace, 32-point grid, parity check + the
+vmapped sweep must simply BEAT the serial loop (no 5x floor — CI runners
+are too noisy to gate on a ratio; the full run asserts >= 5x).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from repro.core import CostParams, SweepEngine, SweepPoint
+from repro.traces import paper_trace
+
+from .common import emit, save_json, t_cg_for
+
+INT_FIELDS = ("n_requests", "n_item_requests", "n_misses", "n_hits",
+              "items_transferred")
+FLOAT_FIELDS = ("transfer", "caching", "keepalive_rent", "total")
+
+
+def build_grid(trace, n_alphas: int, n_rhos: int) -> list[SweepPoint]:
+    """fig6-style grid: alpha x rho sensitivity of the proposed method."""
+    alphas = np.linspace(0.6, 1.0, n_alphas)
+    rhos = np.linspace(1.0, 6.0, n_rhos)
+    pts = []
+    for rho in rhos:
+        for alpha in alphas:
+            params = CostParams(alpha=float(alpha), rho=float(rho))
+            pts.append(SweepPoint(
+                "akpc", trace,
+                dict(params=params, t_cg=t_cg_for(trace, params),
+                     top_frac=1.0),
+                tag=f"alpha={alpha:.3f}/rho={rho:.2f}"))
+    return pts
+
+
+def assert_parity(pts, serial, swept) -> None:
+    for pt, a, b in zip(pts, serial, swept):
+        da, db = a.costs.as_dict(), b.costs.as_dict()
+        for f in INT_FIELDS:
+            assert da[f] == db[f], (pt.tag, f, da[f], db[f])
+        for f in FLOAT_FIELDS:
+            assert np.isclose(da[f], db[f], rtol=1e-9, atol=1e-9), \
+                (pt.tag, f, da[f], db[f])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI run: parity + sweep must beat serial")
+    args, _ = ap.parse_known_args()
+
+    if args.smoke:
+        n = int(os.environ.get("REPRO_SWEEP_BENCH_REQUESTS", "60000"))
+        n_alphas = int(os.environ.get("REPRO_SWEEP_BENCH_ALPHAS", "16"))
+        n_rhos = int(os.environ.get("REPRO_SWEEP_BENCH_RHOS", "2"))
+    else:
+        n = int(os.environ.get("REPRO_SWEEP_BENCH_REQUESTS", "150000"))
+        n_alphas = int(os.environ.get("REPRO_SWEEP_BENCH_ALPHAS", "64"))
+        n_rhos = int(os.environ.get("REPRO_SWEEP_BENCH_RHOS", "4"))
+
+    trace = paper_trace("netflix", n_requests=n, seed=0)
+    pts = build_grid(trace, n_alphas, n_rhos)
+
+    # -- serial baseline: the pre-PR-5 per-point loop, same machine --------
+    serial_eng = SweepEngine(backend="numpy")
+    t0 = time.perf_counter()
+    serial = serial_eng.run(pts)
+    t_serial = time.perf_counter() - t0
+
+    # -- vmapped sweep (cold: includes schedule build + XLA compile) -------
+    sweep_eng = SweepEngine(backend="jax")
+    t0 = time.perf_counter()
+    swept = sweep_eng.run(pts)
+    t_sweep = time.perf_counter() - t0
+
+    assert_parity(pts, serial, swept)
+    print(f"# parity check on {len(pts)} points: OK")
+
+    speedup = t_serial / t_sweep
+    emit([
+        (f"sweep/serial_{len(pts)}pts", int(t_serial / len(pts) * 1e6),
+         f"{t_serial:.2f}s total"),
+        (f"sweep/vmapped_{len(pts)}pts", int(t_sweep / len(pts) * 1e6),
+         f"{t_sweep:.2f}s total;{sweep_eng.last_n_schedules} schedules"),
+        ("sweep/speedup", round(speedup, 2), "x"),
+    ])
+    save_json("BENCH_sweep", {
+        "n_requests": n,
+        "grid": {"alphas": n_alphas, "rhos": n_rhos, "points": len(pts)},
+        "policy": "akpc",
+        "cost_model": "table1",
+        "serial_seconds": t_serial,
+        "sweep_seconds": t_sweep,
+        "speedup": speedup,
+        "n_schedules": sweep_eng.last_n_schedules,
+        "smoke": bool(args.smoke),
+        "points_per_second_serial": len(pts) / t_serial,
+        "points_per_second_sweep": len(pts) / t_sweep,
+    })
+    if args.smoke:
+        assert t_sweep < t_serial, (
+            f"vmapped sweep ({t_sweep:.2f}s) no faster than the serial "
+            f"loop ({t_serial:.2f}s)")
+    else:
+        assert speedup >= 5.0, \
+            f"vmapped sweep only {speedup:.1f}x faster than serial"
+
+
+if __name__ == "__main__":
+    main()

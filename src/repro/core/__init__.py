@@ -34,7 +34,16 @@ from .cost import (
     register_cost_model,
 )
 from .crm import WindowCRM, build_window_crm
-from .engine import DEFAULT_BATCH_SIZE, BatchOutcome, CacheState, ReplayEngine
+from .engine import (
+    DEFAULT_BATCH_SIZE,
+    BatchEvents,
+    BatchOutcome,
+    CacheState,
+    ReplayEngine,
+    batch_events,
+    match_partitions,
+)
+from .engine_jax import JAX_COST_MODELS, JaxReplayEngine, run_policy_jax
 from .policy import (
     AKPCPolicy,
     BasePolicy,
@@ -49,6 +58,7 @@ from .policy import (
     run_policy,
 )
 from .session import CacheSession, load_snapshot
+from .sweep import SweepEngine, SweepPoint, sweep_points
 
 __all__ = [
     "AKPCConfig",
@@ -65,7 +75,10 @@ __all__ = [
     "CostModel",
     "CostParams",
     "DEFAULT_BATCH_SIZE",
+    "BatchEvents",
     "HeterogeneousCostModel",
+    "JAX_COST_MODELS",
+    "JaxReplayEngine",
     "Table1CostModel",
     "TieredCostModel",
     "DPGreedyPolicy",
@@ -73,7 +86,13 @@ __all__ = [
     "PackCache2Policy",
     "ReplayEngine",
     "RunResult",
+    "SweepEngine",
+    "SweepPoint",
     "WindowCRM",
+    "batch_events",
+    "match_partitions",
+    "run_policy_jax",
+    "sweep_points",
     "adversarial_trace",
     "build_window_crm",
     "competitive_bound",

@@ -195,6 +195,189 @@ class BatchOutcome:
         return int(self.req.shape[0])
 
 
+@dataclasses.dataclass
+class BatchEvents:
+    """STATE-FREE event construction of one request batch.
+
+    Everything here is a pure function of (partition, batch requests) — no
+    cache state enters — which is what lets the JAX backend
+    (``core/engine_jax.py``) hoist the whole construction into a host-built
+    replay schedule and keep only the state recurrence on device.  The
+    arrays are exactly the intermediates ``handle_batch`` historically
+    computed inline, in the same NumPy op order (bit-compat contract).
+    """
+
+    ev_r: np.ndarray           # (e,) int64 request index within the batch
+    ev_c: np.ndarray           # (e,) int64 clique id
+    ev_j: np.ndarray           # (e,) int64 server of the event's request
+    ev_t: np.ndarray           # (e,) float64 request time
+    n_req: np.ndarray          # (e,) int64 |D_i ∩ c| multiplicity
+    req_size: np.ndarray | None  # (e,) float64 requested-member volume
+    # (clique)-sorted view: events grouped by clique, time order inside
+    o_c: np.ndarray            # (e,) argsort by clique (stable)
+    cs: np.ndarray             # (e,) ev_c[o_c]
+    first_c_s: np.ndarray      # (e,) bool segment starts in sorted order
+    last_c_s: np.ndarray       # (e,) bool segment ends in sorted order
+    # (clique, server)-sorted view
+    o_cj: np.ndarray           # (e,) argsort by (clique, server) (stable)
+    first_cj_s: np.ndarray     # (e,) bool pair-segment starts (sorted)
+    last_cj_s: np.ndarray      # (e,) bool pair-segment ends (sorted)
+    first_cj: np.ndarray       # (e,) bool first event of its pair (dense)
+    prev_cj_t: np.ndarray      # (e,) float64 previous same-pair event time
+    # constant-dt fast-path lags (module docstring fact 1)
+    first_c: np.ndarray        # (e,) bool first event of its clique (dense)
+    prev_j: np.ndarray         # (e,) int64 previous same-clique server
+    n_valid: int               # number of valid (non-padding) item slots
+
+    @property
+    def n_events(self) -> int:
+        return int(self.ev_c.shape[0])
+
+
+def batch_events(
+    clique_of: np.ndarray,
+    k: int,
+    m: int,
+    items: np.ndarray,
+    servers: np.ndarray,
+    times: np.ndarray,
+    lookup: Callable[[np.ndarray, np.ndarray], np.ndarray],
+    item_sizes: np.ndarray | None,
+) -> BatchEvents:
+    """Construct the deduplicated (request, clique) events of one batch.
+
+    ``items`` (B, d_max) int -1-padded, ``servers`` (B,), ``times`` (B,)
+    as in :meth:`ReplayEngine.handle_batch` (already atleast_2d/reshaped).
+    Performs the identical float/int NumPy ops the engine's inline
+    construction performed, in the same order.
+    """
+    B = items.shape[0]
+    valid = items >= 0
+    n_valid = int(valid.sum())
+    if n_valid == 0:
+        z64 = np.zeros(0, np.int64)
+        zf = np.zeros(0, np.float64)
+        zb = np.zeros(0, bool)
+        return BatchEvents(
+            ev_r=z64, ev_c=z64, ev_j=z64, ev_t=zf, n_req=z64,
+            req_size=zf if item_sizes is not None and k > 0 else None,
+            o_c=z64, cs=z64, first_c_s=zb, last_c_s=zb,
+            o_cj=z64, first_cj_s=zb, last_cj_s=zb,
+            first_cj=zb, prev_cj_t=zf, first_c=zb, prev_j=z64,
+            n_valid=0,
+        )
+
+    # --- items -> cliques (Pallas gather on TPU, numpy otherwise) ---------
+    flat_r = np.broadcast_to(np.arange(B)[:, None], items.shape)[valid]
+    cl = np.asarray(lookup(clique_of, items[valid]), dtype=np.int64)
+
+    # --- dedupe (request, clique) pairs, keep |D_i ∩ c| counts ------------
+    # unique over packed keys sorts by (request, clique) — the order the
+    # scalar loop visits cliques
+    if item_sizes is not None and k > 0:
+        ev_key, inv, n_req = np.unique(
+            flat_r * k + cl, return_inverse=True, return_counts=True)
+        # summed sizes of the REQUESTED items of each event (|D_i ∩ c|)
+        req_size = np.bincount(
+            inv.reshape(-1), weights=item_sizes[items[valid]],
+            minlength=ev_key.shape[0])
+    else:
+        ev_key, n_req = np.unique(flat_r * k + cl, return_counts=True)
+        req_size = None
+    ev_r = ev_key // k
+    ev_c = ev_key % k
+    ev_j = servers[ev_r]
+    ev_t = times[ev_r]
+    ne = ev_key.shape[0]
+
+    # --- within-batch lags (module docstring, facts 1 and 2) --------------
+    o_c = np.argsort(ev_c, kind="stable")          # (clique, time) order
+    cs = ev_c[o_c]
+    first_c_s = np.ones(ne, dtype=bool)
+    first_c_s[1:] = cs[1:] != cs[:-1]
+    last_c_s = np.ones(ne, dtype=bool)
+    last_c_s[:-1] = cs[1:] != cs[:-1]
+
+    # per (clique, server): previous event's time -> pre-access expiry
+    key_cj = ev_c * m + ev_j
+    o_cj = np.argsort(key_cj, kind="stable")
+    kcs = key_cj[o_cj]
+    first_cj_s = np.ones(ne, dtype=bool)
+    first_cj_s[1:] = kcs[1:] != kcs[:-1]
+    last_cj_s = np.ones(ne, dtype=bool)
+    last_cj_s[:-1] = kcs[1:] != kcs[:-1]
+    prev_t_s = np.zeros(ne, dtype=np.float64)
+    prev_t_s[1:] = ev_t[o_cj][:-1]
+    prev_t_s[first_cj_s] = 0.0
+    first_cj = np.empty(ne, dtype=bool)
+    first_cj[o_cj] = first_cj_s
+    prev_cj_t = np.empty(ne, dtype=np.float64)
+    prev_cj_t[o_cj] = prev_t_s
+
+    # constant-dt fast path lags (fact 1): previous same-clique server
+    prev_j_s = np.full(ne, -1, dtype=np.int64)
+    prev_j_s[1:] = ev_j[o_c][:-1]
+    prev_j_s[first_c_s] = -1
+    first_c = np.empty(ne, dtype=bool)
+    first_c[o_c] = first_c_s
+    prev_j = np.empty(ne, dtype=np.int64)
+    prev_j[o_c] = prev_j_s
+
+    return BatchEvents(
+        ev_r=ev_r, ev_c=ev_c, ev_j=ev_j, ev_t=ev_t, n_req=n_req,
+        req_size=req_size,
+        o_c=o_c, cs=cs, first_c_s=first_c_s, last_c_s=last_c_s,
+        o_cj=o_cj, first_cj_s=first_cj_s, last_cj_s=last_cj_s,
+        first_cj=first_cj, prev_cj_t=prev_cj_t,
+        first_c=first_c, prev_j=prev_j, n_valid=n_valid,
+    )
+
+
+def match_partitions(
+    old_partition: CliquePartition, new_partition: CliquePartition
+) -> tuple[np.ndarray, np.ndarray]:
+    """(matched, cand): which new cliques equal an old clique, and which.
+
+    State-free half of :meth:`ReplayEngine.install_partition` (shared with
+    the JAX schedule builder).  A new clique equals an old one iff all its
+    members map to one old clique of the same size.
+    """
+    k = new_partition.k
+    new_sizes = new_partition.sizes().astype(np.int64)
+    old_sizes = old_partition.sizes().astype(np.int64)
+    old_of = old_partition.clique_of
+    packed = new_partition.packed()                  # (k, w) -1 padded
+    if k == 0:
+        return np.zeros(0, bool), np.zeros(0, np.int64)
+    cand = old_of[packed[:, 0]].astype(np.int64)     # old clique of 1st member
+    same = (old_of[np.maximum(packed, 0)] == cand[:, None]) | (packed < 0)
+    matched = same.all(axis=1) & (old_sizes[cand] == new_sizes)
+    return matched, cand
+
+
+def window_seed_servers(
+    n: int,
+    m: int,
+    partition: CliquePartition,
+    window_items: np.ndarray,
+    window_servers: np.ndarray,
+) -> np.ndarray:
+    """(k,) the server that accessed each clique's members most during the
+    window (Alg. 1 line 5 seeding target).  State-free half of the
+    ``install_partition`` seed path."""
+    order = partition.member_order()
+    sizes = partition.sizes().astype(np.int64)
+    starts = np.zeros(partition.k, np.int64)
+    np.cumsum(sizes[:-1], out=starts[1:])
+    seed_counts = np.zeros((n, m), dtype=np.int64)
+    reps = (window_items >= 0).sum(axis=1)
+    srv = np.repeat(window_servers, reps)
+    itm = window_items[window_items >= 0]
+    np.add.at(seed_counts, (itm, srv), 1)
+    seed_sum = np.add.reduceat(seed_counts[order], starts, axis=0)
+    return np.argmax(seed_sum, axis=1)
+
+
 class ReplayEngine:
     """Replays a request trace against an evolving clique partition.
 
@@ -289,14 +472,10 @@ class ReplayEngine:
         E = np.zeros((k, self.m), dtype=np.float64)
         anchor = np.full(k, -1, dtype=np.int32)
         new_sizes = partition.sizes().astype(np.int64)
-        old_sizes = old.partition.sizes().astype(np.int64)
         old_of = old.partition.clique_of
 
         # -- set-equality match against the old partition ------------------
-        packed = partition.packed()                      # (k, w) -1 padded
-        cand = old_of[packed[:, 0]].astype(np.int64)     # old clique of 1st member
-        same = (old_of[np.maximum(packed, 0)] == cand[:, None]) | (packed < 0)
-        matched = same.all(axis=1) & (old_sizes[cand] == new_sizes)
+        matched, cand = match_partitions(old.partition, partition)
         E[matched] = old.E[cand[matched]]
         anchor[matched] = old.anchor[cand[matched]]
 
@@ -322,13 +501,8 @@ class ReplayEngine:
                 and need_seed.any()
             ):
                 # item -> per-server access counts over the window
-                seed_counts = np.zeros((self.n, self.m), dtype=np.int64)
-                reps = (window_items >= 0).sum(axis=1)
-                srv = np.repeat(window_servers, reps)
-                itm = window_items[window_items >= 0]
-                np.add.at(seed_counts, (itm, srv), 1)
-                seed_sum = np.add.reduceat(seed_counts[order], starts, axis=0)
-                js = np.argmax(seed_sum, axis=1)
+                js = window_seed_servers(
+                    self.n, self.m, partition, window_items, window_servers)
                 rows = np.nonzero(need_seed)[0]
                 E[rows, js[rows]] = now + self._dt_arr[js[rows]]
                 anchor[rows] = js[rows].astype(np.int32)
@@ -359,42 +533,24 @@ class ReplayEngine:
         times = np.asarray(times, dtype=np.float64).reshape(B)
 
         self.costs.n_requests += B
-        valid = items >= 0
-        n_valid = int(valid.sum())
-        self.costs.n_item_requests += n_valid
-        if n_valid == 0:
+        k = st.partition.k
+        ev = batch_events(
+            st.partition.clique_of, k, self.m, items, servers, times,
+            self._lookup, self._item_sizes if self._csizes is not None else None,
+        )
+        self.costs.n_item_requests += ev.n_valid
+        if ev.n_valid == 0:
             z = np.zeros(0)
             return BatchOutcome(
                 req=z.astype(np.int64), cliques=z.astype(np.int64),
                 n_req=z.astype(np.int64), miss=z.astype(bool),
                 transfer=z, caching=z,
             )
-
-        # --- items -> cliques (Pallas gather on TPU, numpy otherwise) -----
-        k = st.partition.k
-        flat_r = np.broadcast_to(np.arange(B)[:, None], items.shape)[valid]
-        cl = np.asarray(
-            self._lookup(st.partition.clique_of, items[valid]), dtype=np.int64
-        )
-
-        # --- dedupe (request, clique) pairs, keep |D_i ∩ c| counts --------
-        # unique over packed keys sorts by (request, clique) — the order the
-        # scalar loop visits cliques
-        if self._csizes is not None:
-            ev_key, inv, n_req = np.unique(
-                flat_r * k + cl, return_inverse=True, return_counts=True)
-            # summed sizes of the REQUESTED items of each event (|D_i ∩ c|)
-            req_size = np.bincount(
-                inv.reshape(-1), weights=self._item_sizes[items[valid]],
-                minlength=ev_key.shape[0])
-        else:
-            ev_key, n_req = np.unique(flat_r * k + cl, return_counts=True)
-            req_size = None
-        ev_r = ev_key // k
-        ev_c = ev_key % k
-        ev_j = servers[ev_r]
-        ev_t = times[ev_r]
-        ne = ev_key.shape[0]
+        ev_r, ev_c, ev_j, ev_t = ev.ev_r, ev.ev_c, ev.ev_j, ev.ev_t
+        n_req, req_size = ev.n_req, ev.req_size
+        ne = ev.n_events
+        o_c, cs, first_c_s = ev.o_c, ev.cs, ev.first_c_s
+        o_cj = ev.o_cj
 
         # per-event dt: scalar on the constant-dt fast path (bit-identical
         # broadcasting), per-server gather otherwise
@@ -405,43 +561,16 @@ class ReplayEngine:
         else:
             dt_e = self._dt_arr[ev_j]
 
-        # --- within-batch lags (module docstring, facts 1 and 2) ----------
-        o_c = np.argsort(ev_c, kind="stable")          # (clique, time) order
-        cs = ev_c[o_c]
-        first_c_s = np.ones(ne, dtype=bool)
-        first_c_s[1:] = cs[1:] != cs[:-1]
-
-        # per (clique, server): previous event's time -> pre-access expiry
-        key_cj = ev_c * self.m + ev_j
-        o_cj = np.argsort(key_cj, kind="stable")
-        kcs = key_cj[o_cj]
-        first_cj_s = np.ones(ne, dtype=bool)
-        first_cj_s[1:] = kcs[1:] != kcs[:-1]
-        prev_t_s = np.zeros(ne, dtype=np.float64)
-        prev_t_s[1:] = ev_t[o_cj][:-1]
-        prev_t_s[first_cj_s] = 0.0
-        first_cj = np.empty(ne, dtype=bool)
-        first_cj[o_cj] = first_cj_s
-        prev_cj_t = np.empty(ne, dtype=np.float64)
-        prev_cj_t[o_cj] = prev_t_s
-
-        E_before = np.where(first_cj, st.E[ev_c, ev_j], prev_cj_t + dt_e)
+        E_before = np.where(ev.first_cj, st.E[ev_c, ev_j], ev.prev_cj_t + dt_e)
 
         # --- anchor resolution --------------------------------------------
         if self._dt_const:
             # fast path (fact 1): anchor == server of the clique's previous
             # event; first events consult the pre-batch anchor array
-            prev_j_s = np.full(ne, -1, dtype=np.int64)
-            prev_j_s[1:] = ev_j[o_c][:-1]
-            prev_j_s[first_c_s] = -1
-            first_c = np.empty(ne, dtype=bool)
-            first_c[o_c] = first_c_s
-            prev_j = np.empty(ne, dtype=np.int64)
-            prev_j[o_c] = prev_j_s
             anchor_alive = np.where(
-                first_c,
+                ev.first_c,
                 (st.anchor[ev_c] == ev_j) & (E_before > 0.0),
-                prev_j == ev_j,
+                ev.prev_j == ev_j,
             )
         else:
             anchor_seen, final_lc, final_anchor = self._anchor_scan(
@@ -484,18 +613,14 @@ class ReplayEngine:
         self.costs.items_transferred += int(size[miss].sum())
 
         # --- state update: segment-last expiry + final anchor -------------
-        last_cj_s = np.ones(ne, dtype=bool)
-        last_cj_s[:-1] = kcs[1:] != kcs[:-1]
-        li = o_cj[last_cj_s]
+        li = o_cj[ev.last_cj_s]
         if self._dt_const:
             st.E[ev_c[li], ev_j[li]] = ev_t[li] + dt_e
         else:
             st.E[ev_c[li], ev_j[li]] = ev_t[li] + self._dt_arr[ev_j[li]]
 
         if self._dt_const:
-            last_c_s = np.ones(ne, dtype=bool)
-            last_c_s[:-1] = cs[1:] != cs[:-1]
-            lc = o_c[last_c_s]
+            lc = o_c[ev.last_c_s]
             # guard (matters only for out-of-order manual calls): keep the
             # old anchor when its expiry still beats the batch's last touch
             a_cur = st.anchor[ev_c[lc]].astype(np.int64)

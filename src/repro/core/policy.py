@@ -528,6 +528,7 @@ def run_policy(
     *,
     batch_size: int | None = None,
     progress: Callable[[int], None] | None = None,
+    backend: str = "numpy",
 ) -> RunResult:
     """Replay a full trace under ``policy`` and return the unified result.
 
@@ -535,7 +536,19 @@ def run_policy(
     with the whole trace, but runs through ``ReplayEngine.replay`` directly
     so the legacy ``run_*`` shims stay bit-identical to their pre-registry
     behaviour.
+
+    ``backend="jax"`` swaps the replay core for the device-resident
+    jit/scan engine (``repro.core.engine_jax``) — same RunResult, costs
+    equal at 1e-9 (tests/test_sweep.py); grids of runs are faster still
+    through :class:`repro.core.sweep.SweepEngine`.
     """
+    if backend == "jax":
+        from .engine_jax import run_policy_jax
+
+        return run_policy_jax(
+            policy, trace, batch_size=batch_size, progress=progress)
+    if backend != "numpy":
+        raise ValueError(f"unknown replay backend {backend!r}")
     if isinstance(policy, str):
         policy = get_policy(policy)
     t0 = _time.perf_counter()

@@ -97,7 +97,11 @@ class CacheSession:
         trace=None,
         batch_size: int | None = None,
         env: CacheEnvironment | None = None,
+        backend: str = "numpy",
     ):
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown replay backend {backend!r}")
+        self.backend = backend
         if isinstance(policy, str):
             policy = get_policy(policy)
         self.policy = policy
@@ -205,7 +209,8 @@ class CacheSession:
         self._wall += _time.perf_counter() - t0
         return self.engine.costs
 
-    def feed_trace(self, trace, chunk_size: int | None = None) -> CostBreakdown:
+    def feed_trace(self, trace, chunk_size: int | None = None,
+                   backend: str | None = None) -> CostBreakdown:
         """Stream a full trace through :meth:`feed` in ``chunk_size`` pieces.
 
         Refuses a sized trace when this session's size-aware model would
@@ -213,6 +218,14 @@ class CacheSession:
         the streaming == offline contract (the offline driver derives the
         environment from the trace).  Construct the session with
         ``trace=...`` or ``env=CacheEnvironment.from_trace(...)`` instead.
+
+        ``backend="jax"`` (or a session constructed with ``backend="jax"``)
+        replays the whole trace through the device-resident scan engine
+        (``repro.core.engine_jax``) and syncs the resulting state, costs
+        and T_CG window bookkeeping back into this session — mid-stream
+        continuation, :meth:`snapshot`/:meth:`restore` and later numpy
+        :meth:`feed` calls all behave as if the trace had been fed
+        chunk-by-chunk (costs equal at 1e-9, tests/test_sweep.py).
         """
         sizes = getattr(trace, "sizes", None)
         if sizes is not None and self.engine.model.uses_sizes \
@@ -222,6 +235,11 @@ class CacheSession:
             raise ValueError(
                 "trace carries item sizes but the session's environment has "
                 "none; pass trace= or env= at construction")
+        backend = backend or self.backend
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown replay backend {backend!r}")
+        if backend == "jax":
+            return self._feed_trace_jax(trace)
         cs = int(chunk_size or self.batch_size)
         for s in range(0, trace.n_requests, cs):
             self.feed(
@@ -229,6 +247,51 @@ class CacheSession:
                 trace.servers[s : s + cs],
                 trace.times[s : s + cs],
             )
+        return self.engine.costs
+
+    def _feed_trace_jax(self, trace) -> CostBreakdown:
+        """One device-scan replay of ``trace``, continuing this session's
+        open T_CG window and cache state (DESIGN.md §10)."""
+        from .engine_jax import JaxReplayEngine
+
+        R = trace.n_requests
+        if R == 0:
+            return self.engine.costs
+        # same contract as feed(): a Trace validates sortedness at
+        # construction, but duck-typed request containers may not
+        if (np.diff(trace.times) < 0).any() \
+                or float(trace.times[0]) < self._last_t:
+            raise ValueError(
+                "requests must be fed in non-decreasing time order")
+        t0 = _time.perf_counter()
+        windowed = self._t_cg is not None
+        if windowed and self._next_cg is None:
+            self._next_cg = float(trace.times[0]) + self._t_cg
+        jeng = JaxReplayEngine(engine=self.engine)
+        win_prefix = self._window_arrays() if windowed and self._win else None
+        jeng.replay(
+            trace,
+            clique_generator=self.policy.on_window if windowed else None,
+            t_cg=self._t_cg,
+            batch_size=self.batch_size,
+            next_cg0=self._next_cg if windowed else None,
+            win_prefix=win_prefix,
+        )
+        sched = jeng.last_schedule
+        if windowed:
+            if sched.next_cg is not None:
+                self._next_cg = sched.next_cg
+            if sched.boundary_hit:
+                self._win = []      # prefix was consumed by an Event 1
+            if sched.win_start < R:
+                self._win.append((
+                    np.array(trace.items[sched.win_start:], dtype=np.int32,
+                             copy=True),
+                    np.array(trace.servers[sched.win_start:], dtype=np.int32,
+                             copy=True),
+                ))
+        self._last_t = float(trace.times[-1])
+        self._wall += _time.perf_counter() - t0
         return self.engine.costs
 
     def _window_arrays(self) -> tuple[np.ndarray, np.ndarray]:

@@ -1,0 +1,299 @@
+"""Vmapped multi-scenario sweep engine over the JAX replay backend.
+
+The paper's headline results (Figs. 5-10) are cost curves swept over
+hyperparameter x cost-model x trace grids; PR 1-4 replayed every grid
+point serially.  :class:`SweepEngine` makes the SCENARIO the batch axis:
+
+1. every grid point is a :class:`SweepPoint` (policy + trace + pricing
+   scenario);
+2. points that share (trace, clique-generation hyperparameters, batch
+   size) share ONE host-built :class:`~repro.core.engine_jax.ReplaySchedule`
+   — an alpha sweep runs clique generation once, not once per alpha,
+   because the partition trajectory is a pure function of the trace and
+   the CGM knobs (never of prices or cache state, DESIGN.md §10);
+3. scenarios sharing a schedule are stacked along a leading axis (cost
+   spec + initial state) and replayed by ONE ``jax.vmap``'d call of the
+   compiled scan, with the schedule's event tensors shared UNBATCHED
+   across the lanes (``in_axes=None`` — no per-scenario copies);
+4. each point comes back as the same :class:`~repro.core.policy.RunResult`
+   the serial ``run_policy`` driver returns, cost-for-cost at 1e-9
+   (tests/test_sweep.py).
+
+``backend="numpy"`` degrades to the serial per-point loop (the honest
+baseline ``benchmarks/sweep_bench.py`` times against, and the fallback
+for cost models the JAX backend cannot express).  ``mesh=`` optionally
+shards the scenario axis of each stacked group over a device mesh
+(``repro.launch.mesh.make_sweep_mesh``) — a no-op on single-device hosts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from .cost import CacheEnvironment, get_cost_model
+from .policy import RunResult, get_policy, run_policy
+
+#: registry policies whose clique-generation trajectory is fully determined
+#: by (trace, t_cg, top_frac, top_frac_of, theta, gamma, omega, split/merge
+#: flags) — the key under which SweepEngine shares schedules.  Unknown /
+#: custom policies always get a private schedule.
+SHAREABLE_POLICIES = (
+    "no_packing", "packcache", "dp_greedy",
+    "akpc", "akpc_no_acm", "akpc_base",
+)
+
+
+@dataclasses.dataclass
+class SweepPoint:
+    """One grid point: a registered policy replayed over one scenario.
+
+    ``policy_kwargs`` are passed to :func:`~repro.core.policy.get_policy`
+    verbatim (``params``, ``t_cg``, ``top_frac``, ``env``, ``cost_model``,
+    ...); ``tag`` is an arbitrary caller label carried through to the
+    result order (results come back in input order regardless).
+    """
+
+    policy: str
+    trace: Any
+    policy_kwargs: dict = dataclasses.field(default_factory=dict)
+    batch_size: int | None = None
+    tag: str = ""
+
+
+def _cgm_key(policy) -> tuple:
+    """The clique-generation-relevant knobs of a registry policy."""
+    p = policy.params
+    cfg = getattr(policy, "config", None)
+    if cfg is not None:                     # AKPCPolicy variants
+        return (cfg.t_cg, cfg.top_frac, cfg.top_frac_of, cfg.enable_split,
+                cfg.enable_approx_merge, cfg.params.theta, cfg.params.gamma,
+                cfg.params.omega)
+    user_part = getattr(policy, "_user_partition", None)
+    return (policy.t_cg, getattr(policy, "top_frac", None),
+            getattr(policy, "top_frac_of", None), p.theta,
+            None if user_part is None else id(user_part))
+
+
+class SweepEngine:
+    """Replay a grid of scenarios with one vmapped device call per group."""
+
+    def __init__(
+        self,
+        backend: str = "jax",
+        batch_size: int | None = None,
+        mesh=None,
+    ):
+        if backend not in ("jax", "numpy"):
+            raise ValueError(f"unknown sweep backend {backend!r}")
+        if backend == "jax":
+            from . import engine_jax
+
+            if not engine_jax.HAS_JAX:
+                raise ImportError(
+                    "SweepEngine(backend='jax') needs jax; use "
+                    "backend='numpy'")
+        self.backend = backend
+        self.batch_size = batch_size
+        self.mesh = mesh
+        #: wall seconds of the most recent :meth:`run` (schedules + device)
+        self.last_wall = 0.0
+        #: schedule-dedup stats of the most recent run
+        self.last_n_schedules = 0
+
+    # ------------------------------------------------------------------
+    def run(
+        self,
+        points: Sequence[SweepPoint],
+        progress: Callable[[str], None] | None = None,
+    ) -> list[RunResult]:
+        t0 = _time.perf_counter()
+        if self.backend == "numpy":
+            out = [self._run_numpy(pt) for pt in points]
+            self.last_wall = _time.perf_counter() - t0
+            self.last_n_schedules = len(points)
+            return out
+        out = self._run_jax(points, progress)
+        self.last_wall = _time.perf_counter() - t0
+        return out
+
+    def _run_numpy(self, pt: SweepPoint) -> RunResult:
+        return run_policy(
+            get_policy(pt.policy, **pt.policy_kwargs), pt.trace,
+            batch_size=pt.batch_size or self.batch_size)
+
+    # ------------------------------------------------------------------
+    def _run_jax(self, points, progress) -> list[RunResult]:
+        from . import engine_jax as ej
+        from .cliques import CliquePartition
+        from .cost import CostBreakdown
+
+        # -- prepare points + share keys (no schedule builds yet) -----------
+        prepared = []
+        for pt in points:
+            policy = get_policy(pt.policy, **pt.policy_kwargs)
+            policy.bind(pt.trace.n, pt.trace.m)
+            env = CacheEnvironment.resolve(
+                getattr(policy, "env", None), pt.trace, policy.params)
+            model = get_cost_model(
+                getattr(policy, "cost_model", "table1"), env)
+            spec, statics = ej.cost_spec(model, env)
+            dt = spec["dt"]
+            const_dt = env.m == 0 or bool((dt == dt[0]).all())
+            bs = pt.batch_size or self.batch_size
+            seed = getattr(policy, "seed_new_cliques", True)
+            sizes_fp = (None if not model.uses_sizes
+                        else (id(env.item_sizes)
+                              if env.item_sizes is not None else "unit"))
+            if pt.policy in SHAREABLE_POLICIES:
+                skey = (id(pt.trace), pt.policy, _cgm_key(policy), bs,
+                        const_dt, model.uses_sizes, sizes_fp, seed)
+            else:
+                skey = object()          # never shared
+            prepared.append({
+                "pt": pt, "policy": policy, "spec": spec,
+                "statics": statics, "skey": skey,
+                "model": model, "env": env, "bs": bs, "seed": seed,
+                "charge": getattr(policy, "caching_charge", "requested"),
+            })
+
+        groups: dict = {}
+        for i, pr in enumerate(prepared):
+            groups.setdefault((pr["skey"], pr["statics"], pr["charge"]),
+                              []).append(i)
+
+        # -- build every distinct schedule on host --------------------------
+        schedules: dict = {}
+        for (skey, statics, charge), idxs in groups.items():
+            g0 = prepared[idxs[0]]
+            if skey in schedules:
+                continue
+            policy = g0["policy"]
+            part0 = (policy.initial_partition(g0["pt"].trace)
+                     if hasattr(policy, "initial_partition") else None)
+            if part0 is None:
+                part0 = CliquePartition.singletons(g0["pt"].trace.n)
+            gen = policy.on_window if policy.t_cg is not None else None
+            schedule = ej.build_schedule(
+                part0, g0["pt"].trace, gen, policy.t_cg,
+                model=g0["model"], env=g0["env"], batch_size=g0["bs"],
+                seed_new_cliques=g0["seed"],
+            )
+            schedules[skey] = {
+                "schedule": schedule,
+                "n_windows": getattr(policy, "n_windows", 0),
+                "cg_seconds": getattr(policy, "cg_seconds", 0.0),
+                "size_history": list(getattr(policy, "size_history", [])),
+                "clique_sizes": schedule.final_partition.sizes(),
+            }
+            if progress is not None:
+                progress(f"schedule built: {g0['pt'].policy} "
+                         f"({schedule.nb} steps x {schedule.ne} events)")
+
+        # -- align schedule shapes so each (n, m, path) cohort compiles the
+        # device scan exactly once, then dispatch every group WITHOUT
+        # blocking (XLA chews in the background, results collected below)
+        cohorts: dict = {}
+        for rec in schedules.values():
+            s = rec["schedule"]
+            cohorts.setdefault(
+                (s.n, s.m, s.const_dt, s.uses_sizes), []).append(rec)
+        for recs in cohorts.values():
+            dims_list = [ej.schedule_dims(r["schedule"]) for r in recs]
+            dims = {k: max(d[k] for d in dims_list) for k in dims_list[0]}
+            for r in recs:
+                r["schedule"] = ej.pad_schedule(r["schedule"], dims)
+
+        pending = []
+        for (skey, statics, charge), idxs in groups.items():
+            g0 = prepared[idxs[0]]
+            rec = schedules[skey]
+            schedule = rec["schedule"]
+            S = len(idxs)
+            spec = {
+                k: np.stack([prepared[i]["spec"][k] for i in idxs])
+                for k in g0["spec"]
+            }
+            E0 = np.zeros((S, schedule.n + 1, schedule.m), np.float64)
+            a0 = np.full((S, schedule.n + 1), -1, np.int32)
+            if S == 1:       # no vmap lane for a singleton group
+                spec = {k: v[0] for k, v in spec.items()}
+                E0, a0 = E0[0], a0[0]
+            if self.mesh is not None:
+                spec, E0, a0 = self._shard(spec, E0, a0, S)
+            t0 = _time.perf_counter()
+            _, _, acc = ej.run_schedule(
+                schedule, spec, statics, E0, a0, charge=charge, block=False)
+            pending.append((idxs, rec, acc, t0))
+        self.last_n_schedules = len(schedules)
+
+        # -- collect (blocks on the device results) -------------------------
+        results: list[RunResult | None] = [None] * len(prepared)
+        for idxs, rec, acc, t0 in pending:
+            acc = np.atleast_2d(np.asarray(acc))
+            wall = _time.perf_counter() - t0
+            if progress is not None:
+                progress(f"group of {len(idxs)} scenario(s) replayed "
+                         f"in {wall:.2f}s")
+            for lane, i in enumerate(idxs):
+                pr = prepared[i]
+                costs = CostBreakdown(model=pr["statics"][0])
+                ej.apply_acc(costs, rec["schedule"], acc[lane])
+                results[i] = RunResult(
+                    policy=pr["policy"].name,
+                    costs=costs,
+                    clique_sizes=rec["clique_sizes"],
+                    size_history=list(rec["size_history"]),
+                    n_windows=rec["n_windows"],
+                    cg_seconds=rec["cg_seconds"],
+                    wall_seconds=wall / len(idxs),
+                    config=getattr(pr["policy"], "config", None),
+                )
+        return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    def _shard(self, spec, E0, a0, S):
+        """Spread the scenario axis over ``self.mesh`` (no-op if it does
+        not divide evenly or the mesh has one device)."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh = self.mesh
+        axis = mesh.axis_names[0]
+        ndev = int(np.prod(list(mesh.shape.values())))
+        if ndev <= 1 or S % ndev != 0 or E0.ndim != 3:
+            return spec, E0, a0
+        sh = NamedSharding(mesh, P(axis))
+        spec = {k: jax.device_put(v, sh) for k, v in spec.items()}
+        return spec, jax.device_put(E0, sh), jax.device_put(a0, sh)
+
+
+def sweep_points(
+    grid: Sequence[dict],
+    backend: str | None = None,
+    batch_size: int | None = None,
+    mesh=None,
+) -> list[RunResult]:
+    """One-shot convenience: each grid entry is SweepPoint kwargs.
+
+    With ``backend`` unset, picks ``REPRO_SWEEP_BACKEND`` (default jax)
+    and degrades to the serial numpy loop when JAX is unavailable or any
+    point's cost model has no JAX formula (same rule as
+    ``benchmarks.common.run_method_grid``)."""
+    import os
+
+    pts = [SweepPoint(**g) for g in grid]
+    if backend is None:
+        backend = os.environ.get("REPRO_SWEEP_BACKEND", "jax")
+        if backend == "jax":
+            from . import engine_jax
+
+            if not engine_jax.HAS_JAX or not all(
+                    pt.policy_kwargs.get("cost_model", "table1")
+                    in engine_jax.JAX_COST_MODELS
+                    for pt in pts):
+                backend = "numpy"
+    eng = SweepEngine(backend=backend, batch_size=batch_size, mesh=mesh)
+    return eng.run(pts)

@@ -1,38 +1,98 @@
-"""Backend-aware default wiring of the CGM Pallas kernels.
+"""Backend-aware default wiring of the Pallas kernels.
 
-The clique-generation hot path has two accelerable matmuls (DESIGN.md §8):
+Two kernel families hang off this module's decision:
 
-* ``crm_matmul``  — Alg. 2 co-occurrence accumulation ``H^T @ H``
-                    (``kernels.crm_update``);
-* ``pair_edges``  — the Alg. 3 merge-scan pair-edge matrix ``M A M^T``
-                    (``kernels.clique_density``).
+* the CGM matmuls (DESIGN.md §8) — ``crm_matmul`` (Alg. 2 co-occurrence
+  ``H^T @ H``, ``kernels.crm_update``) and ``pair_edges`` (the Alg. 3
+  merge-scan ``M A M^T``, ``kernels.clique_density``);
+* the replay-scan segment reductions (DESIGN.md §10) —
+  ``seg_running_max`` / ``seg_running_argmax`` (``kernels.segment_reduce``)
+  used by the JAX replay backend's anchor resolution and expiry update.
 
-On a TPU backend both compile to MXU matmuls and beat the numpy oracles; in
-interpret mode (CPU-only containers) they are strictly slower than the numpy
-paths they validate, so autowiring only engages when a real TPU is attached.
-``AKPCConfig(kernels="auto")`` (the default) calls this; ``kernels="off"``
-keeps the numpy oracles regardless of backend.  JAX is probed defensively —
-the pure-numpy core must keep working in containers without the accelerator
-toolchain.
+On TPU the kernels compile to Mosaic and beat the numpy/jnp oracles; on
+any other engaged backend (GPU today — the kernels use TPU-flavoured
+Pallas, so ``kernels/ops.py`` keeps ``interpret=True`` off-TPU) they run
+the Pallas bodies in interpret mode: numerically identical, useful for
+validating the kernel path on the hardware you have, but SLOWER than the
+jnp fallbacks until Mosaic-GPU ports land.  Set ``REPRO_KERNELS=off`` to
+keep the fast fallbacks on GPU; on CPU autowiring never engages unless
+forced.
+
+The decision table (``kernels_enabled``):
+
+    REPRO_KERNELS     backend      -> engage?
+    -----------------------------------------
+    force/on/1/always anything     -> yes   (interpret mode on CPU)
+    off/0/never       anything     -> no
+    auto/unset        cpu or None  -> no
+    auto/unset        tpu/gpu/...  -> yes
+
+``AKPCConfig(kernels="auto")`` (the default) consumes ``default_cgm_hooks``;
+``kernels="off"`` keeps the numpy oracles regardless of backend.  JAX is
+probed defensively — the pure-numpy core must keep working in containers
+without the accelerator toolchain.
 """
 from __future__ import annotations
 
+import os
 from typing import Callable
 
+_FORCE = ("force", "on", "1", "always")
+_NEVER = ("off", "0", "never")
 
-def default_cgm_hooks() -> tuple[Callable | None, Callable | None]:
-    """(crm_matmul, pair_edges) Pallas wrappers iff a TPU backend is live.
 
-    Returns (None, None) — i.e. "use the numpy oracles" — when JAX is
-    missing, broken, or running on a non-TPU backend.
+def kernels_enabled(backend: str | None = None,
+                    env: str | None = None) -> bool:
+    """Should the Pallas kernels engage?  Pure decision function.
+
+    ``backend`` is a jax backend name (``"cpu"``/``"gpu"``/``"tpu"``/...)
+    or None when JAX is unavailable; ``env`` overrides the
+    ``REPRO_KERNELS`` environment variable (tests pass it explicitly).
     """
+    if env is None:
+        env = os.environ.get("REPRO_KERNELS", "")
+    env = env.strip().lower()
+    if env in _FORCE:
+        return True
+    if env in _NEVER:
+        return False
+    # auto: any live non-CPU accelerator
+    return backend is not None and backend != "cpu"
+
+
+def _probe_backend() -> str | None:
     try:
         import jax
 
-        if jax.default_backend() != "tpu":
-            return None, None
+        return jax.default_backend()
+    except Exception:
+        return None
+
+
+def default_cgm_hooks() -> tuple[Callable | None, Callable | None]:
+    """(crm_matmul, pair_edges) Pallas wrappers iff the decision says go.
+
+    Returns (None, None) — i.e. "use the numpy oracles" — when JAX is
+    missing, broken, or the decision table says the backend isn't worth it.
+    """
+    if not kernels_enabled(_probe_backend()):
+        return None, None
+    try:
         from .ops import crm_matmul, pair_edges
 
         return crm_matmul, pair_edges
+    except Exception:
+        return None, None
+
+
+def default_segment_hooks() -> tuple[Callable | None, Callable | None]:
+    """(seg_running_max, seg_running_argmax) Pallas wrappers, or
+    (None, None) to make the JAX replay backend use its jnp fallbacks."""
+    if not kernels_enabled(_probe_backend()):
+        return None, None
+    try:
+        from .ops import seg_max, seg_argmax
+
+        return seg_max, seg_argmax
     except Exception:
         return None, None

@@ -12,6 +12,7 @@ import numpy as np
 from .clique_density import clique_pair_edges
 from .crm_update import crm_update
 from .packed_lookup import packed_lookup, unpacked_lookup
+from .segment_reduce import seg_running_argmax, seg_running_max
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -26,6 +27,18 @@ def pair_edges(M, A):
     """Accelerated merge-score hook for repro.core.cliques.merge_scores:
     membership (k, h) x binary CRM (h, h) -> (k, k) union edge counts."""
     return np.asarray(clique_pair_edges(M, A, interpret=INTERPRET))
+
+
+def seg_max(values, starts):
+    """Segmented running max hook for the JAX replay backend
+    (core/engine_jax.py): (L,) values + (L,) segment-start flags."""
+    return seg_running_max(values, starts, interpret=INTERPRET)
+
+
+def seg_argmax(values, starts):
+    """Segmented running (max, latest-argmax) hook for the JAX replay
+    backend's per-server-dt anchor resolution."""
+    return seg_running_argmax(values, starts, interpret=INTERPRET)
 
 
 def gather_packed(table, ids):

@@ -34,6 +34,14 @@ def make_test_mesh(n_devices: int | None = None):
     return jax.make_mesh((2, n // 2), ("data", "model"), **kw)
 
 
+def make_sweep_mesh(n_devices: int | None = None):
+    """1-D ("scenario",) mesh for SweepEngine grid sharding: each device
+    replays a slice of the stacked scenario axis (repro.core.sweep).
+    On a single-device host this is a trivial mesh and sweeps stay local."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("scenario",), **_auto_axis_kwargs(1))
+
+
 def dp_axes(mesh) -> tuple[str, ...]:
     """Axes that carry data parallelism (pod folds into DP)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,282 @@
+"""JAX replay backend + vmapped SweepEngine (PR 5 tentpole).
+
+Contracts under test:
+
+* backend parity — ``run_policy(backend="jax")`` reproduces the NumPy
+  engine cost-for-cost (1e-9 relative on float sums, integer counters
+  exact) for EVERY registered policy, on table1 AND heterogeneous cost
+  models, across the PR-2 chunking grid (batch size 1 / 7 / 4096 and a
+  ragged mixed-backend session feed);
+* sweep parity — ``SweepEngine`` results equal per-point serial
+  ``run_policy`` at 1e-9 across all six registered policies and both
+  cost models, including when points SHARE a host schedule (alpha sweeps)
+  and when a group is replayed in one vmapped device call;
+* session interop — a jax ``feed_trace`` syncs state/costs/window
+  bookkeeping such that snapshots restore and numpy continuation agree
+  with a pure-numpy session;
+* backend guard rails — unknown backends and inexpressible cost models
+  are refused loudly instead of silently falling back.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import (
+    CacheEnvironment,
+    CacheSession,
+    CostParams,
+    SweepEngine,
+    SweepPoint,
+    get_policy,
+    list_policies,
+    run_policy,
+    sweep_points,
+)
+from repro.core.cost import CostModel, register_cost_model
+from repro.core.engine_jax import run_policy_jax
+from repro.traces import SynthConfig, synth_trace
+
+PARAMS = CostParams()
+T_CG = 0.73            # never divides the batch grid: windows split batches
+TOP_FRAC = 1.0
+ALL_POLICIES = ("no_packing", "packcache", "dp_greedy",
+                "akpc", "akpc_no_acm", "akpc_base")
+
+INT_FIELDS = ("n_requests", "n_item_requests", "n_misses", "n_hits",
+              "items_transferred")
+FLOAT_FIELDS = ("transfer", "caching", "keepalive_rent", "total")
+
+
+def _trace(n_requests=4000, seed=3, m=12, size_dist="unit"):
+    return synth_trace(SynthConfig(
+        kind="netflix", n_items=60, n_servers=m, n_requests=n_requests,
+        t_max=30.0, bundle_cover=1.0, bundle_zipf=0.7, seed=seed,
+        size_dist=size_dist))
+
+
+def _kwargs(name, **extra):
+    kw = {"params": PARAMS}
+    if name in ("packcache", "akpc", "akpc_no_acm", "akpc_base"):
+        kw.update(t_cg=T_CG, top_frac=TOP_FRAC)
+    if name == "dp_greedy":
+        kw.update(top_frac=TOP_FRAC)
+    kw.update(extra)
+    return kw
+
+
+def assert_same_costs(ref, got, rtol=1e-9):
+    a = ref.as_dict() if not isinstance(ref, dict) else ref
+    b = got.as_dict() if not isinstance(got, dict) else got
+    for f in INT_FIELDS:
+        assert a[f] == b[f], f"{f}: {a[f]} != {b[f]}"
+    for f in FLOAT_FIELDS:
+        assert np.isclose(a[f], b[f], rtol=rtol, atol=1e-9), \
+            f"{f}: {a[f]} != {b[f]}"
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return _trace()
+
+
+@pytest.fixture(scope="module")
+def sized_trace():
+    return _trace(size_dist="lognormal")
+
+
+@pytest.fixture(scope="module")
+def het_env(sized_trace):
+    env = CacheEnvironment.skewed(
+        sized_trace.n, sized_trace.m, PARAMS, price_sigma=0.8, seed=1)
+    return CacheEnvironment.resolve(env, sized_trace, PARAMS)
+
+
+# ---------------------------------------------------------------------------
+# backend parity: every policy, both cost models
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_jax_backend_matches_numpy_table1(trace, name):
+    ref = run_policy(get_policy(name, **_kwargs(name)), trace)
+    got = run_policy(get_policy(name, **_kwargs(name)), trace, backend="jax")
+    assert got.policy == name
+    assert got.n_windows == ref.n_windows
+    assert np.array_equal(got.clique_sizes, ref.clique_sizes)
+    assert_same_costs(ref.costs, got.costs)
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_jax_backend_matches_numpy_heterogeneous(sized_trace, het_env, name):
+    kw = _kwargs(name, env=het_env, cost_model="heterogeneous")
+    ref = run_policy(get_policy(name, **kw), sized_trace)
+    got = run_policy(get_policy(name, **kw), sized_trace, backend="jax")
+    assert_same_costs(ref.costs, got.costs)
+
+
+def test_jax_backend_matches_numpy_tiered(sized_trace):
+    kw = _kwargs("akpc", cost_model="tiered")
+    ref = run_policy(get_policy("akpc", **kw), sized_trace)
+    got = run_policy(get_policy("akpc", **kw), sized_trace, backend="jax")
+    assert_same_costs(ref.costs, got.costs)
+
+
+# ---------------------------------------------------------------------------
+# the PR-2 chunking grid: batch sizes 1 / 7 / 4096 + ragged mixed session
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bs", [1, 7, 4096])
+@pytest.mark.parametrize("model", ["table1", "heterogeneous"])
+def test_jax_backend_chunking_grid(trace, sized_trace, het_env, bs, model):
+    tr = trace if model == "table1" else sized_trace
+    kw = _kwargs("akpc")
+    if model == "heterogeneous":
+        kw.update(env=het_env, cost_model=model)
+    ref = run_policy(get_policy("akpc", **kw), tr, batch_size=bs)
+    got = run_policy_jax(get_policy("akpc", **kw), tr, batch_size=bs)
+    assert_same_costs(ref.costs, got.costs)
+
+
+def test_jax_session_ragged_mixed_chunking(trace):
+    """numpy feed -> jax feed_trace -> numpy feed == offline numpy."""
+    ref = run_policy(get_policy("akpc", **_kwargs("akpc")), trace)
+    s = CacheSession(get_policy("akpc", **_kwargs("akpc")), trace.n, trace.m)
+    c1, c2 = 501, 2503              # ragged cuts that split T_CG windows
+    s.feed(trace.items[:c1], trace.servers[:c1], trace.times[:c1])
+    s.feed_trace(trace.slice(c1, c2), backend="jax")
+    s.feed(trace.items[c2:], trace.servers[c2:], trace.times[c2:])
+    assert_same_costs(ref.costs, s.costs)
+
+
+def test_jax_session_snapshot_roundtrip(trace):
+    ref = run_policy(get_policy("akpc", **_kwargs("akpc")), trace)
+    s = CacheSession(get_policy("akpc", **_kwargs("akpc")), trace.n, trace.m,
+                     backend="jax")
+    cut = 2503
+    s.feed_trace(trace.slice(0, cut))
+    snap = s.snapshot()
+    s2 = CacheSession(get_policy("akpc", **_kwargs("akpc")),
+                      trace.n, trace.m).restore(snap)
+    s2.feed(trace.items[cut:], trace.servers[cut:], trace.times[cut:])
+    assert_same_costs(ref.costs, s2.costs)
+
+
+# ---------------------------------------------------------------------------
+# SweepEngine parity
+# ---------------------------------------------------------------------------
+def test_sweep_matches_serial_all_policies_table1(trace):
+    pts = [SweepPoint(name, trace, _kwargs(name)) for name in ALL_POLICIES]
+    eng = SweepEngine()
+    res = eng.run(pts)
+    for pt, got in zip(pts, res):
+        ref = run_policy(get_policy(pt.policy, **pt.policy_kwargs), trace)
+        assert got.policy == pt.policy
+        assert got.n_windows == ref.n_windows
+        assert got.costs.model == "table1"
+        assert_same_costs(ref.costs, got.costs)
+
+
+def test_sweep_matches_serial_all_policies_heterogeneous(sized_trace, het_env):
+    pts = [
+        SweepPoint(name, sized_trace,
+                   _kwargs(name, env=het_env, cost_model="heterogeneous"))
+        for name in ALL_POLICIES
+    ]
+    res = SweepEngine().run(pts)
+    for pt, got in zip(pts, res):
+        ref = run_policy(
+            get_policy(pt.policy, **pt.policy_kwargs), sized_trace)
+        assert got.costs.model == "heterogeneous"
+        assert_same_costs(ref.costs, got.costs)
+
+
+def test_sweep_shares_schedules_across_alpha_axis(trace):
+    """An alpha sweep runs clique generation ONCE and still matches the
+    per-point serial replays (alpha never enters the CGM)."""
+    alphas = [0.6, 0.8, 1.0]
+    pts = [
+        SweepPoint("akpc", trace,
+                   dict(params=CostParams(alpha=a), t_cg=T_CG,
+                        top_frac=TOP_FRAC))
+        for a in alphas
+    ]
+    eng = SweepEngine()
+    res = eng.run(pts)
+    assert eng.last_n_schedules == 1        # one schedule, three scenarios
+    totals = set()
+    for pt, got in zip(pts, res):
+        ref = run_policy(get_policy(pt.policy, **pt.policy_kwargs), trace)
+        assert_same_costs(ref.costs, got.costs)
+        totals.add(round(got.total, 6))
+    assert len(totals) == len(alphas)       # scenarios really differ
+
+
+def test_sweep_does_not_share_across_cgm_axes(trace):
+    """theta changes the CGM -> separate schedules, results still match."""
+    pts = [
+        SweepPoint("packcache", trace,
+                   dict(params=CostParams(theta=th), t_cg=T_CG,
+                        top_frac=TOP_FRAC))
+        for th in (0.1, 0.3)
+    ]
+    eng = SweepEngine()
+    res = eng.run(pts)
+    assert eng.last_n_schedules == 2
+    for pt, got in zip(pts, res):
+        ref = run_policy(get_policy(pt.policy, **pt.policy_kwargs), trace)
+        assert_same_costs(ref.costs, got.costs)
+
+
+def test_sweep_numpy_backend_and_convenience(trace):
+    grid = [dict(policy="no_packing", trace=trace,
+                 policy_kwargs={"params": PARAMS})]
+    a = sweep_points(grid, backend="numpy")[0]
+    b = sweep_points(grid, backend="jax")[0]
+    assert_same_costs(a.costs, b.costs)
+
+
+def test_sweep_covers_registry():
+    """The parity suites above must cover every registered policy (every
+    registry name, aliases included, resolves to a covered policy)."""
+    for name in list_policies():
+        assert get_policy(name, params=PARAMS).name in ALL_POLICIES
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+def test_unknown_backend_refused(trace):
+    with pytest.raises(ValueError):
+        run_policy(get_policy("no_packing", params=PARAMS), trace,
+                   backend="tpu-magic")
+    with pytest.raises(ValueError):
+        SweepEngine(backend="tpu-magic")
+    with pytest.raises(ValueError):
+        CacheSession(get_policy("no_packing", params=PARAMS), trace.n,
+                     trace.m, backend="tpu-magic")
+
+
+def test_inexpressible_cost_model_refused(trace):
+    """A custom registered CostModel has no jnp formula -> loud error."""
+
+    class WeirdModel(CostModel):
+        name = "weird_test_model"
+        uses_sizes = False
+
+        def dt(self):
+            return np.full(self.env.m, self.params.dt)
+
+        def transfer_cost_batch(self, counts, sizes, servers):
+            return np.asarray(counts, float) ** 1.5
+
+        def caching_rate(self, counts, sizes, servers):
+            return np.asarray(counts, float)
+
+    if "weird_test_model" not in __import__(
+            "repro.core.cost", fromlist=["_COST_MODELS"])._COST_MODELS:
+        register_cost_model("weird_test_model")(WeirdModel)
+    pol = get_policy("no_packing", params=PARAMS,
+                     cost_model="weird_test_model")
+    with pytest.raises(NotImplementedError):
+        run_policy(pol, trace, backend="jax")
+    # the numpy backend still prices it fine
+    run_policy(get_policy("no_packing", params=PARAMS,
+                          cost_model="weird_test_model"), trace)
