@@ -2,14 +2,27 @@
 (b) clique-approximation threshold gamma, (c) max clique size omega.
 
 All three axes over both traces run as ONE ``run_method_grid`` sweep
-call (PR 5).  Unlike fig6, every point here changes the clique-generation
-module itself, so each point keeps its own host schedule — the win is the
-vmapped replay of the points that share static shapes.
+call (PR 5).  Since PR 6 the clique-generation module itself runs inside
+the jit'd scan (DESIGN.md §11), so a theta x gamma x omega grid shares
+ONE partition-free schedule and vmaps the CGM knobs as scenario lanes.
+
+``--smoke`` (CI) is the device-CGM oracle gate: the on-device clique
+generation must reproduce the frozen ``cliques_ref`` oracle
+element-for-element at EVERY chained T_CG boundary over a small
+theta x gamma x omega grid, and a fig7-style sweep must perform ZERO
+host clique-generation calls (the ``cliques.CGM_CALLS`` counter stays
+flat) while sharing one schedule.
 """
 from __future__ import annotations
 
+import argparse
+import sys
+
+import numpy as np
+
 from .common import (
     N_SWEEP, emit, get_trace, relative_to_opt, run_method_grid, save_json,
+    t_cg_for,
 )
 from repro.core import CostParams
 
@@ -18,6 +31,11 @@ GAMMAS = [0.6, 0.7, 0.8, 0.85, 0.9, 1.0]
 OMEGAS = [2, 3, 5, 7, 10]
 METHODS = ("akpc", "akpc_base", "opt")
 KINDS = ("netflix", "spotify")
+
+SMOKE_THETAS = (0.1, 0.3)
+SMOKE_GAMMAS = (0.6, 0.9)
+SMOKE_OMEGAS = (3, 5)
+SMOKE_TOP_FRAC = 0.5
 
 
 def main() -> list[tuple]:
@@ -47,5 +65,117 @@ def main() -> list[tuple]:
     return rows
 
 
+def smoke() -> None:
+    """CI gate: device-CGM partitions == ``cliques_ref`` oracle, chained."""
+    from repro.core import (
+        CacheEnvironment, SweepEngine, SweepPoint, get_policy,
+    )
+    from repro.core import cgm_jax
+    from repro.core import cliques as cliques_mod
+    from repro.core import cliques_ref
+    from repro.core.crm import build_window_crm
+    from repro.core.engine_jax import JaxReplayEngine
+
+    tr = get_trace("netflix", 4000)
+    t_cg = t_cg_for(tr, CostParams())
+    combos = [(th, g, om) for th in SMOKE_THETAS for g in SMOKE_GAMMAS
+              for om in SMOKE_OMEGAS]
+
+    def kw(th, g, om):
+        return dict(params=CostParams(theta=th, gamma=g, omega=om),
+                    t_cg=t_cg, top_frac=SMOKE_TOP_FRAC)
+
+    def oracle_walk(theta, gamma, omega):
+        """cliques_ref at every T_CG boundary, the replay engines' walk."""
+        times, R = tr.times, tr.n_requests
+        next_cg = float(times[0]) + t_cg
+        win_start = pos = 0
+        prev = prev_crm = None
+        parts = []
+        while pos < R:
+            cut = int(np.searchsorted(times, next_cg, side="left"))
+            if cut <= pos:
+                t = float(times[pos])
+                crm = build_window_crm(
+                    tr.items[win_start:pos], tr.n, theta,
+                    top_frac=SMOKE_TOP_FRAC)
+                prev = cliques_ref.generate_cliques(
+                    prev, prev_crm, crm, tr.n, omega, gamma)
+                parts.append(prev.clique_of.copy())
+                prev_crm = crm
+                win_start = pos
+                while next_cg <= t:
+                    next_cg += t_cg
+                continue
+            pos = cut
+        return parts
+
+    # -- one vmapped device call over the whole grid -----------------------
+    pol0 = get_policy("akpc", **kw(*combos[0]))
+    pol0.bind(tr.n, tr.m)
+    env = CacheEnvironment.resolve(None, tr, pol0.params)
+    jeng = JaxReplayEngine(tr.n, tr.m, pol0.params, env=env)
+    sched = cgm_jax.build_cgm_schedule(tr, t_cg, uses_sizes=False)
+    nbd = int(sched.boundary_steps.size)
+    assert nbd >= 3, f"need chained windows, got {nbd}"
+    cspecs = []
+    for c in combos:
+        p = get_policy("akpc", **kw(*c))
+        p.bind(tr.n, tr.m)
+        cspecs.append(cgm_jax.cgm_spec(p.config, p.config.params, tr.n))
+    cspec = {k: np.stack([np.asarray(cs[k]) for cs in cspecs])
+             for k in cspecs[0]}
+    S = len(combos)
+    carry1 = cgm_jax.init_cgm_carry(
+        jeng.engine.state, None, None, n=tr.n, m=tr.m,
+        uses_sizes=False, item_sizes=None)
+    carry0 = {k: np.stack([v] * S) for k, v in carry1.items()}
+    spec = {k: np.stack([v] * S) for k, v in jeng._spec.items()}
+    before = cliques_mod.CGM_CALLS
+    final, ofs = cgm_jax.run_cgm_schedule(
+        sched, spec, jeng._statics, cspec, carry0, None)
+    failures = []
+    if cliques_mod.CGM_CALLS != before:
+        failures.append("device replay performed host CGM calls")
+    for lane, (th, g, om) in enumerate(combos):
+        want = oracle_walk(th, g, om)
+        if len(want) != nbd:
+            failures.append(f"theta={th} gamma={g} omega={om}: "
+                            f"{len(want)} oracle windows vs {nbd} device")
+            continue
+        bad = [w for w, (b, ref_of) in
+               enumerate(zip(sched.boundary_steps, want))
+               if not np.array_equal(ofs[lane, int(b)], ref_of)]
+        if bad or not np.array_equal(final["of"][lane], want[-1]):
+            failures.append(f"theta={th} gamma={g} omega={om}: partition "
+                            f"mismatch at windows {bad or ['final']}")
+
+    # -- a fig7-style sweep: one schedule, zero host CGM calls -------------
+    eng = SweepEngine()
+    before = cliques_mod.CGM_CALLS
+    eng.run([SweepPoint("akpc", tr, kw(*c)) for c in combos])
+    if cliques_mod.CGM_CALLS != before:
+        failures.append("fig7 sweep performed host CGM calls")
+    if eng.last_n_schedules != 1:
+        failures.append(f"fig7 sweep built {eng.last_n_schedules} "
+                        "schedules, expected 1 shared")
+
+    emit([("fig7/smoke_oracle_gate", 0,
+           f"grid={S}pts;windows={nbd};"
+           f"status={'FAIL' if failures else 'OK'}")])
+    if failures:
+        print("DEVICE-CGM ORACLE GATE FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        sys.exit(1)
+    print(f"# device-CGM oracle gate: {S} grid points x {nbd} chained "
+          "windows, all partitions identical, zero host CGM calls")
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="device-CGM vs cliques_ref oracle gate (CI)")
+    if ap.parse_args().smoke:
+        smoke()
+    else:
+        main()

@@ -22,6 +22,10 @@ from repro.traces import SynthConfig, synth_trace
 RUNTIME_ITEMS = [100, 1000, 4000, 10000]
 SMOKE_ITEMS = [1000, 4000]
 
+#: catalog sizes for the device-resident CGM timing (BENCH_cgm.json) —
+#: capped by cgm_jax.MAX_DEVICE_CGM_N (the auto-routing ceiling)
+DEVICE_CGM_ITEMS = [64, 192]
+
 #: wall seconds of this same sweep under the pre-vectorization (scalar)
 #: CGM, recorded before PR 3 on the reference container — the regression
 #: bar for --smoke and the denominator of the reported speedups
@@ -65,6 +69,60 @@ def _time_clique_gen_oracle(n: int) -> float:
                            top_frac_of="catalog")
     cliques_ref.generate_cliques(None, None, crm, n, omega=5, gamma=0.85)
     return time.perf_counter() - t0
+
+
+def _device_cgm_trace(n: int):
+    return synth_trace(SynthConfig(
+        kind="spotify", n_items=n, n_servers=20, n_requests=8000,
+        t_max=20.0, bundle_cover=1.0, bundle_zipf=0.7, seed=0))
+
+
+def _time_device_cgm(n: int) -> dict | None:
+    """Warm wall time of a fully device-resident windowed replay (CGM
+    inside the jit'd scan, DESIGN.md §11) vs the host-CGM jax path on the
+    same trace — the PR-6 seam recorded in BENCH_cgm.json.
+
+    Warm times (one compile pass first): the steady state every sweep
+    lane pays.  Returns None when jax is unavailable.
+    """
+    import os
+
+    try:
+        from repro.core.engine_jax import HAS_JAX, run_policy_jax
+    except Exception:
+        return None
+    if not HAS_JAX:
+        return None
+    tr = _device_cgm_trace(n)
+    params = CostParams()
+    t_cg = t_cg_for(tr, params)
+
+    def timed(mode: str) -> tuple[float, int]:
+        old = os.environ.get("REPRO_JAX_CGM")
+        os.environ["REPRO_JAX_CGM"] = mode
+        try:
+            run_policy_jax(
+                get_policy("akpc", params=params, t_cg=t_cg,
+                           top_frac=0.5), tr)        # compile pass
+            t0 = time.perf_counter()
+            res = run_policy_jax(
+                get_policy("akpc", params=params, t_cg=t_cg,
+                           top_frac=0.5), tr)
+            return time.perf_counter() - t0, res.n_windows
+        finally:
+            if old is None:
+                os.environ.pop("REPRO_JAX_CGM", None)
+            else:
+                os.environ["REPRO_JAX_CGM"] = old
+
+    dev, n_windows = timed("force")
+    host, _ = timed("off")
+    return {
+        "device_seconds": round(dev, 4),
+        "host_jax_seconds": round(host, 4),
+        "n_windows": n_windows,
+        "device_us_per_window": round(dev / max(1, n_windows) * 1e6),
+    }
 
 
 def main(smoke: bool = False) -> list[tuple]:
@@ -116,6 +174,23 @@ def main(smoke: bool = False) -> list[tuple]:
                     "hist": hist, "mean": round(mean, 2)}
                 rows.append((f"fig9a/{kind}/{name}", 0,
                              f"mean_size={round(mean,2)};hist={hist}"))
+
+    # device-resident CGM timing (PR 6): the windowed replay with clique
+    # generation inside the scan vs the host-CGM jax path, per catalog size
+    cgm_payload = {"trace": "spotify/8000req", "items": {}}
+    for n in DEVICE_CGM_ITEMS:
+        row = _time_device_cgm(n)
+        if row is None:
+            break
+        cgm_payload["items"][n] = row
+        rows.append((
+            f"bench_cgm/items={n}", int(row["device_seconds"] * 1e6),
+            f"device={row['device_seconds']}s;"
+            f"host_jax={row['host_jax_seconds']}s;"
+            f"windows={row['n_windows']};"
+            f"us_per_window={row['device_us_per_window']}"))
+    if cgm_payload["items"]:
+        save_json("BENCH_cgm", cgm_payload)
 
     save_json("fig9_cliques_runtime", payload)
     emit(rows)

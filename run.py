@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Repo driver: tier-1 tests and the CI smoke gates in one command.
+
+    python run.py --tests          # tier-1 suite (pytest -x -q)
+    python run.py --smoke          # every benchmark smoke gate, in order
+    python run.py --tests --smoke  # both (what ci.yml runs)
+
+The smoke gates (each also runnable directly as
+``PYTHONPATH=src python -m benchmarks.<name> --smoke``):
+
+* replay_bench          — replay-engine cost equality numpy vs jax
+* sweep_bench           — vmapped sweep beats the serial loop (warm)
+* fig7_hyperparams      — device-CGM partitions == cliques_ref oracle on
+                          a theta x gamma x omega grid, zero host CGM calls
+* fig9_cliques_runtime  — vectorized CGM beats the scalar oracle;
+                          records device-CGM timing in BENCH_cgm.json
+* fig10_heterogeneous   — heterogeneous cost-model smoke
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+SMOKE_GATES = (
+    "benchmarks.replay_bench",
+    "benchmarks.sweep_bench",
+    "benchmarks.fig7_hyperparams",
+    "benchmarks.fig9_cliques_runtime",
+    "benchmarks.fig10_heterogeneous",
+)
+
+
+def _env() -> dict:
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = (
+        src + os.pathsep + env["PYTHONPATH"]
+        if env.get("PYTHONPATH") else src)
+    return env
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tests", action="store_true",
+                    help="run the tier-1 pytest suite")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run every benchmark smoke gate")
+    args = ap.parse_args()
+    if not (args.tests or args.smoke):
+        ap.print_help()
+        return 2
+
+    env = _env()
+    rc = 0
+    if args.tests:
+        rc |= subprocess.call(
+            [sys.executable, "-m", "pytest", "-x", "-q"], env=env)
+    if args.smoke:
+        for mod in SMOKE_GATES:
+            print(f"== {mod} --smoke ==", flush=True)
+            rc |= subprocess.call(
+                [sys.executable, "-m", mod, "--smoke"], env=env)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,995 @@
+"""Device-resident clique generation: the CGM inside the jit'd scan.
+
+PR 5 moved the replay *state* recurrence on device but left the Clique
+Generation Module (Alg. 2-4) on host, so ``build_schedule`` still calls
+``policy.on_window`` per T_CG boundary and ships partition-dependent
+event tensors.  This module re-cuts that seam (DESIGN.md §11): the host
+ships only RAW request tensors (items / servers / times, sliced so no
+scan step straddles a T_CG boundary) and the scan carry grows the full
+CGM state — window CRM accumulator, hot-set counters, seed counters,
+the item->clique slot map and the previous window's binarised CRM.  At
+each boundary step a ``lax.cond`` branch runs, entirely on device:
+
+* Alg. 2 — hot set (stable rank of window counts), min-max normalise,
+  binarise at theta; the window CRM itself was accumulated step by step
+  as the rank-B update ``CRM += H^T H`` (``kernels/crm_update.py`` on
+  TPU, a jnp matmul elsewhere);
+* Alg. 4 — the edge diff vs the previous window's binary CRM, then the
+  removed-edge splits / added-edge merges as bounded ``fori_loop``s
+  over fixed-capacity slot buffers;
+* Alg. 3 — oversized-clique splits as a LIFO worklist (bounded
+  ``fori``+``while``) over member masks, and the approximate merge as a
+  ``lax.while_loop`` over the thresholded density matrix using the
+  incremental ``X = M A M^T`` patch algebra of PR 3 (one row/col patch
+  per merge, ``kernels/merge_step.py`` builds the initial D on TPU);
+* the partition install (``install_partition``) as segment reductions
+  over the old slot map — matching, member-wise expiry min, Alg.-1
+  window seeding.
+
+Because events are now CONSTRUCTED in-scan (dedup, sort orders, lags —
+the ``batch_events`` pipeline as jnp sorts/segment-sums), the schedule
+is partition-free: theta / gamma / omega / top_frac are runtime scalars
+(``cgm_spec``) and a fig7 hyperparameter grid vmaps over them sharing
+ONE schedule and ONE host->device transfer per trace.
+
+Parity bar: the host path (``core/cliques.py`` + the ``cliques_ref``
+oracle) stays frozen; device partitions are element-for-element equal
+across chained windows and costs match the numpy engine at 1e-9.  The
+proof obligations (op-for-op float semantics, stable-sort tie-breaking,
+slot-order vs list-order equivalence) are documented inline at each
+step.  The f32 CRM / X counters are exact integers below 2**24 — the
+eligibility gate (``wants_device_cgm``) enforces the bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from .cliques import CliquePartition
+from .crm import WindowCRM, cooccurrence_counts
+from .engine import CacheState
+from .engine_jax import (
+    HAS_JAX,
+    N_ACC,
+    NE_TARGET,
+    _bucket,
+    _rate_hook,
+    _require_jax,
+    _transfer_hook,
+)
+
+if HAS_JAX:  # pragma: no branch
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+else:  # pragma: no cover - jax-less containers never import the scan path
+    jax = None
+    import functools
+
+#: device CGM is gated to catalogs whose n^2 carries and f32 counters
+#: stay cheap and exact; larger catalogs keep the host CGM path
+MAX_DEVICE_CGM_N = 256
+#: f32 exactness bound for the CRM / X integer counters
+_F32_EXACT = 1 << 24
+
+
+# ---------------------------------------------------------------------------
+# the partition-free schedule: raw request tensors + boundary flags
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CGMSchedule:
+    """Raw request batches of one trace, cut on the T_CG grid.
+
+    Unlike :class:`~repro.core.engine_jax.ReplaySchedule` there are no
+    event tensors and no install records — events and partitions are
+    derived ON DEVICE.  ``xs`` leading axis is nb (scan steps); a step
+    never straddles a T_CG boundary, and a step whose window begins a
+    new T_CG period carries ``cg=True`` + the boundary evaluation time.
+    """
+
+    n: int
+    m: int
+    nb: int
+    B: int                      # requests per step (padded)
+    d: int                      # item slots per request
+    const_dt: bool              # device CGM requires uniform dt
+    uses_sizes: bool
+    xs: dict
+    n_requests: int
+    n_item_requests: int
+    boundary_steps: np.ndarray  # (n_boundaries,) scan-step indices
+    win_start: int              # open-window start index into the trace
+    boundary_hit: bool
+    next_cg: float | None
+
+
+def build_cgm_schedule(
+    trace,
+    t_cg: float,
+    *,
+    uses_sizes: bool,
+    batch_size: int | None = None,
+    next_cg0: float | None = None,
+) -> CGMSchedule:
+    """Cut the trace into boundary-aligned request batches.
+
+    The walk is the same T_CG grid as ``build_schedule`` (and the numpy
+    ``ReplayEngine.replay``): a boundary fires when the next request
+    lies at/after ``next_cg``, is evaluated at that request's time, and
+    empty periods are skipped with a single firing.  No clique
+    generation happens here — the boundary merely flags the step.
+    """
+    times, servers, items = trace.times, trace.servers, trace.items
+    R = int(times.shape[0])
+    d = int(items.shape[1]) if items.ndim == 2 else 1
+    if batch_size is not None:
+        bs = max(1, int(batch_size))
+    else:
+        bs = max(1, NE_TARGET // max(1, d))
+    if R > 0:
+        next_cg = (float(next_cg0) if next_cg0 is not None
+                   else float(times[0]) + t_cg)
+    else:
+        next_cg = next_cg0 if next_cg0 is not None else np.inf
+
+    slices: list[tuple[int, int, float | None]] = []
+    pending_cg: float | None = None
+    win_start = 0
+    boundary_hit = False
+    pos = 0
+    while pos < R:
+        cut = int(np.searchsorted(times, next_cg, side="left"))
+        if cut <= pos:
+            t = float(times[pos])
+            pending_cg = t
+            win_start = pos
+            boundary_hit = True
+            while next_cg <= t:
+                next_cg += t_cg
+            continue
+        stop = min(pos + bs, cut)
+        slices.append((pos, stop, pending_cg))
+        pending_cg = None
+        pos = stop
+
+    nb_raw = max(1, len(slices))
+    nb = _bucket(nb_raw, 4, 4)
+    B = _bucket(max((s - p for p, s, _ in slices), default=1), 32, 32)
+    t_pad = float(times[-1]) if R else 0.0
+    xs = {
+        "items": np.full((nb, B, d), -1, np.int32),
+        "servers": np.zeros((nb, B), np.int32),
+        "times": np.full((nb, B), t_pad, np.float64),
+        "cg": np.zeros(nb, bool),
+        "now": np.zeros(nb, np.float64),
+    }
+    boundary_steps = []
+    for b, (p, s, cg_now) in enumerate(slices):
+        w = s - p
+        xs["items"][b, :w] = items[p:s]
+        xs["servers"][b, :w] = servers[p:s]
+        xs["times"][b, :w] = times[p:s]
+        xs["times"][b, w:] = times[s - 1]
+        if cg_now is not None:
+            xs["cg"][b] = True
+            xs["now"][b] = cg_now
+            boundary_steps.append(b)
+
+    return CGMSchedule(
+        n=trace.n, m=trace.m, nb=nb, B=B, d=d, const_dt=True,
+        uses_sizes=uses_sizes, xs=xs,
+        n_requests=R, n_item_requests=int((items >= 0).sum()),
+        boundary_steps=np.asarray(boundary_steps, np.int32),
+        win_start=win_start, boundary_hit=boundary_hit,
+        next_cg=None if R == 0 else float(next_cg),
+    )
+
+
+def cgm_spec(cfg, params, n: int) -> dict:
+    """The CGM hyperparameters as runtime (vmappable) scalars.
+
+    theta / gamma enter f32 comparisons on the host path (NEP-50 weak
+    scalars against f32 CRM/density matrices), so both are shipped in
+    the dtype each comparison actually runs in.
+    """
+    omega = int(params.omega) if cfg.enable_split else int(n)
+    return {
+        "theta": np.float32(params.theta),
+        "gamma32": np.float32(params.gamma),
+        "gamma": np.float64(params.gamma),
+        "omega": np.int32(omega),
+        "omega_f": np.float64(omega),
+        "top_frac": np.float64(cfg.top_frac),
+        "of_catalog": np.bool_(cfg.top_frac_of == "catalog"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# device: window accumulation (Alg. 2 running state)
+# ---------------------------------------------------------------------------
+def _accumulate_window(carry, x, *, n, m, use_kernels):
+    """Fold one request batch into the open window's CGM counters.
+
+    * ``crm``  (n, n) f32 — co-occurrence counts via ``CRM += H^T H``
+      with H the 0/1 incidence (in-request duplicates dedup to 1, same
+      as the host's pair scatter); counts are exact integers in f32.
+    * ``wcnt`` (n+1,) i32 — per-item access counts WITH duplicates
+      (the host hot-set bincount does not dedup within a request).
+    * ``seed`` (n+1, m) i32 — (item, server) counts WITH duplicates
+      (``window_seed_servers``'s ``np.add.at`` semantics).
+    """
+    items = x["items"]                              # (B, d) i32
+    B, d = items.shape
+    valid = items >= 0
+    col = jnp.where(valid, items, n)                # invalid -> dump col n
+    row = jax.lax.broadcasted_iota(jnp.int32, (B, d), 0)
+    H = jnp.zeros((B, n + 1), jnp.float32).at[row, col].set(1.0)
+    Hv = H[:, :n]
+    if use_kernels:
+        from ..kernels.crm_update import crm_update
+        from ..kernels.ops import INTERPRET
+
+        upd = crm_update(Hv, interpret=INTERPRET)   # (n, n) f32, zero diag
+    else:
+        upd = Hv.T @ Hv     # f32 0/1 contraction: exact integer counts
+    crm = carry["crm"] + upd
+    wcnt = carry["wcnt"].at[col.reshape(-1)].add(1)[: n + 1]
+    seed = carry["seed"].at[col, x["servers"][:, None]].add(
+        valid.astype(jnp.int32))
+    return dict(carry, crm=crm, wcnt=wcnt, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# device: Alg. 3/4 primitives on full-n masks
+# ---------------------------------------------------------------------------
+def _split_sides(W, member, u, v, n):
+    """``split_clique_on_edge`` on a member mask: True = right side (v's).
+
+    Bit-exact vs the host: the f64 side-weight accumulators are updated
+    in ascending item order (the host iterates submatrix columns, whose
+    order IS ascending member id), and the tie ``wl[p] >= wr[p]`` sends
+    p left exactly as the host does.
+    """
+    wl0 = W[:, u]
+    wr0 = W[:, v]
+    right0 = jnp.zeros(n, bool).at[v].set(True)
+
+    def body(p, st):
+        wl, wr, right = st
+        act = member[p] & (p != u) & (p != v)
+        go_left = wl[p] >= wr[p]
+        right = right.at[p].set(jnp.where(act & ~go_left, True, right[p]))
+        colp = W[:, p]
+        wl = jnp.where(act & go_left, wl + colp, wl)
+        wr = jnp.where(act & ~go_left, wr + colp, wr)
+        return (wl, wr, right)
+
+    _, _, right = jax.lax.fori_loop(0, n, body, (wl0, wr0, right0))
+    return right & member
+
+
+def _window_crm_device(carry, cspec, *, n):
+    """Alg. 2 at a boundary: hot set -> normalise -> binarise.
+
+    Returns (hot (n,) bool, raw (n, n) f32 masked counts, norm (n, n)
+    f32, binary (n, n) bool) — all in GLOBAL item coordinates; the
+    host's compact hot space is an order-preserving re-index, so every
+    comparison below sees the same values in the same scan order.
+    """
+    counts = carry["wcnt"][:n]                       # (n,) i32
+    support = (counts > 0).sum()
+    base = jnp.where(cspec["of_catalog"], n, support).astype(jnp.float64)
+    # host: max(1, int(round(base * top_frac))) — np.round is half-even,
+    # same as Python's round
+    n_hot = jnp.maximum(
+        1, jnp.round(base * cspec["top_frac"])).astype(jnp.int32)
+    order = jnp.argsort(-counts)                     # stable: ties -> low id
+    rank = jnp.zeros(n, jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    hot = (rank < n_hot) & (counts > 0)
+    hm2 = hot[:, None] & hot[None, :]
+    eye = jnp.eye(n, dtype=bool)
+    raw = jnp.where(hm2 & ~eye, carry["crm"], 0.0)   # f32 exact ints
+    hi = raw.max().astype(jnp.float64)
+    # host minmax_normalise: lo is always 0 (zero diagonal), hi<=0 -> 0;
+    # int64/int64 true-divide (f64) then cast f32 == f32->f64 exact here
+    norm = jnp.where(
+        hi > 0.0,
+        (raw.astype(jnp.float64) / hi).astype(jnp.float32),
+        jnp.zeros((n, n), jnp.float32),
+    )
+    binary = (norm > cspec["theta"]) & hm2 & ~eye
+    return hot, raw, norm, binary
+
+
+def _adjust_partition(of, gsize, binary, W, add_u, add_v, n_add,
+                      rem_u, rem_v, n_rem, cspec, *, n):
+    """Alg. 4 (``adjust_previous_cliques``) over slot buffers.
+
+    Slot numbering mirrors the host list exactly: removed-edge splits
+    keep the left side in the parent slot and append the right side at
+    ``ngroups`` (the host's ``groups.append``); added-edge merges keep
+    ``min(cu, cv)`` and kill ``max`` (the host's keep/drop).  The final
+    compaction ranks alive slots ascending — the host's ``[g for g in
+    groups if g]`` order.
+    """
+    ngroups = (gsize > 0).sum().astype(jnp.int32)
+
+    def rem_body(i, st):
+        of, gsize, ngroups = st
+        u = rem_u[i]
+        v = rem_v[i]
+        cu = of[u]
+        do = (cu == of[v]) & (gsize[cu] > 1)
+        member = (of == cu) & do
+        right = _split_sides(W, member, u, v, n)
+        nr = right.sum().astype(jnp.int32)
+        of = jnp.where(right, ngroups, of)
+        g2 = gsize.at[cu].add(-nr).at[ngroups].set(nr)
+        gsize = jnp.where(do, g2, gsize)
+        ngroups = ngroups + do.astype(jnp.int32)
+        return (of, gsize, ngroups)
+
+    of, gsize, ngroups = jax.lax.fori_loop(
+        0, n_rem, rem_body, (of, gsize, ngroups))
+
+    def add_body(i, st):
+        of, gsize = st
+        u = add_u[i]
+        v = add_v[i]
+        cu = of[u]
+        cv = of[v]
+        g = gsize[cu] + gsize[cv]
+        um = (of == cu) | (of == cv)
+        # fully_connected: the union's in-edge count must be C(g, 2);
+        # cold members contribute no edges, so this also rejects unions
+        # with cold items — exactly the host probe semantics
+        ne = (binary & um[:, None] & um[None, :]).sum() // 2
+        do = (cu != cv) & (g <= cspec["omega"]) & (ne == g * (g - 1) // 2)
+        keep = jnp.minimum(cu, cv)
+        drop = jnp.maximum(cu, cv)
+        of = jnp.where(do & um, keep, of)
+        g2 = gsize.at[keep].set(g).at[drop].set(0)
+        gsize = jnp.where(do, g2, gsize)
+        return (of, gsize)
+
+    of, gsize = jax.lax.fori_loop(0, n_add, add_body, (of, gsize))
+
+    alive = gsize > 0
+    newid = (jnp.cumsum(alive.astype(jnp.int32)) - 1).astype(jnp.int32)
+    of = newid[of]
+    gsize = jnp.zeros(n + 1, jnp.int32).at[
+        jnp.where(alive, newid, n)].add(gsize)[:n]
+    return of, gsize
+
+
+def _split_oversized(of, gsize, W, cspec, *, n):
+    """Alg. 3 splits (``split_oversized``) as a bounded LIFO worklist.
+
+    Every slot runs the worklist (non-oversized slots emit themselves on
+    the first pop, reproducing the host's pass-through).  Pieces keep
+    the host's IN-PLACE order via the key ``slot * (n+1) + emit_idx``;
+    the closed-form hot_count<=1 peel is subsumed by the generic
+    weakest-edge split: with an all-zero weight submatrix the first-min
+    edge is (g[0], g[1]) and every tie goes left, which peels exactly
+    the host's ``(g[0],) + g[p+1:]`` then ``g[p] .. g[1]`` singletons.
+    """
+    triu = jnp.triu(jnp.ones((n, n), bool), k=1)
+    of_key0 = jnp.zeros(n, jnp.int32)
+
+    def slot_body(s, of_key):
+        stack0 = jnp.zeros((n + 1, n), bool).at[0].set(of == s)
+        sp0 = (gsize[s] > 0).astype(jnp.int32)
+
+        def cond(st):
+            return st[0] > 0
+
+        def wbody(st):
+            sp, stack, ofk, emit = st
+            g = stack[sp - 1]
+            sp = sp - 1
+            small = g.sum() <= cspec["omega"]
+            ofk = jnp.where(small & g, s * (n + 1) + emit, ofk)
+            emit = emit + small.astype(jnp.int32)
+            # weakest edge: first row-major minimum over member pairs —
+            # the same scan order as the host's submatrix argmin (member
+            # ids ascend in both index spaces)
+            gm2 = g[:, None] & g[None, :] & triu
+            P = jnp.where(gm2, W, jnp.inf)
+            f = jnp.argmin(P.reshape(-1)).astype(jnp.int32)
+            u = f // n
+            v = f % n
+            right = _split_sides(W, g, u, v, n)
+            left = g & ~right
+            stack = stack.at[sp].set(jnp.where(small, stack[sp], right))
+            stack = stack.at[sp + 1].set(
+                jnp.where(small, stack[sp + 1], left))
+            sp = sp + jnp.where(small, 0, 2)
+            return (sp, stack, ofk, emit)
+
+        _, _, of_key, _ = jax.lax.while_loop(
+            cond, wbody, (sp0, stack0, of_key, jnp.int32(0)))
+        return of_key
+
+    of_key = jax.lax.fori_loop(0, n, slot_body, of_key0)
+    # dense-rank the (slot, emit) keys -> pieces in host list order
+    sk = jnp.sort(of_key)
+    firstk = jnp.concatenate(
+        [jnp.ones(1, bool), sk[1:] != sk[:-1]])
+    rnk = (jnp.cumsum(firstk.astype(jnp.int32)) - 1).astype(jnp.int32)
+    pos = jnp.searchsorted(sk, of_key)
+    return rnk[pos]
+
+
+def _approx_merge(of, binary, hot, W, cspec, *, n, use_kernels):
+    """Alg. 3 approximate merge (``approximate_merge``) as a while_loop.
+
+    Slots 0..k-1 hold the adjusted/split groups (host list order);
+    merged groups take tail slots k, k+1, ... — ascending slot order
+    stays the host's compact act-matrix order at every iteration, so
+    the row-major first-argmax over D breaks ties identically.  D uses
+    the sentinel -2.0 for dead / non-act / diagonal entries (the host
+    simply has no such rows; any value < 0 is equivalent under the
+    ``max < 0 -> stop`` rule).  X is patched incrementally: one
+    row/col per merge (the PR-3 algebra), with the f32 add order of the
+    host (``(X[ai,ai] + X[aj,aj]) + 2.0 * X[ai,aj]``).
+    """
+    S = 2 * n
+    slot = jnp.arange(S, dtype=jnp.int32)
+    sizes = jnp.zeros(S, jnp.int32).at[of].add(1)
+    alive = sizes > 0
+    # host _mergeable_split: the hot filter only engages above the
+    # density bar (omega > 2 and gamma > (omega-2)/omega)
+    prune = (cspec["omega"] > 2) & (
+        cspec["gamma"] > (cspec["omega_f"] - 2.0) / cspec["omega_f"])
+    hot_i = hot.astype(jnp.int32)
+    has_hot = jax.ops.segment_max(hot_i, of, num_segments=S) > 0
+    live_item = hot & binary.any(axis=1)
+    has_live = jax.ops.segment_max(
+        live_item.astype(jnp.int32), of, num_segments=S) > 0
+    is_rest = alive & prune & ~has_hot
+    act = alive & jnp.where(prune, has_live, True) & ~is_rest
+
+    # X = M A M^T over hot membership (f32 exact integer counts)
+    M = jnp.zeros((S, n), jnp.float32).at[
+        of, jnp.arange(n, dtype=jnp.int32)].set(hot.astype(jnp.float32))
+    A = binary.astype(jnp.float32)
+    if use_kernels:
+        from ..kernels.clique_density import clique_pair_edges
+        from ..kernels.ops import INTERPRET
+
+        X = clique_pair_edges(M, A, interpret=INTERPRET)
+    else:
+        X = M @ A @ M.T
+    e_max = (cspec["omega_f"] * (cspec["omega_f"] - 1.0) / 2.0).astype(
+        jnp.float32)
+    eyeS = jnp.eye(S, dtype=bool)
+    if use_kernels:
+        from ..kernels.merge_step import merge_density
+        from ..kernels.ops import INTERPRET
+
+        D = merge_density(
+            X, sizes, cspec["omega"], cspec["gamma32"], interpret=INTERPRET)
+    else:
+        within = jnp.diag(X) / 2.0
+        e_u = (within[:, None] + within[None, :]) + X
+        okp = ((sizes[:, None] + sizes[None, :]) == cspec["omega"]) & ~eyeS
+        dens = jnp.where(okp, e_u / e_max, -1.0)
+        D = jnp.where(dens >= cspec["gamma32"], dens, -1.0)
+    actp = act[:, None] & act[None, :] & ~eyeS
+    D = jnp.where(actp, D, -2.0)
+
+    tail0 = alive.sum().astype(jnp.int32)
+    n_act0 = act.sum().astype(jnp.int32)
+
+    def cond(st):
+        D = st[1]
+        n_act = st[7]
+        return (n_act >= 2) & (D.max() >= 0.0)
+
+    def body(st):
+        X, D, of, sizes, act, alive, tail, n_act = st
+        f = jnp.argmax(D.reshape(-1)).astype(jnp.int32)
+        ai = f // S
+        aj = f % S
+        ai, aj = jnp.minimum(ai, aj), jnp.maximum(ai, aj)
+        t = tail
+        mm = (of == ai) | (of == aj)
+        of = jnp.where(mm, t, of)
+        row = X[ai, :] + X[aj, :]
+        dg = (X[ai, ai] + X[aj, aj]) + 2.0 * X[ai, aj]
+        X = X.at[t, :].set(row).at[:, t].set(row).at[t, t].set(dg)
+        gnew = sizes[ai] + sizes[aj]
+        sizes = sizes.at[t].set(gnew)
+        alive = alive.at[ai].set(False).at[aj].set(False).at[t].set(True)
+        act = act.at[ai].set(False).at[aj].set(False).at[t].set(True)
+        # the new group's density row, host op order:
+        # (within[-1] + within[:-1]) + Xn[-1, :-1]
+        wt = dg / 2.0
+        wl = jnp.diag(X) / 2.0
+        e_row = (wt + wl) + X[t, :]
+        okr = (gnew + sizes) == cspec["omega"]
+        dr = jnp.where(okr, e_row / e_max, -1.0)
+        dr = jnp.where(dr >= cspec["gamma32"], dr, -1.0)
+        validc = act & alive & (slot != t)
+        dr = jnp.where(validc, dr, -2.0)
+        D = D.at[ai, :].set(-2.0).at[:, ai].set(-2.0)
+        D = D.at[aj, :].set(-2.0).at[:, aj].set(-2.0)
+        D = D.at[t, :].set(dr).at[:, t].set(dr).at[t, t].set(-2.0)
+        return (X, D, of, sizes, act, alive, t + 1, n_act - 1)
+
+    _, _, of, _, _, alive, _, _ = jax.lax.while_loop(
+        cond, body, (X, D, of, sizes, act, alive, tail0, n_act0))
+
+    # host output order: cand (act-universe, originals then merged) first,
+    # rest groups after, both in slot order
+    is_rest_s = is_rest                              # tail slots: never rest
+    okey = jnp.where(
+        alive, slot + jnp.where(is_rest_s, S, 0), 2 * S)
+    order = jnp.argsort(okey)
+    rnk = jnp.zeros(S, jnp.int32).at[order].set(
+        jnp.arange(S, dtype=jnp.int32))
+    return rnk[of]
+
+
+def _install_partition_device(carry, of_new, now, dt, *, n, seed_new):
+    """``install_partition`` as segment reductions over the slot maps.
+
+    Matching (``match_partitions``): a new slot matches iff all its
+    members came from ONE old slot of the same member count.  Changed
+    slots take the member-wise expiry min (fresh iff still beyond
+    ``now``), else Alg.-1 window seeding on the seed-count argmax
+    server.  The whole (n+1)-row state is rebuilt, which also clears
+    any scatter garbage accumulated on the dump row.
+    """
+    E_old = carry["E"]
+    a_old = carry["anchor"]
+    of_old = carry["of"]
+    cnt_old = carry["cnt"]
+    one = jnp.ones(n, jnp.float64)
+    cnt_new = jnp.zeros(n + 1, jnp.float64).at[of_new].add(one)
+    slot_valid = cnt_new > 0.0
+    mn = jax.ops.segment_min(of_old, of_new, num_segments=n + 1)
+    mx = jax.ops.segment_max(of_old, of_new, num_segments=n + 1)
+    cand = jnp.clip(mn, 0, n)
+    matched = slot_valid & (mn == mx) & (cnt_old[cand] == cnt_new)
+    item_E = E_old[of_old]                           # (n, m)
+    min_E = jax.ops.segment_min(item_E, of_new, num_segments=n + 1)
+    fresh = jnp.where(slot_valid[:, None] & (min_E > now), min_E, 0.0)
+    row_max = fresh.max(axis=1)
+    anew = jnp.where(
+        row_max > 0.0, jnp.argmax(fresh, axis=1).astype(jnp.int32), -1)
+    if seed_new:
+        ssum = jax.ops.segment_sum(
+            carry["seed"][:n], of_new, num_segments=n + 1)
+        js = jnp.argmax(ssum, axis=1).astype(jnp.int32)
+        need = (slot_valid & ~matched & (row_max <= 0.0)
+                & (cnt_new > 1.0))
+        col = jax.lax.broadcasted_iota(jnp.int32, fresh.shape, 1)
+        fresh = jnp.where(
+            need[:, None] & (col == js[:, None]),
+            now + dt[js][:, None], fresh)
+        anew = jnp.where(need, js, anew)
+    E_new = jnp.where(matched[:, None], E_old[cand], fresh)
+    a_new = jnp.where(matched, a_old[cand], anew)
+    return E_new, a_new, cnt_new
+
+
+def _cgm_boundary(carry, now, cspec, dt, item_sizes, *, n, m, uses_sizes,
+                  enable_split, enable_acm, seed_new, use_kernels):
+    """One T_CG boundary, fully on device: Alg. 2 -> 4 -> 3 -> install.
+
+    Mirrors ``AKPCPolicy.on_window`` + ``generate_cliques`` + the
+    engine's ``install_partition``, then resets the window counters and
+    rolls the binary CRM into the prev-CRM carry slots.
+    """
+    hot, raw, norm, binary = _window_crm_device(carry, cspec, n=n)
+    W = norm.astype(jnp.float64)
+
+    # -- Alg. 4 edge diff vs the previous window (u < v, row-major =
+    # the lexicographic order the host oracle iterates its edges in)
+    pbin = carry["pbin"]
+    triu = jnp.triu(jnp.ones((n, n), bool), k=1)
+    remM = pbin & ~binary & triu
+    addM = binary & ~pbin & triu
+    ecap = max(1, n * (n - 1) // 2)
+    rem_u, rem_v = jnp.nonzero(remM, size=ecap, fill_value=0)
+    add_u, add_v = jnp.nonzero(addM, size=ecap, fill_value=0)
+    n_rem = remM.sum()
+    n_add = addM.sum()
+
+    of = carry["of"]
+    gsize = carry["cnt"][:n].astype(jnp.int32)
+    of, gsize = _adjust_partition(
+        of, gsize, binary, W,
+        add_u.astype(jnp.int32), add_v.astype(jnp.int32), n_add,
+        rem_u.astype(jnp.int32), rem_v.astype(jnp.int32), n_rem,
+        cspec, n=n)
+    if enable_split:
+        of = _split_oversized(of, gsize, W, cspec, n=n)
+    if enable_acm:
+        of = _approx_merge(
+            of, binary, hot, W, cspec, n=n, use_kernels=use_kernels)
+
+    E_new, a_new, cnt_new = _install_partition_device(
+        carry, of, now, dt, n=n, seed_new=seed_new)
+    out = dict(
+        carry, E=E_new, anchor=a_new, of=of, cnt=cnt_new,
+        crm=jnp.zeros((n, n), jnp.float32),
+        wcnt=jnp.zeros(n + 1, jnp.int32),
+        seed=jnp.zeros((n + 1, m), jnp.int32),
+        pbin=binary, praw=raw, pnorm=norm, phot=hot,
+    )
+    if uses_sizes:
+        out["vol"] = jnp.zeros(n + 1, jnp.float64).at[of].add(item_sizes)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# device: in-scan event construction + the Alg. 5/6 cost step
+# ---------------------------------------------------------------------------
+def _event_step(carry, x, spec, *, kind, charge, uses_sizes, item_sizes,
+                n, m):
+    """``batch_events`` + the const-dt replay step, derived in-scan.
+
+    The host dedups (request, clique) keys with ``np.unique`` — sorted
+    key order.  Here every (B*d) item slot maps to key ``r*(n+1)+cl``
+    (invalid slots -> clique n), a stable argsort groups them, and
+    segment sums produce the per-event counts; the event list is the
+    host's, interleaved with inert val=False groups (invalid slots and
+    request padding) whose writes land on the dump row/col.  The cost
+    arithmetic below is copied expression-for-expression from
+    ``engine_jax._replay_impl`` (const-dt branch), so the E/anchor
+    trajectory stays float-for-float identical and cost sums differ
+    only by in-batch summation order (the 1e-9 bar).
+    """
+    E, anchor, acc = carry["E"], carry["anchor"], carry["acc"]
+    of, cnt = carry["of"], carry["cnt"]
+    K = n
+    items = x["items"]                               # (B, d)
+    B, d = items.shape
+    NE = B * d
+    valid = (items >= 0).reshape(NE)
+    item = jnp.clip(items, 0, n - 1).reshape(NE)
+    r = jax.lax.broadcasted_iota(jnp.int32, (B, d), 0).reshape(NE)
+    cl = jnp.where(valid, of[item], K)
+    key = r * (K + 1) + cl
+    o = jnp.argsort(key)                             # stable
+    sk = key[o]
+    first = jnp.concatenate([jnp.ones(1, bool), sk[1:] != sk[:-1]])
+    seg = (jnp.cumsum(first.astype(jnp.int32)) - 1).astype(jnp.int32)
+    vmask = valid[o]
+    n_req_s = jax.ops.segment_sum(
+        jnp.where(vmask, 1.0, 0.0), seg, num_segments=NE,
+        indices_are_sorted=True)
+    if uses_sizes:
+        isz = item_sizes[item][o]
+        req_size_s = jax.ops.segment_sum(
+            jnp.where(vmask, isz, 0.0), seg, num_segments=NE,
+            indices_are_sorted=True)
+    # compact the unique keys into the event axis; unused tail entries
+    # get an inert pad key (last request, dump clique)
+    pad_key = (B - 1) * (K + 1) + K
+    dst = jnp.where(first, seg, NE)
+    ev_key = jnp.full(NE + 1, pad_key, key.dtype).at[dst].set(sk)[:NE]
+    ev_r = ev_key // (K + 1)
+    ev_c = (ev_key % (K + 1)).astype(jnp.int32)
+    ev_j = x["servers"][ev_r]
+    ev_t = x["times"][ev_r]
+    val = ev_c < K
+    n_req = n_req_s
+    size = cnt[ev_c]
+    if uses_sizes:
+        csize = carry["vol"][ev_c]
+        req_size = req_size_s
+    else:
+        csize = size
+        req_size = n_req
+
+    # (c, j) view: stable sort keeps ascending request order in-group,
+    # exactly the host's o_cj
+    key_cj = ev_c * m + ev_j
+    o_cj = jnp.argsort(key_cj)
+    kcs = key_cj[o_cj]
+    first_cj_s = jnp.concatenate([jnp.ones(1, bool), kcs[1:] != kcs[:-1]])
+    last_cj_s = jnp.concatenate([kcs[1:] != kcs[:-1], jnp.ones(1, bool)])
+    t_cj_s = ev_t[o_cj]
+    prev_t_s = jnp.where(
+        first_cj_s, 0.0,
+        jnp.concatenate([jnp.zeros(1, jnp.float64), t_cj_s[:-1]]))
+    first_cj = jnp.zeros(NE, bool).at[o_cj].set(first_cj_s)
+    prev_cj_t = jnp.zeros(NE, jnp.float64).at[o_cj].set(prev_t_s)
+
+    # per-clique view (o_c): previous server within the clique group
+    o_c = jnp.argsort(ev_c)
+    cs = ev_c[o_c]
+    first_c_s = jnp.concatenate([jnp.ones(1, bool), cs[1:] != cs[:-1]])
+    last_c_s = jnp.concatenate([cs[1:] != cs[:-1], jnp.ones(1, bool)])
+    j_c_s = ev_j[o_c]
+    prev_j_s = jnp.where(
+        first_c_s, -1,
+        jnp.concatenate([jnp.full(1, -1, jnp.int32), j_c_s[:-1]]))
+    first_c = jnp.zeros(NE, bool).at[o_c].set(first_c_s)
+    prev_j = jnp.full(NE, -1, jnp.int32).at[o_c].set(prev_j_s)
+
+    # ---- the replay cost step (engine_jax._replay_impl, const dt) ----
+    j, t = ev_j, ev_t
+    dt = spec["dt"]
+    dt_e = dt[0]
+    E_before = jnp.where(first_cj, E[ev_c, j], prev_cj_t + dt_e)
+    dep = 0.0 * E_before[0]
+    a0 = anchor[ev_c]
+    anchor_alive = jnp.where(
+        first_c, (a0 == j) & (E_before > 0.0), prev_j == j)
+    fresh = E_before > t
+    alive = fresh | anchor_alive
+    miss = (~alive) & val
+    lapsed = alive & (~fresh) & val
+    steps = jnp.ceil((t - E_before) / dt_e)
+    rr = E_before + steps * dt_e
+    rr = jnp.where(rr <= t, rr + dt_e, rr)
+    e_eff = jnp.where(fresh, E_before, jnp.where(lapsed, rr, t))
+    rate_stored = _rate_hook(kind, spec, size, csize, j)
+    rent = jnp.where(lapsed, rate_stored * (e_eff - E_before), 0.0)
+    tc = jnp.where(
+        miss, _transfer_hook(kind, spec, size, csize, j), 0.0)
+    if charge == "requested":
+        rate = _rate_hook(kind, spec, n_req, req_size, j)
+    else:
+        rate = rate_stored
+    dur = jnp.maximum((t + dt_e) - jnp.maximum(e_eff, t), 0.0)
+    cc = jnp.where(val, rate * dur, 0.0)
+    nm = miss.sum()
+    acc = acc + jnp.stack([
+        tc.sum(), cc.sum(), rent.sum(),
+        nm.astype(acc.dtype), (val.sum() - nm).astype(acc.dtype),
+        jnp.where(miss, size, 0.0).sum(),
+    ])
+
+    # ---- state update on segment-last events (non-lasts -> dump) ----
+    uc = jnp.where(last_cj_s, (kcs // m).astype(jnp.int32), K)
+    uj = jnp.where(last_cj_s, (kcs % m).astype(jnp.int32), 0)
+    E = E.at[uc, uj].set(t_cj_s + dt[0] + dep)
+    ac = jnp.where(last_c_s, cs, K)
+    a_cur = anchor[ac]
+    aE = E[ac, jnp.maximum(a_cur, 0)]                # POST-update E
+    t_c_s = ev_t[o_c]
+    upd = (a_cur < 0) | (t_c_s + dt[0] >= aE)
+    anchor = anchor.at[jnp.where(upd, ac, K)].set(j_c_s)
+    return dict(carry, E=E, anchor=anchor, acc=acc)
+
+
+# ---------------------------------------------------------------------------
+# the scan: boundary cond -> window accumulate -> events/costs
+# ---------------------------------------------------------------------------
+def _cgm_replay_impl(spec, cspec, init, xs, item_sizes, *, kind, charge,
+                     uses_sizes, enable_split, enable_acm, seed_new,
+                     use_kernels):
+    n = init["of"].shape[0]
+    m = init["E"].shape[1]
+    dt = spec["dt"]
+
+    def step(carry, x):
+        # the boundary fires BEFORE this batch's requests: the step that
+        # starts a new T_CG period evaluates the window accumulated by
+        # the preceding steps (``x["cg"]`` comes from the shared xs, so
+        # under vmap the predicate stays unbatched and cond stays cond)
+        carry = jax.lax.cond(
+            x["cg"],
+            lambda c: _cgm_boundary(
+                c, x["now"], cspec, dt, item_sizes, n=n, m=m,
+                uses_sizes=uses_sizes, enable_split=enable_split,
+                enable_acm=enable_acm, seed_new=seed_new,
+                use_kernels=use_kernels),
+            lambda c: c,
+            carry)
+        carry = _accumulate_window(
+            carry, x, n=n, m=m, use_kernels=use_kernels)
+        carry = _event_step(
+            carry, x, spec, kind=kind, charge=charge,
+            uses_sizes=uses_sizes, item_sizes=item_sizes, n=n, m=m)
+        return carry, carry["of"]
+
+    return jax.lax.scan(step, init, xs)
+
+
+if HAS_JAX:
+    @functools.lru_cache(maxsize=64)
+    def _compiled_cgm_replay(kind, charge, uses_sizes, enable_split,
+                             enable_acm, seed_new, use_kernels, vmapped):
+        f = functools.partial(
+            _cgm_replay_impl, kind=kind, charge=charge,
+            uses_sizes=uses_sizes, enable_split=enable_split,
+            enable_acm=enable_acm, seed_new=seed_new,
+            use_kernels=use_kernels)
+        if vmapped:
+            # scenarios vmap over spec / cgm spec / carry; the schedule
+            # tensors and item sizes are shared unbatched
+            f = jax.vmap(f, in_axes=(0, 0, 0, None, None))
+        return jax.jit(f)
+
+
+# ---------------------------------------------------------------------------
+# host seam: carry init, execution, state/policy sync
+# ---------------------------------------------------------------------------
+def init_cgm_carry(state, prev_crm, win_prefix, *, n, m, uses_sizes,
+                   item_sizes):
+    """Numpy engine/policy state -> the device scan carry (one lane)."""
+    from .engine_jax import N_ACC, state_to_device
+
+    E0, a0 = state_to_device(state, n)
+    of0 = np.asarray(state.partition.clique_of, np.int32)
+    carry = {
+        "E": E0,
+        "anchor": a0,
+        "acc": np.zeros(N_ACC, np.float64),
+        "of": of0,
+        "cnt": np.bincount(of0, minlength=n + 1).astype(np.float64),
+        "crm": np.zeros((n, n), np.float32),
+        "wcnt": np.zeros(n + 1, np.int32),
+        "seed": np.zeros((n + 1, m), np.int32),
+        "pbin": np.zeros((n, n), bool),
+        "praw": np.zeros((n, n), np.float32),
+        "pnorm": np.zeros((n, n), np.float32),
+        "phot": np.zeros(n, bool),
+    }
+    if uses_sizes:
+        vol = np.zeros(n + 1, np.float64)
+        np.add.at(vol, of0, np.asarray(item_sizes, np.float64))
+        carry["vol"] = vol
+    if prev_crm is not None and prev_crm.hot_items.size:
+        hot, raw, norm, binary = prev_crm.embed(n)
+        carry["phot"], carry["praw"] = hot, raw
+        carry["pnorm"], carry["pbin"] = norm, binary
+    if win_prefix is not None:
+        p_it, p_sv = win_prefix
+        p_it = np.atleast_2d(np.asarray(p_it))
+        if p_it.shape[0]:
+            # the open window's already-fed requests (session feed):
+            # deduped co-occurrence, duplicate-counting item/seed tallies
+            carry["crm"] = cooccurrence_counts(p_it, n).astype(np.float32)
+            flat = p_it.reshape(-1)
+            carry["wcnt"] = np.bincount(
+                np.where(flat >= 0, flat, n), minlength=n + 1,
+            ).astype(np.int32)
+            seed = np.zeros((n + 1, m), np.int64)
+            sv = np.repeat(np.asarray(p_sv, np.int64), p_it.shape[1])
+            ok = flat >= 0
+            np.add.at(seed, (flat[ok], sv[ok]), 1)
+            carry["seed"] = seed.astype(np.int32)
+    return carry
+
+
+def run_cgm_schedule(schedule, spec, statics, cspec, carry0, item_sizes, *,
+                     charge="requested", enable_split=True, enable_acm=True,
+                     seed_new=True, use_kernels=None, block=True):
+    """Execute one CGM schedule; returns (final_carry, per-step slot maps).
+
+    ``spec``/``cspec``/``carry0`` may carry a leading scenario axis (the
+    fig7 grid); the schedule and item sizes stay shared unbatched.
+    """
+    _require_jax()
+    if use_kernels is None:
+        from ..kernels.autowire import default_cgm_hooks
+
+        use_kernels = default_cgm_hooks()[0] is not None
+    vmapped = carry0["E"].ndim == 3
+    fn = _compiled_cgm_replay(
+        statics, charge, "vol" in carry0, bool(enable_split),
+        bool(enable_acm), bool(seed_new), bool(use_kernels), vmapped)
+    with enable_x64():
+        spec_j = {k: jnp.asarray(v) for k, v in spec.items()}
+        cspec_j = {k: jnp.asarray(v) for k, v in cspec.items()}
+        init_j = {k: jnp.asarray(v) for k, v in carry0.items()}
+        xs_j = {k: jnp.asarray(v) for k, v in schedule.xs.items()}
+        sz_j = (
+            jnp.asarray(item_sizes, jnp.float64)
+            if item_sizes is not None
+            else jnp.ones(schedule.n, jnp.float64))
+        final, ofs = fn(spec_j, cspec_j, init_j, xs_j, sz_j)
+        if not block:
+            return final, ofs
+        return {k: np.asarray(v) for k, v in final.items()}, np.asarray(ofs)
+
+
+def partition_from_of(n: int, of: np.ndarray) -> CliquePartition:
+    """Dense device slot map -> host partition; slot order IS group order,
+    so ``result.clique_of == of`` element for element."""
+    of = np.asarray(of)
+    k = int(of.max()) + 1 if of.size else 0
+    groups = [tuple(np.nonzero(of == g)[0].tolist()) for g in range(k)]
+    return CliquePartition.from_cliques(n, groups)
+
+
+def sync_policy_from_run(policy, schedule, ofs, final, part) -> None:
+    """Fold the device run's window bookkeeping back into the policy, as
+    if ``on_window`` had run per boundary on the host."""
+    nbd = int(schedule.boundary_steps.size)
+    if nbd == 0:
+        return
+    for b in schedule.boundary_steps:
+        sizes = np.bincount(np.asarray(ofs[int(b)])).astype(np.int64)
+        policy.size_history.append(sizes[sizes > 1])
+    policy.n_windows += nbd
+    policy._partition = part
+    policy._prev_crm = WindowCRM.from_full(
+        final["phot"], final["praw"], final["pnorm"], final["pbin"])
+
+
+def replay_cgm(jeng, policy, trace, *, t_cg, batch_size=None, next_cg0=None,
+               win_prefix=None, progress=None):
+    """Device-resident AKPC replay: one host->device transfer, zero host
+    clique-generation calls.  Drop-in for ``JaxReplayEngine.replay`` when
+    ``wants_device_cgm`` approves the (policy, model, trace) triple."""
+    eng = jeng.engine
+    uses_sizes = bool(eng.model.uses_sizes)
+    item_sizes = eng.env.sizes() if uses_sizes else None
+    schedule = build_cgm_schedule(
+        trace, t_cg, uses_sizes=uses_sizes, batch_size=batch_size,
+        next_cg0=next_cg0)
+    jeng.last_schedule = schedule
+    cfg = policy.config
+    cspec = cgm_spec(cfg, cfg.params, trace.n)
+    carry0 = init_cgm_carry(
+        eng.state, getattr(policy, "_prev_crm", None), win_prefix,
+        n=trace.n, m=trace.m, uses_sizes=uses_sizes, item_sizes=item_sizes)
+    final, ofs = run_cgm_schedule(
+        schedule, jeng._spec, jeng._statics, cspec, carry0, item_sizes,
+        charge=eng.caching_charge,
+        enable_split=cfg.enable_split,
+        enable_acm=cfg.enable_approx_merge,
+        seed_new=eng.seed_new_cliques)
+    if progress is not None:
+        progress(trace.n_requests)
+    nbd = int(schedule.boundary_steps.size)
+    part = (eng.state.partition if nbd == 0
+            else partition_from_of(trace.n, final["of"]))
+    eng.state = CacheState(
+        partition=part, E=final["E"][: part.k].copy(),
+        anchor=final["anchor"][: part.k].copy(), m=eng.m)
+    eng._set_partition_caches(part)
+    from .engine_jax import apply_acc
+
+    apply_acc(eng.costs, schedule, final["acc"])
+    sync_policy_from_run(policy, schedule, ofs, final, part)
+    return eng.costs
+
+
+def wants_device_cgm(policy, trace, model) -> bool:
+    """Eligibility gate for the device-resident CGM path.
+
+    ``REPRO_JAX_CGM`` = ``force`` / ``off`` / ``auto`` (default).  Auto
+    requires an unmodified AKPC-family policy (the on-device merge/split
+    mirrors ``AKPCPolicy.on_window`` exactly), a uniform keepalive dt,
+    no custom CRM hooks, and a catalog small enough that the n^2 carry
+    is cheap and the f32 co-occurrence counters stay exact integers.
+    """
+    mode = os.environ.get("REPRO_JAX_CGM", "auto").strip().lower()
+    if mode in ("off", "0"):
+        return False
+    if not HAS_JAX:
+        return False
+    from .akpc import AKPCConfig
+    from .policy import AKPCPolicy
+
+    cfg = getattr(policy, "config", None)
+    if not isinstance(cfg, AKPCConfig):
+        return False
+    if not isinstance(policy, AKPCPolicy) \
+            or type(policy).on_window is not AKPCPolicy.on_window:
+        return False
+    if getattr(policy, "t_cg", None) is None:
+        return False
+    if cfg.crm_matmul is not None or cfg.pair_edges is not None:
+        return False
+    dt = np.asarray(model.dt(), np.float64)
+    if dt.size and not (dt == dt[0]).all():
+        return False
+    if mode in ("force", "1"):
+        return True
+    return (trace.n <= MAX_DEVICE_CGM_N
+            and trace.n_requests * max(1, trace.d_max) < _F32_EXACT)

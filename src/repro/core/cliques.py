@@ -44,6 +44,10 @@ import numpy as np
 
 from .crm import WindowCRM
 
+#: host clique-generation call counter — the device-CGM path (cgm_jax)
+#: asserts this stays flat across a replay: zero host CGM calls
+CGM_CALLS = 0
+
 Edge = tuple[int, int]
 
 
@@ -551,6 +555,9 @@ def generate_cliques(
     variants (AKPC w/o CS, w/o ACM).
     """
     from .crm import edge_diff_arrays
+
+    global CGM_CALLS
+    CGM_CALLS += 1
 
     view = _CrmView(crm, n)
     if prev is None:

@@ -49,6 +49,44 @@ class WindowCRM:
         gv = self.hot_items[iv]
         return {(int(a), int(b)) for a, b in zip(gu, gv)}
 
+    def embed(
+        self, n: int
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Embed the compact hot-space CRM into full ``(n, n)`` catalog
+        space: ``(hot_mask (n,), raw f32, norm f32, binary bool)``.
+
+        Zeros everywhere outside the hot set, so an Alg.-4 edge diff of
+        two full-space binaries equals the host's union-hot-space diff —
+        the static-shape carry layout of the device-resident CGM
+        (``core.cgm_jax``).  Raw counts stay exact in f32 (they are small
+        integers, bounded by the window request count).
+        """
+        hot = np.zeros(n, bool)
+        raw = np.zeros((n, n), np.float32)
+        norm = np.zeros((n, n), np.float32)
+        binary = np.zeros((n, n), bool)
+        if self.hot_items.size:
+            hi = np.asarray(self.hot_items)
+            ix = np.ix_(hi, hi)
+            hot[hi] = True
+            raw[ix] = self.raw.astype(np.float32)
+            norm[ix] = self.norm
+            binary[ix] = self.binary
+        return hot, raw, norm, binary
+
+    @classmethod
+    def from_full(cls, hot_mask, raw, norm, binary) -> "WindowCRM":
+        """Inverse of :meth:`embed`: compact full-space arrays back to the
+        hot index space (device carry -> host ``WindowCRM``)."""
+        hot = np.nonzero(np.asarray(hot_mask))[0].astype(np.int32)
+        ix = np.ix_(hot, hot)
+        return cls(
+            hot_items=hot,
+            raw=np.asarray(raw)[ix].astype(np.int64),
+            norm=np.asarray(norm)[ix].astype(np.float32),
+            binary=np.asarray(binary)[ix].astype(bool),
+        )
+
 
 def incidence_matrix(items: np.ndarray, n: int) -> np.ndarray:
     """One-hot request/item incidence H (B, n) from padded item ids.

@@ -87,6 +87,45 @@ def _require_jax() -> None:
             "backend='numpy'")
 
 
+_COMPILE_CACHE_SET = False
+
+
+def enable_compile_cache() -> None:
+    """Point XLA's persistent compilation cache at a stable directory.
+
+    Compiling the replay scan costs ~1s per cohort shape — on small grids
+    that one compile used to outweigh the whole vmap win (BENCH_sweep.json
+    recorded the 24-point/40k grid at 0.88x serial).  Caching compiled
+    cohorts on disk makes every later process start warm, so sweeps win at
+    every size, not just when the compile amortises over a big grid.
+
+    ``REPRO_JAX_COMPILE_CACHE`` overrides the directory; ``off``/``0``
+    disables.  A ``jax_compilation_cache_dir`` the caller already set
+    always wins.  Idempotent, cheap, safe to call per SweepEngine.
+    """
+    global _COMPILE_CACHE_SET
+    if _COMPILE_CACHE_SET or not HAS_JAX:
+        return
+    _COMPILE_CACHE_SET = True
+    import os
+
+    env = os.environ.get("REPRO_JAX_COMPILE_CACHE", "")
+    if env.lower() in ("off", "0", "none"):
+        return
+    if jax.config.jax_compilation_cache_dir:
+        return  # caller owns the cache config
+    path = env or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "jax")
+    try:
+        jax.config.update("jax_compilation_cache_dir", path)
+        # the scan compiles in ~1s and serialises small; the defaults
+        # (1s floor) would skip borderline cohorts on fast machines
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    except Exception:  # pragma: no cover - ancient jax without the knobs
+        pass
+
+
 # ---------------------------------------------------------------------------
 # cost spec: the three batched CostModel hooks as data + static kind
 # ---------------------------------------------------------------------------
@@ -758,7 +797,9 @@ def _compiled_replay(kind, charge, const_dt, use_pallas, vmapped):
     f = functools.partial(
         _replay_impl, kind=kind, charge=charge, const_dt=const_dt,
         use_pallas=use_pallas)
-    if vmapped:
+    if vmapped == "xs":       # trace-shard axis: a schedule PER lane
+        f = jax.vmap(f, in_axes=(0, 0, 0))
+    elif vmapped:             # scenario axis: one schedule, many specs
         f = jax.vmap(f, in_axes=(0, 0, None))
     return jax.jit(f)
 
@@ -800,6 +841,52 @@ def run_schedule(
         )
         spec_j = {k: jnp.asarray(v) for k, v in spec.items()}
         xs_j = {k: jnp.asarray(v) for k, v in schedule.xs.items()}
+        E, anchor, acc = fn(spec_j, init, xs_j)
+        if not block:
+            return E, anchor, acc
+        return np.asarray(E), np.asarray(anchor), np.asarray(acc)
+
+
+def run_schedules(
+    schedules: list,
+    spec: dict,
+    statics: tuple,
+    E0: np.ndarray,
+    anchor0: np.ndarray,
+    *,
+    charge: CachingCharge = "requested",
+    use_pallas: bool | None = None,
+    block: bool = True,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Execute S schedules lane-for-lane: lane i replays ``schedules[i]``
+    under spec lane i — the trace-shard axis of :mod:`repro.core.sweep`.
+
+    Unlike :func:`run_schedule` (one schedule shared unbatched across
+    scenario lanes), the event tensors are STACKED along the lane axis and
+    the compiled scan is vmapped over them too (``in_axes=(0, 0, 0)``).
+    All schedules must share padded dims (``pad_schedule``) and
+    (n, m, const_dt); ``spec``/``E0``/``anchor0`` carry the leading S axis.
+    """
+    _require_jax()
+    if use_pallas is None:
+        from ..kernels.autowire import default_segment_hooks
+
+        use_pallas = default_segment_hooks()[0] is not None
+    s0 = schedules[0]
+    assert E0.ndim == 3 and E0.shape[0] == len(schedules)
+    assert all(s.const_dt == s0.const_dt and schedule_dims(s) ==
+               schedule_dims(s0) for s in schedules[1:])
+    fn = _compiled_replay(
+        statics, charge, s0.const_dt, bool(use_pallas), "xs")
+    with enable_x64():
+        init = (
+            jnp.asarray(E0, jnp.float64),
+            jnp.asarray(anchor0, jnp.int32),
+            jnp.zeros((E0.shape[0], N_ACC), jnp.float64),
+        )
+        spec_j = {k: jnp.asarray(v) for k, v in spec.items()}
+        xs_j = {k: jnp.stack([jnp.asarray(s.xs[k]) for s in schedules])
+                for k in s0.xs}
         E, anchor, acc = fn(spec_j, init, xs_j)
         if not block:
             return E, anchor, acc
@@ -888,6 +975,20 @@ class JaxReplayEngine:
         win_prefix: tuple[np.ndarray, np.ndarray] | None = None,
     ) -> CostBreakdown:
         eng = self.engine
+        if clique_generator is not None and t_cg is not None:
+            # device-resident CGM (DESIGN.md §11): when the generator is
+            # an unmodified AKPC ``on_window`` the whole merge/split loop
+            # runs inside the scan — raw request tensors go up, costs
+            # come back, zero host clique-generation calls
+            pol = getattr(clique_generator, "__self__", None)
+            if pol is not None:
+                from .cgm_jax import replay_cgm, wants_device_cgm
+
+                if wants_device_cgm(pol, trace, eng.model):
+                    return replay_cgm(
+                        self, pol, trace, t_cg=t_cg,
+                        batch_size=batch_size, next_cg0=next_cg0,
+                        win_prefix=win_prefix, progress=progress)
         schedule = build_schedule(
             eng.state.partition, trace, clique_generator, t_cg,
             model=eng.model, env=eng.env, batch_size=batch_size,

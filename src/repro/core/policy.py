@@ -64,6 +64,10 @@ class RunResult:
     cg_seconds: float                # clique-generation wall time
     wall_seconds: float              # end-to-end replay wall time
     config: Any = None               # the policy's config object (if any)
+    #: per-shard dispersion when the point carried a trace-shard axis
+    #: (SweepPoint with a sequence of traces): {"n", "totals", "mean",
+    #: "std", "ci95"} over the per-shard total costs; None otherwise
+    shard_stats: dict | None = None
 
     @property
     def total(self) -> float:

@@ -54,6 +54,16 @@ class SweepPoint:
     verbatim (``params``, ``t_cg``, ``top_frac``, ``env``, ``cost_model``,
     ...); ``tag`` is an arbitrary caller label carried through to the
     result order (results come back in input order regardless).
+
+    ``trace`` may also be a SEQUENCE of traces — the trace-shard axis:
+    shards of one long trace, or per-seed replicas of one workload.  The
+    point then replays every shard as an extra vmap lane of the same
+    device call (schedules stacked batched, ``engine_jax.run_schedules``)
+    and comes back as ONE :class:`~repro.core.policy.RunResult` with the
+    per-shard :class:`~repro.core.cost.CostBreakdown`s merged and
+    ``shard_stats`` carrying the mean +- CI of the per-shard totals —
+    dispersion estimates at near-zero marginal device cost.  All shards
+    must share the catalog/server shape ``(n, m)``.
     """
 
     policy: str
@@ -61,6 +71,57 @@ class SweepPoint:
     policy_kwargs: dict = dataclasses.field(default_factory=dict)
     batch_size: int | None = None
     tag: str = ""
+
+
+def _shards_of(trace) -> tuple | None:
+    """The shard tuple of a sharded ``SweepPoint.trace`` (else None)."""
+    if isinstance(trace, (list, tuple)):
+        shards = tuple(trace)
+        if not shards:
+            raise ValueError("SweepPoint.trace sequence is empty")
+        n, m = shards[0].n, shards[0].m
+        for tr in shards[1:]:
+            if tr.n != n or tr.m != m:
+                raise ValueError(
+                    "trace shards must share the catalog/server shape "
+                    f"(n, m): got ({n}, {m}) vs ({tr.n}, {tr.m})")
+        return shards
+    return None
+
+
+def _shard_stats(totals: list) -> dict:
+    """mean +- 95% CI (normal approx) of the per-shard total costs."""
+    a = np.asarray(totals, np.float64)
+    std = float(a.std(ddof=1)) if a.size > 1 else 0.0
+    return {
+        "n": int(a.size),
+        "totals": [float(t) for t in totals],
+        "mean": float(a.mean()),
+        "std": std,
+        "ci95": 1.96 * std / float(np.sqrt(a.size)),
+    }
+
+
+def _merge_shard_results(subs: list) -> RunResult:
+    """Fold per-shard RunResults into one (the numpy-backend shard path)."""
+    merged = dataclasses.replace(subs[0].costs)
+    for r in subs[1:]:
+        merged.merge(r.costs)
+    return dataclasses.replace(
+        subs[0], costs=merged,
+        cg_seconds=sum(r.cg_seconds for r in subs),
+        wall_seconds=sum(r.wall_seconds for r in subs),
+        shard_stats=_shard_stats([r.costs.total for r in subs]))
+
+
+#: across-run cohort shape ratchet: the largest padded dims this process
+#: has seen per (n, m, dt-mode, uses-sizes) cohort.  Padding every later
+#: schedule of the same cohort up to these dims makes the compiled scan's
+#: shapes REPEAT across ``SweepEngine.run`` calls — the jit cache (and the
+#: persistent compile cache) hit instead of re-tracing each slightly
+#: different grid.  Padded steps/slots are inert, so ratcheting up is
+#: semantics-free; a retrace costs ~1s, the extra padding microseconds.
+_COHORT_DIMS: dict[tuple, dict] = {}
 
 
 def _cgm_key(policy) -> tuple:
@@ -95,6 +156,7 @@ class SweepEngine:
                 raise ImportError(
                     "SweepEngine(backend='jax') needs jax; use "
                     "backend='numpy'")
+            engine_jax.enable_compile_cache()
         self.backend = backend
         self.batch_size = batch_size
         self.mesh = mesh
@@ -120,6 +182,13 @@ class SweepEngine:
         return out
 
     def _run_numpy(self, pt: SweepPoint) -> RunResult:
+        shards = _shards_of(pt.trace)
+        if shards is not None:
+            return _merge_shard_results([
+                run_policy(
+                    get_policy(pt.policy, **pt.policy_kwargs), tr,
+                    batch_size=pt.batch_size or self.batch_size)
+                for tr in shards])
         return run_policy(
             get_policy(pt.policy, **pt.policy_kwargs), pt.trace,
             batch_size=pt.batch_size or self.batch_size)
@@ -133,10 +202,12 @@ class SweepEngine:
         # -- prepare points + share keys (no schedule builds yet) -----------
         prepared = []
         for pt in points:
+            shards = _shards_of(pt.trace)
+            tr0 = shards[0] if shards is not None else pt.trace
             policy = get_policy(pt.policy, **pt.policy_kwargs)
-            policy.bind(pt.trace.n, pt.trace.m)
+            policy.bind(tr0.n, tr0.m)
             env = CacheEnvironment.resolve(
-                getattr(policy, "env", None), pt.trace, policy.params)
+                getattr(policy, "env", None), tr0, policy.params)
             model = get_cost_model(
                 getattr(policy, "cost_model", "table1"), env)
             spec, statics = ej.cost_spec(model, env)
@@ -148,21 +219,55 @@ class SweepEngine:
                         else (id(env.item_sizes)
                               if env.item_sizes is not None else "unit"))
             if pt.policy in SHAREABLE_POLICIES:
-                skey = (id(pt.trace), pt.policy, _cgm_key(policy), bs,
+                tid = (tuple(id(tr) for tr in shards)
+                       if shards is not None else id(pt.trace))
+                skey = (tid, pt.policy, _cgm_key(policy), bs,
                         const_dt, model.uses_sizes, sizes_fp, seed)
             else:
                 skey = object()          # never shared
             prepared.append({
                 "pt": pt, "policy": policy, "spec": spec,
-                "statics": statics, "skey": skey,
+                "statics": statics, "skey": skey, "sizes_fp": sizes_fp,
                 "model": model, "env": env, "bs": bs, "seed": seed,
+                "shards": shards,
                 "charge": getattr(policy, "caching_charge", "requested"),
             })
 
-        groups: dict = {}
+        # -- device-CGM super-groups (DESIGN.md §11): AKPC points that
+        # differ ONLY in CGM knobs (the fig7 theta/gamma/omega/top_frac
+        # axes, plus any pricing axes) share ONE partition-free schedule
+        # and vmap the clique generation itself — zero host CGM calls.
+        # A group needs >= 2 distinct CGM keys to beat the host path
+        # (with one key the host builds one shared schedule anyway).
+        from . import cgm_jax
+
+        dev_groups: dict = {}
         for i, pr in enumerate(prepared):
-            groups.setdefault((pr["skey"], pr["statics"], pr["charge"]),
-                              []).append(i)
+            pt, policy = pr["pt"], pr["policy"]
+            cfg = getattr(policy, "config", None)
+            if (pr["shards"] is not None
+                    or pt.policy not in SHAREABLE_POLICIES or cfg is None
+                    or not cgm_jax.wants_device_cgm(
+                        policy, pt.trace, pr["model"])):
+                continue
+            dkey = (id(pt.trace), cfg.t_cg, pr["bs"], pr["statics"],
+                    pr["charge"], pr["model"].uses_sizes, pr["sizes_fp"],
+                    pr["seed"], cfg.enable_split, cfg.enable_approx_merge)
+            dev_groups.setdefault(dkey, []).append(i)
+        dev_groups = {
+            k: v for k, v in dev_groups.items()
+            if len({_cgm_key(prepared[i]["policy"]) for i in v}) >= 2
+        }
+        on_device = {i for v in dev_groups.values() for i in v}
+
+        groups: dict = {}
+        sh_groups: dict = {}
+        for i, pr in enumerate(prepared):
+            if i in on_device:
+                continue
+            dst = sh_groups if pr["shards"] is not None else groups
+            dst.setdefault((pr["skey"], pr["statics"], pr["charge"]),
+                           []).append(i)
 
         # -- build every distinct schedule on host --------------------------
         schedules: dict = {}
@@ -200,11 +305,119 @@ class SweepEngine:
             s = rec["schedule"]
             cohorts.setdefault(
                 (s.n, s.m, s.const_dt, s.uses_sizes), []).append(rec)
-        for recs in cohorts.values():
+        for ckey, recs in cohorts.items():
             dims_list = [ej.schedule_dims(r["schedule"]) for r in recs]
             dims = {k: max(d[k] for d in dims_list) for k in dims_list[0]}
-            for r in recs:
-                r["schedule"] = ej.pad_schedule(r["schedule"], dims)
+            cached = _COHORT_DIMS.get(ckey)
+            if cached is not None:
+                dims = {k: max(dims[k], cached[k]) for k in dims}
+            _COHORT_DIMS[ckey] = dims
+            for r, d0 in zip(recs, dims_list):
+                if d0 != dims:   # shared shapes: skip the pad entirely
+                    r["schedule"] = ej.pad_schedule(r["schedule"], dims)
+
+        # -- trace-shard groups: one schedule PER SHARD, stacked batched ----
+        # lanes = scenarios x shards of one vmapped call (run_schedules);
+        # per-shard costs are merged per scenario at collection time.
+        sh_pending = []
+        n_shard_schedules = 0
+        for (skey, statics, charge), idxs in sh_groups.items():
+            g0 = prepared[idxs[0]]
+            policy = g0["policy"]
+            shards = g0["shards"]
+            gen = policy.on_window if policy.t_cg is not None else None
+            recs = []
+            for tr in shards:
+                policy.bind(tr.n, tr.m)       # fresh CGM state per shard
+                part0 = (policy.initial_partition(tr)
+                         if hasattr(policy, "initial_partition") else None)
+                if part0 is None:
+                    part0 = CliquePartition.singletons(tr.n)
+                schedule = ej.build_schedule(
+                    part0, tr, gen, policy.t_cg,
+                    model=g0["model"], env=g0["env"], batch_size=g0["bs"],
+                    seed_new_cliques=g0["seed"])
+                recs.append({
+                    "schedule": schedule,
+                    "n_windows": getattr(policy, "n_windows", 0),
+                    "cg_seconds": getattr(policy, "cg_seconds", 0.0),
+                    "size_history":
+                        list(getattr(policy, "size_history", [])),
+                    "clique_sizes": schedule.final_partition.sizes(),
+                })
+            n_shard_schedules += len(recs)
+            s0 = recs[0]["schedule"]
+            ckey = (s0.n, s0.m, s0.const_dt, s0.uses_sizes, "xs")
+            dims_list = [ej.schedule_dims(r["schedule"]) for r in recs]
+            dims = {k: max(d[k] for d in dims_list) for k in dims_list[0]}
+            cached = _COHORT_DIMS.get(ckey)
+            if cached is not None:
+                dims = {k: max(dims[k], cached[k]) for k in dims}
+            _COHORT_DIMS[ckey] = dims
+            for r, d0 in zip(recs, dims_list):
+                if d0 != dims:
+                    r["schedule"] = ej.pad_schedule(r["schedule"], dims)
+            S_sh = len(recs)
+            lanes = [recs[j]["schedule"]
+                     for _ in idxs for j in range(S_sh)]
+            spec = {
+                k: np.stack([prepared[i]["spec"][k]
+                             for i in idxs for _ in range(S_sh)])
+                for k in g0["spec"]
+            }
+            L = len(lanes)
+            E0 = np.zeros((L, s0.n + 1, s0.m), np.float64)
+            a0 = np.full((L, s0.n + 1), -1, np.int32)
+            t0 = _time.perf_counter()
+            _, _, acc = ej.run_schedules(
+                lanes, spec, statics, E0, a0, charge=charge, block=False)
+            sh_pending.append((idxs, recs, acc, t0))
+            if progress is not None:
+                progress(f"shard group of {len(idxs)} scenario(s) x "
+                         f"{S_sh} shard(s) dispatched")
+
+        # -- dispatch device-CGM groups first (non-blocking) ----------------
+        dev_pending = []
+        for idxs in dev_groups.values():
+            g0 = prepared[idxs[0]]
+            trace = g0["pt"].trace
+            n, m_srv = trace.n, trace.m
+            cfg0 = g0["policy"].config
+            uses_sizes = bool(g0["model"].uses_sizes)
+            item_sizes = g0["env"].sizes() if uses_sizes else None
+            sched = cgm_jax.build_cgm_schedule(
+                trace, cfg0.t_cg, uses_sizes=uses_sizes,
+                batch_size=g0["bs"])
+            from .engine import CacheState
+
+            carry1 = cgm_jax.init_cgm_carry(
+                CacheState.fresh(CliquePartition.singletons(n), m_srv),
+                None, None, n=n, m=m_srv, uses_sizes=uses_sizes,
+                item_sizes=item_sizes)
+            S = len(idxs)
+            spec = {
+                k: np.stack([prepared[i]["spec"][k] for i in idxs])
+                for k in g0["spec"]
+            }
+            cspecs = [
+                cgm_jax.cgm_spec(prepared[i]["policy"].config,
+                                 prepared[i]["policy"].config.params, n)
+                for i in idxs
+            ]
+            cspec = {k: np.stack([np.asarray(c[k]) for c in cspecs])
+                     for k in cspecs[0]}
+            carry0 = {k: np.stack([v] * S) for k, v in carry1.items()}
+            t0g = _time.perf_counter()
+            final, ofs = cgm_jax.run_cgm_schedule(
+                sched, spec, g0["statics"], cspec, carry0, item_sizes,
+                charge=g0["charge"], enable_split=cfg0.enable_split,
+                enable_acm=cfg0.enable_approx_merge, seed_new=g0["seed"],
+                block=False)
+            dev_pending.append((idxs, sched, final, ofs, t0g))
+            if progress is not None:
+                progress(f"device-CGM group of {S} scenario(s) dispatched "
+                         f"({sched.nb} steps, {sched.boundary_steps.size} "
+                         "windows on device)")
 
         pending = []
         for (skey, statics, charge), idxs in groups.items():
@@ -227,10 +440,66 @@ class SweepEngine:
             _, _, acc = ej.run_schedule(
                 schedule, spec, statics, E0, a0, charge=charge, block=False)
             pending.append((idxs, rec, acc, t0))
-        self.last_n_schedules = len(schedules)
+        self.last_n_schedules = (len(schedules) + len(dev_pending)
+                                 + n_shard_schedules)
 
         # -- collect (blocks on the device results) -------------------------
         results: list[RunResult | None] = [None] * len(prepared)
+        for idxs, sched, final, ofs, t0g in dev_pending:
+            final = {k: np.asarray(v) for k, v in final.items()}
+            ofs = np.asarray(ofs)
+            wall = _time.perf_counter() - t0g
+            nbd = int(sched.boundary_steps.size)
+            if progress is not None:
+                progress(f"device-CGM group of {len(idxs)} scenario(s) "
+                         f"replayed in {wall:.2f}s")
+            for lane, i in enumerate(idxs):
+                pr = prepared[i]
+                costs = CostBreakdown(model=pr["statics"][0])
+                ej.apply_acc(costs, sched, final["acc"][lane])
+                part = cgm_jax.partition_from_of(
+                    sched.n, final["of"][lane])
+                hist = []
+                for b in sched.boundary_steps:
+                    sz = np.bincount(ofs[lane, int(b)]).astype(np.int64)
+                    hist.append(sz[sz > 1])
+                results[i] = RunResult(
+                    policy=pr["policy"].name,
+                    costs=costs,
+                    clique_sizes=part.sizes(),
+                    size_history=hist,
+                    n_windows=nbd,
+                    cg_seconds=0.0,
+                    wall_seconds=wall / len(idxs),
+                    config=getattr(pr["policy"], "config", None),
+                )
+        for idxs, recs, acc, t0 in sh_pending:
+            acc = np.asarray(acc)
+            wall = _time.perf_counter() - t0
+            S_sh = len(recs)
+            if progress is not None:
+                progress(f"shard group of {len(idxs)} scenario(s) x "
+                         f"{S_sh} shard(s) replayed in {wall:.2f}s")
+            for li, i in enumerate(idxs):
+                pr = prepared[i]
+                merged = CostBreakdown(model=pr["statics"][0])
+                totals = []
+                for j, rec in enumerate(recs):
+                    cb = CostBreakdown(model=pr["statics"][0])
+                    ej.apply_acc(cb, rec["schedule"], acc[li * S_sh + j])
+                    totals.append(cb.total)
+                    merged.merge(cb)
+                results[i] = RunResult(
+                    policy=pr["policy"].name,
+                    costs=merged,
+                    clique_sizes=recs[0]["clique_sizes"],
+                    size_history=list(recs[0]["size_history"]),
+                    n_windows=recs[0]["n_windows"],
+                    cg_seconds=sum(r["cg_seconds"] for r in recs),
+                    wall_seconds=wall / len(idxs),
+                    config=getattr(pr["policy"], "config", None),
+                    shard_stats=_shard_stats(totals),
+                )
         for idxs, rec, acc, t0 in pending:
             acc = np.atleast_2d(np.asarray(acc))
             wall = _time.perf_counter() - t0

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: initial merge-density matrix D of the Alg.-3 scan.
+
+The device-resident CGM (``core.cgm_jax``) runs the approximate merge as a
+``lax.while_loop`` over a thresholded density matrix
+
+    D[i, j] = density(i u j)   if |i| + |j| == omega and density >= gamma
+            = -1.0             otherwise,
+
+patched incrementally (one row/col per merge).  The initial D is the only
+O(S^2) dense build of the loop; this kernel assembles it on the VPU from the
+pair-edge matrix X = M A M^T (``clique_density.py``) and the group sizes:
+
+    within[i]  = X[i, i] / 2
+    e(i u j)   = (within[i] + within[j]) + X[i, j]
+    D[i, j]    = e / e_max  thresholded as above.
+
+Float32 op order matches ``core.cliques._densities`` exactly (the entries
+are exact small integers in fp32, the quotient is a single rounding), so
+kernel and jnp fallback are bit-identical — the device/host parity bar.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_density_kernel(
+    x_ref, wrow_ref, wcol_ref, srow_ref, scol_ref, om_ref, gm_ref, em_ref,
+    out_ref, *, bm: int,
+):
+    """Grid (Sp/bm,): one row block of D per step, all-pairs elementwise."""
+    i = pl.program_id(0)
+    x = x_ref[...]                                   # (bm, Sp)
+    wi = wcol_ref[...]                               # (bm, 1)
+    wj = wrow_ref[...]                               # (1, Sp)
+    si = scol_ref[...]                               # (bm, 1) int32
+    sj = srow_ref[...]                               # (1, Sp) int32
+    om = om_ref[0, 0]
+    gm = gm_ref[0, 0]
+    em = em_ref[0, 0]
+    r = i * bm + jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    okp = ((si + sj) == om) & (r != c)
+    e_u = (wi + wj) + x
+    dens = jnp.where(okp, e_u / em, -1.0)
+    out_ref[...] = jnp.where(dens >= gm, dens, -1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def merge_density(X, sizes, omega, gamma32, *, bm: int = 128,
+                  interpret: bool = False):
+    """X (S, S) fp32 pair edges, sizes (S,) int32 -> D (S, S) fp32.
+
+    ``omega`` (int32) and ``gamma32`` (float32) are runtime scalars so a
+    vmapped hyperparameter sweep can trace this once.  Pad rows/cols have
+    size 0 and can never pass the ``|i| + |j| == omega`` gate (omega >= 2).
+    """
+    S = X.shape[0]
+    assert X.shape == (S, S) and sizes.shape == (S,)
+    Sp = -(-S // max(bm, 128)) * max(bm, 128)
+    Xp = jnp.zeros((Sp, Sp), jnp.float32).at[:S, :S].set(X)
+    within = jnp.zeros(Sp, jnp.float32).at[:S].set(
+        jnp.diag(X).astype(jnp.float32) / 2.0)
+    sz = jnp.zeros(Sp, jnp.int32).at[:S].set(sizes.astype(jnp.int32))
+    om = jnp.asarray(omega, jnp.int32).reshape(1, 1)
+    gm = jnp.asarray(gamma32, jnp.float32).reshape(1, 1)
+    om_f = jnp.asarray(omega, jnp.float64)
+    em = (om_f * (om_f - 1.0) / 2.0).astype(jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(_merge_density_kernel, bm=bm),
+        grid=(Sp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, Sp), lambda i: (i, 0)),
+            pl.BlockSpec((1, Sp), lambda i: (0, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, Sp), lambda i: (0, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, Sp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, Sp), jnp.float32),
+        interpret=interpret,
+    )(
+        Xp,
+        within.reshape(1, Sp), within.reshape(Sp, 1),
+        sz.reshape(1, Sp), sz.reshape(Sp, 1),
+        om, gm, em,
+    )
+    return out[:S, :S]

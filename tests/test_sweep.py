@@ -280,3 +280,64 @@ def test_inexpressible_cost_model_refused(trace):
     # the numpy backend still prices it fine
     run_policy(get_policy("no_packing", params=PARAMS,
                           cost_model="weird_test_model"), trace)
+
+
+# ---------------------------------------------------------------------------
+# trace-shard axis: shards/seeds as extra vmap lanes, costs merged
+# ---------------------------------------------------------------------------
+def test_sweep_shard_axis_matches_per_shard_serial():
+    """A sharded point merges per-shard costs exactly and reports
+    per-shard dispersion, lane-for-lane with the serial replays."""
+    shards = [_trace(n_requests=1500, seed=s) for s in (3, 4, 5)]
+    pts = [
+        SweepPoint("akpc", shards,
+                   dict(params=CostParams(alpha=a), t_cg=T_CG,
+                        top_frac=TOP_FRAC))
+        for a in (0.7, 0.9)
+    ]
+    eng = SweepEngine()
+    res = eng.run(pts)
+    # scenarios share the per-shard schedules: one build per shard
+    assert eng.last_n_schedules == len(shards)
+    for pt, got in zip(pts, res):
+        subs = [run_policy(get_policy(pt.policy, **pt.policy_kwargs), tr)
+                for tr in shards]
+        merged = {f: sum(s.costs.as_dict()[f] for s in subs)
+                  for f in INT_FIELDS + FLOAT_FIELDS}
+        assert_same_costs(merged, got.costs)
+        st = got.shard_stats
+        assert st is not None and st["n"] == len(shards)
+        np.testing.assert_allclose(
+            st["totals"], [s.costs.total for s in subs], rtol=1e-9)
+        np.testing.assert_allclose(
+            st["mean"], np.mean(st["totals"]), rtol=1e-12)
+        assert st["ci95"] >= 0.0
+
+
+def test_sweep_shard_axis_numpy_backend_parity():
+    """The numpy backend merges shards identically (same RunResult shape)."""
+    shards = [_trace(n_requests=1200, seed=s) for s in (6, 7)]
+    pt = SweepPoint("akpc", shards,
+                    dict(params=PARAMS, t_cg=T_CG, top_frac=TOP_FRAC))
+    got_j = SweepEngine(backend="jax").run([pt])[0]
+    got_n = SweepEngine(backend="numpy").run([pt])[0]
+    assert_same_costs(got_n.costs, got_j.costs)
+    assert got_j.shard_stats["n"] == got_n.shard_stats["n"] == 2
+    np.testing.assert_allclose(
+        got_j.shard_stats["totals"], got_n.shard_stats["totals"], rtol=1e-9)
+    # a plain (unsharded) point keeps shard_stats None
+    plain = SweepEngine().run(
+        [SweepPoint("akpc", shards[0],
+                    dict(params=PARAMS, t_cg=T_CG, top_frac=TOP_FRAC))])[0]
+    assert plain.shard_stats is None
+
+
+def test_sweep_shard_axis_rejects_mismatched_shards():
+    a = _trace(n_requests=500, seed=1)
+    b = synth_trace(SynthConfig(
+        kind="netflix", n_items=61, n_servers=12, n_requests=500,
+        t_max=30.0, bundle_cover=1.0, bundle_zipf=0.7, seed=2))
+    with pytest.raises(ValueError, match="shards must share"):
+        SweepEngine().run([SweepPoint(
+            "akpc", [a, b], dict(params=PARAMS, t_cg=T_CG,
+                                 top_frac=TOP_FRAC))])
