@@ -55,6 +55,7 @@ def method_policies(params: CostParams, t_cg: float, top_frac: float) -> dict:
     """Fig.-5 method set as (registry name -> policy kwargs)."""
     return {
         "no_packing": {},
+        "ttl": dict(t_cg=t_cg),
         "dp_greedy": dict(top_frac=top_frac),
         "packcache": dict(t_cg=t_cg, top_frac=top_frac),
         "akpc_base": dict(t_cg=t_cg, top_frac=top_frac),

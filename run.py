@@ -15,6 +15,9 @@ The smoke gates (each also runnable directly as
 * fig9_cliques_runtime  — vectorized CGM beats the scalar oracle;
                           records device-CGM timing in BENCH_cgm.json
 * fig10_heterogeneous   — heterogeneous cost-model smoke
+* serve_bench           — persistent live serving engine sustains more
+                          req/s than the streamed numpy session at 1e-9
+                          cost parity; records BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -29,6 +32,7 @@ SMOKE_GATES = (
     "benchmarks.fig7_hyperparams",
     "benchmarks.fig9_cliques_runtime",
     "benchmarks.fig10_heterogeneous",
+    "benchmarks.serve_bench",
 )
 
 

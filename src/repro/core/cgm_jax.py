@@ -766,9 +766,18 @@ def _event_step(carry, x, spec, *, kind, charge, uses_sizes, item_sizes,
 # ---------------------------------------------------------------------------
 # the scan: boundary cond -> window accumulate -> events/costs
 # ---------------------------------------------------------------------------
+#: times the fused CGM scan body has been TRACED — the device-CGM
+#: mirror of ``engine_jax.SCAN_TRACES`` (fresh compiles per new input
+#: structure); the live serving engine asserts chunk streams reuse ONE
+#: compiled scan (tests/test_serving_live.py)
+SCAN_TRACES = 0
+
+
 def _cgm_replay_impl(spec, cspec, init, xs, item_sizes, *, kind, charge,
                      uses_sizes, enable_split, enable_acm, seed_new,
                      use_kernels):
+    global SCAN_TRACES
+    SCAN_TRACES += 1
     n = init["of"].shape[0]
     m = init["E"].shape[1]
     dt = spec["dt"]

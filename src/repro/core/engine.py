@@ -425,6 +425,8 @@ class ReplayEngine:
             except Exception:           # kernels layer unavailable: pure numpy
                 lookup = _numpy_clique_lookup
         self._lookup = lookup
+        self._item_keep: np.ndarray | None = None
+        self._clique_nk: np.ndarray | None = None
         self.state = CacheState.fresh(CliquePartition.singletons(n), m)
         self._set_partition_caches(self.state.partition)
         self.costs = CostBreakdown(model=self.model.name)
@@ -434,11 +436,60 @@ class ReplayEngine:
         self._sizes = partition.sizes().astype(np.int64)
         if self._item_sizes is None or partition.k == 0:
             self._csizes = None
+        else:
+            order = partition.member_order()
+            starts = np.zeros(partition.k, np.int64)
+            np.cumsum(self._sizes[:-1], out=starts[1:])
+            self._csizes = np.add.reduceat(self._item_sizes[order], starts)
+        self._refresh_clique_nk(partition)
+
+    def _refresh_clique_nk(self, partition: CliquePartition) -> None:
+        """Clique-level keep-or-not mask: nokeep iff ANY member is nokeep."""
+        if self._item_keep is None or partition.k == 0:
+            self._clique_nk = None
             return
         order = partition.member_order()
         starts = np.zeros(partition.k, np.int64)
         np.cumsum(self._sizes[:-1], out=starts[1:])
-        self._csizes = np.add.reduceat(self._item_sizes[order], starts)
+        nk = (~self._item_keep).astype(np.int64)
+        self._clique_nk = np.add.reduceat(nk[order], starts) > 0
+
+    # ------------------------------------------------------------------
+    # keep-or-not masks (TTL baseline, arXiv 1312.0499)
+    # ------------------------------------------------------------------
+    def set_item_keep(
+        self, keep: np.ndarray | None, evict: bool = True
+    ) -> None:
+        """Install a per-item keep-or-not mask.
+
+        Items with ``keep[i] == False`` are never cached: every access of a
+        clique containing one is a forced miss priced as a full transfer
+        with zero caching/keepalive charge, and the clique's state writes
+        are suppressed.  With ``evict=True`` (the window-boundary sync),
+        cliques containing an item that JUST flipped keep->nokeep drop
+        their cached copies (E row zeroed, anchor cleared); cliques that
+        stayed nokeep already hold no state — the invariant "nokeep clique
+        => zero state" is maintained at every boundary.  ``None`` removes
+        the mask entirely.
+        """
+        if keep is None:
+            self._item_keep = None
+            self._clique_nk = None
+            return
+        keep = np.asarray(keep, dtype=bool)
+        if keep.shape != (self.n,):
+            raise ValueError(f"keep mask shape {keep.shape} != ({self.n},)")
+        old = self._item_keep
+        self._item_keep = keep.copy()
+        self._refresh_clique_nk(self.state.partition)
+        if not evict or self._clique_nk is None:
+            return
+        newly_nk = ~keep if old is None else (old & ~keep)
+        if newly_nk.any():
+            rows = np.unique(
+                self.state.partition.clique_of[np.nonzero(newly_nk)[0]])
+            self.state.E[rows] = 0.0
+            self.state.anchor[rows] = -1
 
     # ------------------------------------------------------------------
     # Alg. 1 Event 1 — install a freshly generated partition
@@ -494,6 +545,12 @@ class ReplayEngine:
             anchor[present] = np.argmax(fresh, axis=1)[present].astype(np.int32)
 
             need_seed = changed & (row_max <= 0) & (new_sizes > 1)
+            if self._item_keep is not None and need_seed.any():
+                # never seed a clique holding a keep-or-not evicted item:
+                # its state must stay zero until the mask flips back
+                has_nk = np.add.reduceat(
+                    (~self._item_keep)[order].astype(np.int64), starts) > 0
+                need_seed &= ~has_nk
             if (
                 self.seed_new_cliques
                 and window_items is not None
@@ -578,6 +635,15 @@ class ReplayEngine:
             anchor_alive = (anchor_seen == ev_j) & (E_before > 0.0)
 
         fresh = E_before > ev_t
+        if self._clique_nk is not None:
+            # keep-or-not (TTL) cliques are forced misses — the in-batch
+            # lag chains would otherwise fabricate hits from state writes
+            # the nokeep mask suppresses below
+            nk_ev = self._clique_nk[ev_c]
+            fresh = fresh & ~nk_ev
+            anchor_alive = anchor_alive & ~nk_ev
+        else:
+            nk_ev = None
         alive = fresh | anchor_alive
         miss = ~alive
 
@@ -603,6 +669,8 @@ class ReplayEngine:
             rate = rate_stored
         dur = np.maximum((ev_t + dt_e) - np.maximum(e_eff, ev_t), 0.0)
         ccost = rate * dur
+        if nk_ev is not None:
+            ccost = np.where(nk_ev, 0.0, ccost)   # nokeep: nothing is stored
 
         self.costs.transfer += float(tc.sum())
         self.costs.caching += float(ccost.sum())
@@ -613,7 +681,10 @@ class ReplayEngine:
         self.costs.items_transferred += int(size[miss].sum())
 
         # --- state update: segment-last expiry + final anchor -------------
+        # (nokeep cliques never store state: their writes are filtered out)
         li = o_cj[ev.last_cj_s]
+        if nk_ev is not None:
+            li = li[~nk_ev[li]]
         if self._dt_const:
             st.E[ev_c[li], ev_j[li]] = ev_t[li] + dt_e
         else:
@@ -621,6 +692,8 @@ class ReplayEngine:
 
         if self._dt_const:
             lc = o_c[ev.last_c_s]
+            if nk_ev is not None:
+                lc = lc[~nk_ev[lc]]
             # guard (matters only for out-of-order manual calls): keep the
             # old anchor when its expiry still beats the batch's last touch
             a_cur = st.anchor[ev_c[lc]].astype(np.int64)
@@ -628,6 +701,9 @@ class ReplayEngine:
             upd = (a_cur < 0) | (ev_t[lc] + dt_e >= a_E)
             st.anchor[ev_c[lc[upd]]] = ev_j[lc[upd]]
         else:
+            if nk_ev is not None:
+                keepc = ~self._clique_nk[final_lc]
+                final_lc, final_anchor = final_lc[keepc], final_anchor[keepc]
             st.anchor[final_lc] = final_anchor
 
         return BatchOutcome(
@@ -754,6 +830,15 @@ class ReplayEngine:
         if R == 0:
             return self.costs
         use_cg = clique_generator is not None and t_cg is not None
+        # keep-or-not policies (TTL) expose an `item_keep()` hook on the
+        # object whose bound method was passed as the generator; sync the
+        # engine's mask with it at start and after every regeneration
+        keep_fn = None
+        if use_cg:
+            pol = getattr(clique_generator, "__self__", None)
+            keep_fn = getattr(pol, "item_keep", None)
+            if keep_fn is not None:
+                self.set_item_keep(keep_fn(), evict=False)
         next_cg = float(times[0]) + t_cg if t_cg is not None else np.inf
         win_start = 0
         pos = 0
@@ -770,6 +855,8 @@ class ReplayEngine:
                     part = clique_generator(w_it, w_sv, t)
                     if part is not None:
                         self.install_partition(part, t, w_it, w_sv)
+                    if keep_fn is not None:
+                        self.set_item_keep(keep_fn())
                     win_start = pos
                     while next_cg <= t:
                         next_cg += t_cg

@@ -281,6 +281,29 @@ def build_schedule(
     cur = partition0
     sizes_c, csizes_c = _part_cost_arrays(cur, item_sizes)
 
+    # keep-or-not (TTL) hook: a policy exposing ``item_keep()`` on the
+    # generator's bound object ships a per-event nokeep mask plus boundary
+    # eviction rows through the schedule — the device mirror of
+    # ``ReplayEngine.set_item_keep`` (engine.py)
+    keep_fn = None
+    if clique_generator is not None:
+        pol = getattr(clique_generator, "__self__", None)
+        keep_fn = getattr(pol, "item_keep", None)
+
+    def _clique_nk_of(part: CliquePartition, keep: np.ndarray) -> np.ndarray:
+        """Clique-level nokeep mask: nokeep iff ANY member is nokeep."""
+        if part.k == 0:
+            return np.zeros(0, bool)
+        psz = part.sizes().astype(np.int64)
+        order = part.member_order()
+        starts = np.zeros(part.k, np.int64)
+        np.cumsum(psz[:-1], out=starts[1:])
+        return np.add.reduceat((~keep)[order].astype(np.int64), starts) > 0
+
+    cur_keep = (np.asarray(keep_fn(), bool).copy()
+                if keep_fn is not None else None)
+    cur_nk = _clique_nk_of(cur, cur_keep) if cur_keep is not None else None
+
     batches: list[dict] = []
     pending_install: dict | None = None
     n_requests = 0
@@ -305,12 +328,15 @@ def build_schedule(
             "n_req": n_req, "req_size": np.asarray(req_size, np.float64),
             "install": pending_install,
         }
+        if cur_nk is not None:
+            rec["nk"] = (cur_nk[ev.ev_c] if ev.n_events
+                         else np.zeros(0, bool))
         pending_install = None
         batches.append(rec)
 
     def _record_install(part: CliquePartition, now: float,
                         w_it: np.ndarray, w_sv: np.ndarray) -> None:
-        nonlocal pending_install, cur, sizes_c, csizes_c
+        nonlocal pending_install, cur, sizes_c, csizes_c, cur_keep, cur_nk
         if pending_install is not None:     # two Event-1s with no requests
             _emit(0, 0)                     # between them: flush on an
             # empty batch so installs stay one-per-scan-step
@@ -336,15 +362,51 @@ def build_schedule(
             js = window_seed_servers(n, m, part, w_it, w_sv)
             seed_j = js[chg].astype(np.int32)
             seed_ok = new_sizes[chg] > 1
+            if cur_keep is not None:
+                # OLD-mask guard (engine install_partition): never seed a
+                # clique holding a keep-or-not evicted item
+                has_nk = np.bincount(
+                    chg_seg,
+                    weights=(~cur_keep)[chg_item].astype(np.float64),
+                    minlength=chg.size) > 0
+                seed_ok &= ~has_nk
         # matched cliques that KEPT their index need no write at all — in
         # the steady state (partition drifting slowly) the whole install
         # reduces to a handful of row scatters
         mov = np.nonzero(matched & (cand != np.arange(k)))[0]
+        chg_ok = np.ones(chg.size, bool)
+        if keep_fn is not None:
+            # NEW-mask boundary eviction (engine set_item_keep): cliques
+            # holding an item that just flipped keep->nokeep drop their
+            # copies.  Rows already in chg flip ok=False (the install step
+            # turns ok=False rows into E=0 / anchor=-1); other evicted
+            # rows join chg as member-less ok=False rows; moved copies of
+            # evicted cliques are dropped from the row-move list.
+            new_keep = np.asarray(keep_fn(), bool).copy()
+            newly_nk = cur_keep & ~new_keep
+            if newly_nk.any():
+                ev_rows = np.unique(
+                    part.clique_of[np.nonzero(newly_nk)[0]]).astype(np.int64)
+                evict = np.zeros(k, bool)
+                evict[ev_rows] = True
+                chg_ok[evict[chg]] = False
+                mov = mov[~evict[mov]]
+                extra = ev_rows[~np.isin(ev_rows, chg)]
+                chg = np.concatenate([chg, extra])
+                chg_ok = np.concatenate(
+                    [chg_ok, np.zeros(extra.size, bool)])
+                seed_j = np.concatenate(
+                    [seed_j, np.zeros(extra.size, np.int32)])
+                seed_ok = np.concatenate(
+                    [seed_ok, np.zeros(extra.size, bool)])
+            cur_keep = new_keep
+            cur_nk = _clique_nk_of(part, new_keep)
         pending_install = {
             "now": np.float64(now),
             "mov_dst": mov.astype(np.int32),
             "mov_src": cand[mov].astype(np.int32),
             "chg_rows": chg.astype(np.int32),
+            "chg_ok": chg_ok,
             "chg_src": cur.clique_of[chg_item].astype(np.int32),
             "chg_seg": chg_seg.astype(np.int32),
             "seed_j": seed_j,
@@ -395,6 +457,11 @@ def build_schedule(
                 part = clique_generator(w_it, w_sv, t)
                 if part is not None:
                     _record_install(part, t, w_it, w_sv)
+                elif keep_fn is not None and not np.array_equal(
+                        cur_keep, np.asarray(keep_fn(), bool)):
+                    # mask moved without a new partition: identity install
+                    # record carrying only the boundary evictions
+                    _record_install(cur, t, w_it, w_sv)
                 win_start = pos
                 boundary_hit = True
                 while next_cg <= t:
@@ -479,6 +546,11 @@ def build_schedule(
         "inst_chg_src": zeros(np.int32, nci),
         "inst_chg_seg": np.full((nb, nci), ncr - 1, np.int32),
     }
+    if keep_fn is not None:
+        # presence keyed on the HOOK, not the mask content: an all-keep
+        # window still ships the (all-False) tensor so every chunk of a
+        # stream shares one input structure (and one compile)
+        xs["nokeep"] = zeros(bool, ne)
     if uses_sizes:
         # count-based models (table1) read size/n_req twice instead of
         # shipping duplicate volume tensors through the scan
@@ -523,9 +595,19 @@ def build_schedule(
             xs["prev_cj_t"][b, :e] = ev.prev_cj_t
             li = ev.o_cj[ev.last_cj_s]          # one event per (c, j) pair
             lc = ev.o_c[ev.last_c_s]            # one event per clique
-            xs["upd_c"][b, : li.size] = ev.ev_c[li]
+            nk_e = rec.get("nk")
+            if nk_e is not None:
+                xs["nokeep"][b, :e] = nk_e
+                # nokeep cliques never store state: route their compacted
+                # expiry/anchor writes to the dump row
+                xs["upd_c"][b, : li.size] = np.where(
+                    nk_e[li], K, ev.ev_c[li])
+                xs["anc_c"][b, : lc.size] = np.where(
+                    nk_e[lc], K, ev.ev_c[lc])
+            else:
+                xs["upd_c"][b, : li.size] = ev.ev_c[li]
+                xs["anc_c"][b, : lc.size] = ev.ev_c[lc]
             xs["upd_j"][b, : li.size] = ev.ev_j[li]
-            xs["anc_c"][b, : lc.size] = ev.ev_c[lc]
             if const_dt:
                 xs["first_c"][b, :e] = ev.first_c
                 xs["prev_j"][b, :e] = ev.prev_j
@@ -555,7 +637,7 @@ def build_schedule(
             xs["inst_mov_dst"][b, :nv] = inst["mov_dst"]
             xs["inst_mov_src"][b, :nv] = inst["mov_src"]
             xs["inst_chg_rows"][b, :nr] = inst["chg_rows"]
-            xs["inst_chg_ok"][b, :nr] = True
+            xs["inst_chg_ok"][b, :nr] = inst["chg_ok"]
             xs["inst_seed_j"][b, :nr] = inst["seed_j"]
             xs["inst_seed_ok"][b, :nr] = inst["seed_ok"]
             xs["inst_chg_src"][b, :ni] = inst["chg_src"]
@@ -683,8 +765,17 @@ def _install_step(E, anchor, x, dt):
     return E, anchor
 
 
+#: number of times the scan body has been TRACED.  jax re-traces (and XLA
+#: recompiles) once per new input structure, so the delta of this counter
+#: across a run counts fresh compiles — tests assert chunked/streamed
+#: replays reuse ONE compiled scan (tests/test_serving_live.py)
+SCAN_TRACES = 0
+
+
 def _replay_impl(spec, init, xs, *, kind, charge, const_dt, use_pallas):
     """scan body closure; (spec, init) may carry a vmapped scenario axis."""
+    global SCAN_TRACES
+    SCAN_TRACES += 1
     seg_max_fn, seg_argmax_fn = _seg_hooks(use_pallas)
     dt = spec["dt"]
 
@@ -737,6 +828,12 @@ def _replay_impl(spec, init, xs, *, kind, charge, const_dt, use_pallas):
             anchor_alive = (anchor_seen == j) & (E_before > 0.0)
 
         fresh = E_before > t
+        if "nokeep" in x:
+            # keep-or-not (TTL) cliques: forced miss — their state writes
+            # are routed to the dump row, so lag chains must not
+            # fabricate hits from them (mirrors engine.handle_batch)
+            fresh = fresh & ~x["nokeep"]
+            anchor_alive = anchor_alive & ~x["nokeep"]
         alive = fresh | anchor_alive
         miss = (~alive) & val
         lapsed = alive & (~fresh) & val
@@ -761,7 +858,8 @@ def _replay_impl(spec, init, xs, *, kind, charge, const_dt, use_pallas):
         else:
             rate = rate_stored
         dur = jnp.maximum((t + dt_e) - jnp.maximum(e_eff, t), 0.0)
-        cc = jnp.where(val, rate * dur, 0.0)
+        cval = (val & ~x["nokeep"]) if "nokeep" in x else val
+        cc = jnp.where(cval, rate * dur, 0.0)
 
         nm = miss.sum()
         acc = acc + jnp.stack([
@@ -975,12 +1073,14 @@ class JaxReplayEngine:
         win_prefix: tuple[np.ndarray, np.ndarray] | None = None,
     ) -> CostBreakdown:
         eng = self.engine
+        keep_fn = None
         if clique_generator is not None and t_cg is not None:
+            pol = getattr(clique_generator, "__self__", None)
+            keep_fn = getattr(pol, "item_keep", None)
             # device-resident CGM (DESIGN.md §11): when the generator is
             # an unmodified AKPC ``on_window`` the whole merge/split loop
             # runs inside the scan — raw request tensors go up, costs
             # come back, zero host clique-generation calls
-            pol = getattr(clique_generator, "__self__", None)
             if pol is not None:
                 from .cgm_jax import replay_cgm, wants_device_cgm
 
@@ -996,6 +1096,16 @@ class JaxReplayEngine:
             next_cg0=next_cg0, win_prefix=win_prefix, lookup=eng._lookup,
             progress=progress,
         )
+        # shape-stability ratchet: pad every chunk's tensors up to the
+        # largest dims this engine has seen, so a streamed session (ragged
+        # tail chunks included) reuses one compiled scan instead of
+        # recompiling per chunk shape (tests/test_serving_live.py)
+        dims = schedule_dims(schedule)
+        prev = getattr(self, "_dims", None)
+        if prev is not None:
+            dims = {k: max(dims[k], prev[k]) for k in dims}
+        self._dims = dims
+        schedule = pad_schedule(schedule, dims)
         self.last_schedule = schedule
         E0, a0 = state_to_device(eng.state, schedule.n)
         E, anchor, acc = run_schedule(
@@ -1007,6 +1117,10 @@ class JaxReplayEngine:
             anchor=anchor[: part.k].copy(), m=eng.m)
         eng._set_partition_caches(part)
         apply_acc(eng.costs, schedule, acc)
+        if keep_fn is not None:
+            # boundary evictions already ran on device; this only aligns
+            # the numpy engine's mask for any later host-side feed()
+            eng.set_item_keep(keep_fn(), evict=False)
         return eng.costs
 
 

@@ -280,6 +280,73 @@ class NoPackingPolicy(BasePolicy):
         self.batch_size = batch_size
 
 
+@register_policy("ttl")
+class TTLKeepOrNotPolicy(BasePolicy):
+    """Keep-or-not TTL baseline (Le Scouarnec et al., arXiv 1312.0499).
+
+    No packing: the partition is always the singleton partition.  At every
+    T_CG boundary the previous window's request counts decide, per item,
+    whether a cached copy pays for itself over the next window: item i is
+    KEPT iff its window demand covers the rent of one copy,
+    ``count_i * lam >= keep_factor * mu * t_cg``.  Items voted "nokeep"
+    are never cached — every access is a forced miss priced as a plain
+    transfer, realised through the engine's keep-or-not mask
+    (:meth:`repro.core.engine.ReplayEngine.set_item_keep`), which the
+    replay drivers sync via the :meth:`item_keep` hook.
+
+    ``on_window`` always returns a partition (even though it never
+    changes): keep-or-not policies must produce an install record at every
+    boundary so the device schedule has a row to hang evictions on.
+    """
+
+    name = "ttl"
+
+    def __init__(
+        self,
+        params: CostParams | None = None,
+        t_cg: float = 50.0,
+        keep_factor: float = 1.0,
+        caching_charge: CachingCharge = "requested",
+        batch_size: int | None = None,
+        env: CacheEnvironment | None = None,
+        cost_model: str | CostModel = "table1",
+    ):
+        super().__init__(params, env=env, cost_model=cost_model)
+        self.t_cg = t_cg
+        self.keep_factor = keep_factor
+        self.caching_charge = caching_charge
+        self.batch_size = batch_size
+
+    def bind(self, n: int, m: int) -> None:
+        super().bind(n, m)
+        self._keep = np.ones(n, dtype=bool)
+
+    def item_keep(self) -> np.ndarray:
+        """Engine keep-or-not hook: the current per-item keep mask."""
+        return self._keep
+
+    def on_window(self, items, servers, now):
+        del servers, now
+        t0 = _time.perf_counter()
+        flat = items[items >= 0]
+        counts = np.bincount(flat, minlength=self.n).astype(np.float64)
+        p = self.params
+        self._keep = counts * p.lam >= self.keep_factor * p.mu * self.t_cg
+        part = CliquePartition.singletons(self.n)
+        self._record(part, _time.perf_counter() - t0)
+        return part
+
+    def state_dict(self) -> dict:
+        d = super().state_dict()
+        d["keep"] = self._keep.copy()
+        return d
+
+    def load_state_dict(self, state, partition=None) -> None:
+        super().load_state_dict(state, partition)
+        if "keep" in state:
+            self._keep = np.asarray(state["keep"]).astype(bool).copy()
+
+
 @register_policy("packcache", "packcache2")
 class PackCache2Policy(BasePolicy):
     """Wu et al. [2]: ONLINE pairwise (2-)packing; FP-tree pair mining

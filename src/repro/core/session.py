@@ -267,7 +267,12 @@ class CacheSession:
         windowed = self._t_cg is not None
         if windowed and self._next_cg is None:
             self._next_cg = float(trace.times[0]) + self._t_cg
-        jeng = JaxReplayEngine(engine=self.engine)
+        # one JaxReplayEngine per session: its shape ratchet + jit caches
+        # survive across chunks, so ragged tail chunks pad into the fixed
+        # chunk shape instead of compiling a fresh scan
+        jeng = getattr(self, "_jeng", None)
+        if jeng is None:
+            jeng = self._jeng = JaxReplayEngine(engine=self.engine)
         win_prefix = self._window_arrays() if windowed and self._win else None
         jeng.replay(
             trace,
@@ -314,6 +319,9 @@ class CacheSession:
         part = self.policy.on_window(w_it, w_sv, t)
         if part is not None:
             self.engine.install_partition(part, t, w_it, w_sv)
+        keep_fn = getattr(self.policy, "item_keep", None)
+        if keep_fn is not None:     # keep-or-not boundary sync (TTL)
+            self.engine.set_item_keep(keep_fn())
         self._win = []
 
     # -- results -----------------------------------------------------------
@@ -459,6 +467,11 @@ class CacheSession:
         self._win = [] if w_it.shape[0] == 0 else [(w_it, w_sv)]
         if hasattr(self.policy, "load_state_dict"):
             self.policy.load_state_dict(snap.get("policy", {}), partition=part)
+        keep_fn = getattr(self.policy, "item_keep", None)
+        if keep_fn is not None:
+            # snapshotted state already reflects past evictions; only the
+            # engine's mask needs re-aligning with the restored policy
+            self.engine.set_item_keep(keep_fn(), evict=False)
         return self
 
     # -- persistence (repro.checkpoint) --------------------------------------

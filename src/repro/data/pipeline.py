@@ -97,8 +97,11 @@ class PackedDataPipeline:
     def __init__(self, store: ShardStore, *, batch_rows: int, seq_len: int,
                  host_id: int = 0, n_hosts: int = 1, seed: int = 0,
                  params: CostParams | None = None, t_cg: float = 64.0,
-                 cost_model: str = "table1"):
+                 cost_model: str = "table1", backend: str = "session"):
+        if backend not in ("session", "live"):
+            raise ValueError(f"unknown pipeline cache backend {backend!r}")
         self.store = store
+        self.backend = backend
         self.batch_rows = batch_rows
         self.seq_len = seq_len
         self.host_id = host_id
@@ -113,13 +116,21 @@ class PackedDataPipeline:
             n=store.n_shards, m=n_hosts, params=params,
             item_sizes=store.item_sizes(),
         )
-        self._make_session = lambda: CacheSession(
-            get_policy("akpc", params=params, t_cg=t_cg, top_frac=1.0,
-                       cost_model=cost_model),
-            store.n_shards,
-            n_hosts,
-            env=env,
-        )
+        def _make_session():
+            policy = get_policy(
+                "akpc", params=params, t_cg=t_cg, top_frac=1.0,
+                cost_model=cost_model)
+            if backend == "live":
+                # device-resident shard cache (serving/live.py): per-step
+                # feeds buffer into async device chunks; telemetry totals
+                # settle at chunk granularity (exact after drain())
+                from ..serving.live import LiveServingEngine
+
+                return LiveServingEngine(
+                    policy, store.n_shards, n_hosts, env=env)
+            return CacheSession(policy, store.n_shards, n_hosts, env=env)
+
+        self._make_session = _make_session
         self.cache = self._make_session()
         self.params = params
         self.env = env

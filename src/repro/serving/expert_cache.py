@@ -16,6 +16,11 @@ Routing outcomes stream through a :class:`repro.core.session.CacheSession`
 (the AKPC policy from the registry): ``observe`` feeds them online, T_CG
 windowing/regeneration happens inside the session, and ``snapshot``/
 ``restore`` checkpoint the live cache state together with the server.
+``backend="live"`` swaps the session for a device-resident
+:class:`repro.serving.live.LiveServingEngine` — observations buffer into
+asynchronously dispatched device chunks and the cache state stays on the
+accelerator between serving steps (checkpoints stay interchangeable with
+the plain session backend).
 ``packed_tables`` materialises the cliques as a contiguous packed weight
 table so the actual gather uses kernels/packed_lookup (one DMA per clique
 instead of omega scattered row reads).
@@ -60,13 +65,17 @@ class ExpertCacheManager:
                  params: CostParams | None = None, t_cg: float = 32.0,
                  d_max: int = 8,
                  expert_bytes: np.ndarray | None = None,
-                 cost_model: str = "table1"):
+                 cost_model: str = "table1",
+                 backend: str = "session"):
+        if backend not in ("session", "live"):
+            raise ValueError(f"unknown expert-cache backend {backend!r}")
         self.n_experts = n_experts
         self.n_hosts = n_hosts
         self.params = params or CostParams(alpha=0.6, rho=4.0, omega=5)
         self.t_cg = t_cg
         self.d_max = d_max
         self.cost_model = cost_model
+        self.backend = backend
         sizes = None
         if expert_bytes is not None:
             b = np.asarray(expert_bytes, dtype=np.float64)
@@ -77,13 +86,19 @@ class ExpertCacheManager:
             sizes = b / b.mean()          # mean-1 volumes
         self.env = CacheEnvironment(
             n=n_experts, m=n_hosts, params=self.params, item_sizes=sizes)
-        self.session = CacheSession(
-            get_policy("akpc", params=self.params, t_cg=t_cg, top_frac=1.0,
-                       cost_model=cost_model),
-            n_experts,
-            n_hosts,
-            env=self.env,
-        )
+        policy = get_policy("akpc", params=self.params, t_cg=t_cg,
+                            top_frac=1.0, cost_model=cost_model)
+        if backend == "live":
+            # device-resident streaming session (serving/live.py): observe
+            # calls buffer into async device chunks; stats()/snapshot()
+            # drain so readers always see settled numbers
+            from .live import LiveServingEngine
+
+            self.session = LiveServingEngine(
+                policy, n_experts, n_hosts, env=self.env)
+        else:
+            self.session = CacheSession(
+                policy, n_experts, n_hosts, env=self.env)
         self._hist: list[tuple[np.ndarray, int, float]] = []
         self._t = 0.0
 
@@ -106,10 +121,18 @@ class ExpertCacheManager:
             np.full(len(rows), self._t, np.float64),
         )
 
+    def _settle(self) -> None:
+        """Live backend: flush + block so costs/partition are settled."""
+        drain = getattr(self.session, "drain", None)
+        if drain is not None:
+            drain()
+
     # -- checkpointing -------------------------------------------------------
     def snapshot(self) -> dict:
         """Session state + the manager's clock/history (pure-numpy pytree,
-        ``repro.checkpoint``-compatible)."""
+        ``repro.checkpoint``-compatible).  Drained first, so the snapshot
+        restores into either backend."""
+        self._settle()
         d = max((len(g) for g, _, _ in self._hist), default=1)
         items = np.full((len(self._hist), d), -1, np.int32)
         hosts = np.empty(len(self._hist), np.int32)
@@ -142,6 +165,7 @@ class ExpertCacheManager:
 
     # -- introspection -------------------------------------------------------
     def cliques(self) -> list[tuple[int, ...]]:
+        self._settle()
         return self.session.partition.canonical()
 
     def packed_tables(self, expert_weights: np.ndarray):
@@ -164,6 +188,7 @@ class ExpertCacheManager:
         return table, where
 
     def stats(self) -> ExpertCacheStats:
+        self._settle()
         # replay the same observation history through No-Packing
         if self._hist:
             d_max = max(len(g) for g, _, _ in self._hist)

@@ -58,6 +58,21 @@ class SynthConfig:
     # (think mixed episode lengths / track bitrates)
     size_dist: str = "unit"          # "unit" | "lognormal" | "pareto"
     size_sigma: float = 0.75         # lognormal log-std / pareto tail shape
+    # non-stationary request volume (Carlsson & Eager's time-varying
+    # arrival model, arXiv 1803.03914): session starts follow a rate
+    # profile lambda(t) instead of the uniform (stationary) default.
+    # The SAME uniform draws are warped through the inverse CDF of
+    # lambda, so request CONTENT (bundles, servers, items) is identical
+    # across profiles at a fixed seed — only arrival times shift.
+    load_profile: str = "stationary"  # | "diurnal" | "flash_crowd"
+    #                                 # | "regime_shift"
+    load_strength: float = 0.8       # diurnal amplitude in [0, 1) /
+    #                                  flash-crowd peak height (x base) /
+    #                                  regime-shift rate ratio
+    load_cycles: float = 2.0         # diurnal periods over the horizon
+    load_peak: float = 0.5           # crowd centre / shift point (frac of
+    #                                  t_max)
+    load_width: float = 0.05         # flash-crowd sigma (frac of t_max)
 
     def bundle_size_range(self) -> tuple[int, int]:
         return (4, 10) if self.kind == "netflix" else (8, 20)
@@ -118,6 +133,46 @@ def _item_sizes(cfg: SynthConfig, rng: np.random.Generator) -> np.ndarray | None
     raise ValueError(f"unknown size_dist: {cfg.size_dist!r}")
 
 
+def load_rate(cfg: SynthConfig, t: np.ndarray) -> np.ndarray:
+    """Arrival-rate profile lambda(t) on [0, t_max] (mean-level ~1).
+
+    * ``diurnal`` — sinusoidal day/night cycle (``load_cycles`` periods,
+      amplitude ``load_strength``);
+    * ``flash_crowd`` — Gaussian surge of height ``load_strength`` x base
+      at ``load_peak``, width ``load_width`` (viral content / live event);
+    * ``regime_shift`` — base rate jumps by factor ``load_strength`` at
+      ``load_peak`` (catalog launch / market shift).
+    """
+    t = np.asarray(t, np.float64)
+    x = t / max(cfg.t_max, 1e-12)
+    if cfg.load_profile == "stationary":
+        return np.ones_like(t)
+    if cfg.load_profile == "diurnal":
+        a = min(max(cfg.load_strength, 0.0), 0.999)
+        return 1.0 + a * np.sin(2.0 * np.pi * cfg.load_cycles * x)
+    if cfg.load_profile == "flash_crowd":
+        w = max(cfg.load_width, 1e-6)
+        return 1.0 + cfg.load_strength * np.exp(
+            -0.5 * ((x - cfg.load_peak) / w) ** 2)
+    if cfg.load_profile == "regime_shift":
+        return np.where(x < cfg.load_peak, 1.0, cfg.load_strength)
+    raise ValueError(f"unknown load_profile: {cfg.load_profile!r}")
+
+
+def _warp_times(cfg: SynthConfig, u: np.ndarray) -> np.ndarray:
+    """Uniform draws -> arrival times under ``load_rate`` via the inverse
+    CDF (dense-grid trapezoid + interp); stationary profiles pass through
+    as ``u * t_max``, matching the legacy uniform draw exactly."""
+    if cfg.load_profile == "stationary":
+        return u * cfg.t_max
+    grid = np.linspace(0.0, cfg.t_max, 4097)
+    lam = load_rate(cfg, grid)
+    cdf = np.concatenate([
+        [0.0], np.cumsum(0.5 * (lam[1:] + lam[:-1]) * np.diff(grid))])
+    cdf /= cdf[-1]
+    return np.interp(u, cdf, grid)
+
+
 def _zipf_choice(rng: np.random.Generator, n: int, s: float, size: int) -> np.ndarray:
     """Zipf(s)-distributed choices over [0, n) (rank 0 = most popular)."""
     w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** s
@@ -169,7 +224,13 @@ def synth_trace(cfg: SynthConfig) -> Trace:
             sess_bundle[escape] = _zipf_choice(rng, n_bundles, cfg.bundle_zipf, n_esc)
     else:
         sess_bundle = _zipf_choice(rng, n_bundles, cfg.bundle_zipf, n_sessions)
-    sess_start = rng.uniform(0.0, cfg.t_max, size=n_sessions)
+    if cfg.load_profile == "stationary":
+        sess_start = rng.uniform(0.0, cfg.t_max, size=n_sessions)
+    else:
+        # same rng consumption as the stationary draw: content identical
+        # across profiles at a fixed seed, only arrival times warp
+        sess_start = _warp_times(
+            cfg, rng.uniform(0.0, 1.0, size=n_sessions))
 
     # expand per-request arrays
     req_sess = np.repeat(np.arange(n_sessions), sess_len)

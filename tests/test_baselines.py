@@ -41,3 +41,46 @@ def test_akpc_beats_online_baselines(results):
 
 def test_packing_beats_no_packing(results):
     assert results["pc2"].total < results["nopack"].total
+
+
+# ---------------------------------------------------------------------------
+# TTL keep-or-not baseline (PR 7; Le Scouarnec et al., arXiv 1312.0499)
+# ---------------------------------------------------------------------------
+def test_ttl_keep_or_not_semantics():
+    """Hot items stay cached (hits), items voted nokeep are forced
+    misses: every access to them prices as a plain transfer."""
+    import numpy as np
+
+    from repro.core import get_policy, run_policy
+    from repro.traces.loader import Trace
+
+    params = CostParams()
+    t_cg = 4.0
+    # item 0: dense re-access well inside the TTL (kept after window 1);
+    # item 1: one lonely request per window (voted nokeep)
+    times, items = [], []
+    t = 0.0
+    while t < 20.0:
+        times += [t, t + 0.05]
+        items += [0, 1 if int(t) % 4 == 0 else 0]
+        t += 0.1
+    order = np.argsort(times, kind="stable")
+    tr = Trace(times=np.asarray(times, np.float64)[order],
+               servers=np.zeros(len(times), np.int32),
+               items=np.asarray(items, np.int32)[order].reshape(-1, 1),
+               n=2, m=1, name="ttl-unit")
+    res = run_policy(get_policy("ttl", params=params, t_cg=t_cg), tr)
+    nopack = run_no_packing(tr, params)
+    assert res.costs.n_hits > 0                      # item 0 stays resident
+    # nokeep items never pay caching rent, so TTL undercuts always-cache
+    assert res.costs.total <= nopack.total
+    # no packing ever happens: the partition is all singletons
+    assert (res.clique_sizes == 1).all()
+
+    # the keep vote survives a snapshot (policy state_dict carries it)
+    keep = get_policy("ttl", params=params, t_cg=t_cg)
+    run_policy(keep, tr)
+    state = keep.state_dict()
+    fresh = get_policy("ttl", params=params, t_cg=t_cg)
+    fresh.load_state_dict(state)
+    assert np.array_equal(fresh.item_keep(), keep.item_keep())

@@ -81,3 +81,61 @@ def test_batched_server_generates():
     done = srv.run(max_steps=200)
     assert len(done) == 3
     assert all(len(r.out) == 4 or r.out[-1] == srv.eos for r in done)
+
+
+# ---------------------------------------------------------------------------
+# backend="live" routing (PR 7): device-resident session behind the same API
+# ---------------------------------------------------------------------------
+def test_expert_cache_live_backend_matches_session():
+    def run(backend):
+        rng = np.random.default_rng(7)
+        mgr = ExpertCacheManager(n_experts=16, n_hosts=4, t_cg=8.0,
+                                 backend=backend)
+        for _ in range(120):
+            mgr.observe(rng.integers(0, 16, size=(32, 2)),
+                        host=int(rng.integers(0, 4)))
+        return mgr
+
+    a, b = run("session"), run("live")
+    sa, sb = a.stats(), b.stats()          # stats() drains the live engine
+    assert np.isclose(sa.akpc_total, sb.akpc_total, rtol=1e-9)
+    assert sa.nopack_total == sb.nopack_total
+    assert sa.cliques == sb.cliques
+
+    # checkpoints cross the backend boundary: live -> session
+    standby = ExpertCacheManager(n_experts=16, n_hosts=4, t_cg=8.0)
+    standby.restore(b.snapshot())
+    rng = np.random.default_rng(11)
+    obs = [(rng.integers(0, 16, size=(32, 2)), int(rng.integers(0, 4)))
+           for _ in range(60)]
+    for mgr in (b, standby):
+        for topk, host in obs:
+            mgr.observe(topk, host=host)
+    assert np.isclose(b.stats().akpc_total, standby.stats().akpc_total,
+                      rtol=1e-9)
+
+
+def test_pipeline_live_backend_matches_session():
+    def run(backend):
+        store = ShardStore(n_shards=64, shard_tokens=256, vocab=100,
+                           n_domains=8, seed=0)
+        p = PackedDataPipeline(store, batch_rows=8, seq_len=32, t_cg=16.0,
+                               backend=backend)
+        return p, [next(p) for _ in range(40)]
+
+    p1, o1 = run("session")
+    p2, o2 = run("live")
+    for x, y in zip(o1, o2):               # token stream is backend-blind
+        np.testing.assert_array_equal(x, y)
+    p2.cache.drain()
+    assert np.isclose(p1.cache.costs.total, p2.cache.costs.total, rtol=1e-9)
+
+
+def test_unknown_backend_refused():
+    import pytest
+
+    with pytest.raises(ValueError):
+        ExpertCacheManager(8, 2, backend="bogus")
+    with pytest.raises(ValueError):
+        PackedDataPipeline(ShardStore(8), batch_rows=2, seq_len=8,
+                           backend="bogus")

@@ -40,7 +40,7 @@ from repro.traces import SynthConfig, synth_trace
 PARAMS = CostParams()
 T_CG = 0.73            # never divides the batch grid: windows split batches
 TOP_FRAC = 1.0
-ALL_POLICIES = ("no_packing", "packcache", "dp_greedy",
+ALL_POLICIES = ("no_packing", "ttl", "packcache", "dp_greedy",
                 "akpc", "akpc_no_acm", "akpc_base")
 
 INT_FIELDS = ("n_requests", "n_item_requests", "n_misses", "n_hits",
@@ -59,6 +59,8 @@ def _kwargs(name, **extra):
     kw = {"params": PARAMS}
     if name in ("packcache", "akpc", "akpc_no_acm", "akpc_base"):
         kw.update(t_cg=T_CG, top_frac=TOP_FRAC)
+    if name == "ttl":                  # keep-or-not baseline: no packing knobs
+        kw.update(t_cg=T_CG)
     if name == "dp_greedy":
         kw.update(top_frac=TOP_FRAC)
     kw.update(extra)

@@ -37,3 +37,76 @@ def test_determinism():
     b = synth_trace(SynthConfig(seed=3, n_requests=1000, t_max=10.0))
     np.testing.assert_array_equal(a.items, b.items)
     np.testing.assert_array_equal(a.times, b.times)
+
+
+# ---------------------------------------------------------------------------
+# non-stationary load profiles (PR 7): arrival-time warping
+# ---------------------------------------------------------------------------
+def _cfg(profile, **kw):
+    kw.setdefault("n_items", 60)
+    kw.setdefault("n_servers", 10)
+    kw.setdefault("n_requests", 4000)
+    kw.setdefault("t_max", 20.0)
+    kw.setdefault("seed", 3)
+    return SynthConfig(load_profile=profile, **kw)
+
+
+def test_load_profiles_deterministic_and_valid():
+    for profile in ("diurnal", "flash_crowd", "regime_shift"):
+        a = synth_trace(_cfg(profile))
+        b = synth_trace(_cfg(profile))
+        np.testing.assert_array_equal(a.items, b.items)
+        np.testing.assert_array_equal(a.times, b.times)
+        assert (np.diff(a.times) >= 0).all()
+        assert a.times.min() >= 0.0 and a.times.max() <= 20.0
+
+
+def test_load_profiles_warp_times_not_content():
+    """The same uniform draws are warped through the rate profile's
+    inverse CDF: request CONTENT is identical across profiles at a fixed
+    seed — only the arrival-time distribution shifts."""
+    base = synth_trace(_cfg("stationary"))
+    for profile in ("diurnal", "flash_crowd", "regime_shift"):
+        tr = synth_trace(_cfg(profile))
+        assert tr.n_requests == base.n_requests
+        np.testing.assert_array_equal(
+            np.sort(tr.items[tr.items >= 0]),
+            np.sort(base.items[base.items >= 0]))
+        np.testing.assert_array_equal(
+            np.sort(tr.servers), np.sort(base.servers))
+        assert not np.array_equal(tr.times, base.times)
+
+
+def test_stationary_profile_bitwise_legacy():
+    """The default profile keeps the pre-PR-7 draw sequence untouched."""
+    legacy = synth_trace(SynthConfig(seed=3, n_requests=1000, t_max=10.0))
+    explicit = synth_trace(SynthConfig(seed=3, n_requests=1000, t_max=10.0,
+                                       load_profile="stationary"))
+    np.testing.assert_array_equal(legacy.items, explicit.items)
+    np.testing.assert_array_equal(legacy.times, explicit.times)
+
+
+def test_flash_crowd_concentrates_arrivals():
+    cfg = _cfg("flash_crowd", load_strength=4.0, load_peak=0.5,
+               load_width=0.05)
+    tr = synth_trace(cfg)
+    base = synth_trace(_cfg("stationary"))
+    window = (tr.times > 0.4 * cfg.t_max) & (tr.times < 0.6 * cfg.t_max)
+    window_base = (base.times > 0.4 * cfg.t_max) & (base.times < 0.6 * cfg.t_max)
+    assert window.mean() > 1.5 * window_base.mean()
+
+
+def test_regime_shift_steps_down():
+    cfg = _cfg("regime_shift", load_strength=0.25, load_peak=0.5)
+    tr = synth_trace(cfg)
+    early = (tr.times < 0.5 * cfg.t_max).sum()
+    late = (tr.times >= 0.5 * cfg.t_max).sum()
+    # post-shift rate is 0.25x: arrivals split ~4:1 around the shift
+    assert early > 2.5 * late
+
+
+def test_unknown_load_profile_refused():
+    import pytest
+
+    with pytest.raises(ValueError):
+        synth_trace(_cfg("tidal"))
