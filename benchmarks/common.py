@@ -124,15 +124,22 @@ def run_methods(trace, params: CostParams, methods=None, top_frac: float = 1.0,
     return out
 
 
-def run_method_grid(grid: list[dict], backend: str | None = None) -> list[dict]:
+def run_method_grid(grid: list[dict], backend: str | None = None,
+                    layout=None) -> list[dict]:
     """Sweep MANY (trace, params, scenario) points in ONE vmapped call.
 
     Each grid entry takes the :func:`run_methods` keyword set
     (``trace`` required; ``params``, ``methods``, ``top_frac``, ``env``,
-    ``cost_model`` optional) and each returned entry has the same
+    ``cost_model`` optional, plus ``t_cg`` to OVERRIDE the derived
+    clique-gen period — fig8's batch axis sweeps it directly) and each
+    returned entry has the same
     ``{method: {total, transfer, caching, seconds}}`` shape — so the fig
     drivers swap a loop of ``run_methods`` calls for one
     ``run_method_grid`` call without changing their payloads.
+
+    ``layout`` is a :class:`repro.core.state_layout.StateLayout` (or
+    kind string) for the device state geometry; ``"bucketed"`` lets a
+    mixed-(n, m) grid compile per bucket cohort instead of per point.
 
     All policy replays go through :class:`repro.core.SweepEngine`:
     scenarios sharing (trace x clique-gen hyperparameters) share one
@@ -159,7 +166,9 @@ def run_method_grid(grid: list[dict], backend: str | None = None) -> list[dict]:
         env = CacheEnvironment.resolve(g.get("env"), trace, params)
         cost_model = g.get("cost_model", "table1")
         methods = g.get("methods")
-        t_cg = t_cg_for(trace, params, env=env, cost_model=cost_model)
+        t_cg = g.get("t_cg")
+        if t_cg is None:
+            t_cg = t_cg_for(trace, params, env=env, cost_model=cost_model)
         resolved.append((trace, params, env, cost_model, methods))
         for name, kw in method_policies(
                 params, t_cg, g.get("top_frac", 1.0)).items():
@@ -170,7 +179,7 @@ def run_method_grid(grid: list[dict], backend: str | None = None) -> list[dict]:
                 dict(params=params, env=env, cost_model=cost_model, **kw)))
             slots.append(gi)
 
-    res = SweepEngine(backend=backend).run(pts)
+    res = SweepEngine(backend=backend, layout=layout).run(pts)
     out: list[dict] = [{} for _ in grid]
     for pt, gi, r in zip(pts, slots, res):
         out[gi][pt.policy] = _result_entry(r)

@@ -1,64 +1,153 @@
 """Fig. 8 — scalability: (a) #servers, (b) #data points, (c) batch size.
 
 Batch size maps to requests per T_CG window (the paper batches 200 requests;
-larger windows expose more co-access to the clique miner)."""
+larger windows expose more co-access to the clique miner).
+
+This is the figure that varies (n, m) per point, so it runs the WHOLE
+mixed grid — all three axes — through ONE ``SweepEngine`` call on the
+JAX backend under a ``bucketed`` :class:`~repro.core.state_layout
+.StateLayout`: points whose (n, m) round up to the same padding bucket
+share one compiled scan, so the sweep compiles per bucket COHORT, not
+per point.  ``--smoke`` (CI) runs a reduced mixed grid and asserts the
+two ISSUE-8 contracts: 1e-9 per-point cost parity vs the serial numpy
+engine, and compile count <= #bucket-cohorts.
+"""
 from __future__ import annotations
 
-from .common import N_SWEEP, emit, relative_to_opt, run_methods, save_json, t_cg_for
-from repro.core import CostParams, get_policy, opt_lower_bound, run_policy
+import numpy as np
+
+from .common import N_SWEEP, emit, save_json
+from repro.core.state_layout import StateLayout
 from repro.traces import SynthConfig, synth_trace
 
 SERVERS = [60, 150, 300, 600, 1200]
 ITEMS = [60, 240, 960, 3600]
 BATCHES = [50, 100, 200, 500]
 METHODS = ("akpc", "no_packing", "opt")
+#: fig8 bucket steps: coarse enough that the servers axis collapses to a
+#: few column cohorts and every item count <= 4096 shares one row bucket
+LAYOUT = StateLayout(kind="bucketed", row_bucket=1024, col_bucket=256)
+
+SMOKE_SERVERS = [60, 300]
+SMOKE_ITEMS = [60, 240]
+SMOKE_BATCHES = [50, 200]
+SMOKE_REQUESTS = 4000
 
 
-def _trace(n_items=60, n_servers=600, seed=0):
+def _trace(n_items=60, n_servers=600, seed=0, n_requests=N_SWEEP):
     return synth_trace(SynthConfig(
         kind="netflix", n_items=n_items, n_servers=n_servers,
-        n_requests=N_SWEEP, t_max=6.0 * N_SWEEP / 100_000.0,
+        n_requests=n_requests, t_max=6.0 * n_requests / 100_000.0,
         bundle_cover=1.0, bundle_zipf=0.7, server_affinity=2, seed=seed))
 
 
-def main() -> list[tuple]:
-    rows, payload = [], {"servers": {}, "items": {}, "batch": {}}
-    params = CostParams()
-    base_total = None
-    for m in SERVERS:
-        tr = _trace(n_servers=m)
-        res = run_methods(tr, params, methods=METHODS)
-        rel = relative_to_opt(res)
-        payload["servers"][m] = {"rel": rel, "akpc_abs": res["akpc"]["total"]}
-        if base_total is None:
-            base_total = res["akpc"]["total"]
-        rows.append((f"fig8a/servers={m}", 0,
-                     f"akpc_rel={rel['akpc']};abs_vs_60={round(res['akpc']['total']/base_total,2)}"))
-    base_total = None
-    for n in ITEMS:
-        tr = _trace(n_items=n)
-        res = run_methods(tr, params, methods=METHODS)
-        rel = relative_to_opt(res)
-        payload["items"][n] = {"rel": rel, "akpc_abs": res["akpc"]["total"]}
-        if base_total is None:
-            base_total = res["akpc"]["total"]
-        rows.append((f"fig8b/items={n}", 0,
-                     f"akpc_rel={rel['akpc']};abs_vs_60={round(res['akpc']['total']/base_total,2)}"))
-    tr = _trace()
-    for b in BATCHES:
+def build_grid(smoke: bool = False):
+    """The full mixed-(n, m) fig8 grid as ONE run_method_grid input.
+
+    Returns (grid, labels): labels[i] = ("servers"|"items"|"batch", value)
+    names the axis point grid[i] carries.
+    """
+    nreq = SMOKE_REQUESTS if smoke else N_SWEEP
+    grid, labels = [], []
+    for m in (SMOKE_SERVERS if smoke else SERVERS):
+        grid.append({"trace": _trace(n_servers=m, n_requests=nreq),
+                     "methods": METHODS})
+        labels.append(("servers", m))
+    for n in (SMOKE_ITEMS if smoke else ITEMS):
+        grid.append({"trace": _trace(n_items=n, n_requests=nreq),
+                     "methods": METHODS})
+        labels.append(("items", n))
+    tr = _trace(n_requests=nreq)
+    span = float(tr.times[-1] - tr.times[0])
+    for b in (SMOKE_BATCHES if smoke else BATCHES):
         # batch size -> clique-gen window of b requests on average
-        span = float(tr.times[-1] - tr.times[0])
-        t_cg = span * b / tr.n_requests
-        res = run_policy(
-            get_policy("akpc", params=params, t_cg=t_cg, top_frac=1.0), tr)
-        opt = opt_lower_bound(tr, params)
-        rel = res.total / opt.total
-        payload["batch"][b] = rel
-        rows.append((f"fig8c/batch={b}", 0, f"akpc_rel={round(rel,4)}"))
+        grid.append({"trace": tr, "methods": METHODS,
+                     "t_cg": span * b / tr.n_requests})
+        labels.append(("batch", b))
+    return grid, labels
+
+
+def n_cohorts(grid) -> int:
+    """Bucket cohorts of the grid = distinct padded state dims.  The
+    compile-count contract: one scan trace per cohort, not per point."""
+    return len({LAYOUT.state_dims(g["trace"].n, g["trace"].m) for g in grid})
+
+
+def _run(grid, backend: str):
+    from .common import run_method_grid
+    from repro.core import engine_jax as ej
+
+    traces0 = ej.SCAN_TRACES
+    res = run_method_grid(
+        grid, backend=backend, layout=LAYOUT if backend == "jax" else None)
+    return res, ej.SCAN_TRACES - traces0
+
+
+def _payload(grid, labels, res, compiles: int) -> dict:
+    payload = {"servers": {}, "items": {}, "batch": {}}
+    for (axis, val), g, r in zip(labels, grid, res):
+        ref = r.get("opt") or r["no_packing"]
+        rel = {k: round(v["total"] / ref["total"], 4) for k, v in r.items()}
+        payload[axis][val] = {"rel": rel, "akpc_abs": r["akpc"]["total"]}
+    tr0 = grid[0]["trace"]
+    payload["state_layout"] = {
+        "tag": LAYOUT.tag, "row_bucket": LAYOUT.row_bucket,
+        "col_bucket": LAYOUT.col_bucket,
+        "points": len(grid), "cohorts": n_cohorts(grid),
+        "compiles": compiles,
+        # catalog-scale memory telemetry: the padding overhead of the
+        # coarsest point vs its dense footprint
+        "state_bytes": {
+            f"{axis}={val}": LAYOUT.state_bytes(g["trace"].n, g["trace"].m)
+            for (axis, val), g in zip(labels, grid)},
+        "dense_bytes_first_point": StateLayout().state_bytes(tr0.n, tr0.m),
+    }
+    return payload
+
+
+def main(smoke: bool = False) -> list[tuple]:
+    grid, labels = build_grid(smoke)
+    res, compiles = _run(grid, "jax")
+    payload = _payload(grid, labels, res, compiles)
+
+    rows = []
+    base = {}
+    for (axis, val), r in zip(labels, res):
+        rel = payload[axis][val]["rel"]
+        if axis not in base:
+            base[axis] = r["akpc"]["total"]
+        rows.append((f"fig8{'abc'['servers items batch'.split().index(axis)]}"
+                     f"/{axis}={val}", 0,
+                     f"akpc_rel={rel['akpc']};"
+                     f"abs_vs_base={round(r['akpc']['total'] / base[axis], 2)}"))
+    rows.append(("fig8/compiles", compiles,
+                 f"cohorts={n_cohorts(grid)};points={len(grid)}"))
+
+    if smoke:
+        # ISSUE-8 gates: compile count <= #cohorts, 1e-9 parity vs numpy
+        k = n_cohorts(grid)
+        assert 1 < k < len(grid), \
+            f"smoke grid must be mixed-shape: {k} cohorts of {len(grid)}"
+        assert compiles <= k, \
+            f"bucketed sweep compiled {compiles}x for {k} cohorts"
+        ref, _ = _run(grid, "numpy")
+        for (axis, val), r, rr in zip(labels, res, ref):
+            for meth in ("akpc", "no_packing"):
+                a, b = r[meth]["total"], rr[meth]["total"]
+                assert np.isclose(a, b, rtol=1e-9, atol=1e-9), \
+                    f"{axis}={val} {meth}: jax {a} != numpy {b}"
+        print(f"fig8 --smoke: {len(grid)} points, {k} cohorts, "
+              f"{compiles} compiles, numpy parity 1e-9 OK", flush=True)
+
     save_json("fig8_scalability", payload)
     emit(rows)
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced mixed grid + parity/compile-count gates")
+    main(smoke=ap.parse_args().smoke)

@@ -53,6 +53,7 @@ from repro.core.session import CacheSession
 from repro.traces import SynthConfig, synth_trace
 
 from .common import emit, save_json, t_cg_for
+from .sweep_bench import state_bytes_telemetry
 
 INT_FIELDS = ("n_requests", "n_item_requests", "n_misses", "n_hits",
               "items_transferred")
@@ -137,6 +138,8 @@ def bench_profile(profile: str, n_requests: int, slice_n: int) -> dict:
         "speedup_warm": t_numpy / t_warm,
         "compiles_cold": compiles_cold,
         "compiles_warm": compiles_warm,
+        "state_layout": live.layout.tag,
+        "state_bytes": state_bytes_telemetry(trace.n, trace.m),
     }
 
 

@@ -31,17 +31,29 @@ noisy to gate on a ratio; the full run asserts >= 5x cold).  Small grids
 used to LOSE cold (0.88x at 24 points/40k requests: one ~1s XLA compile
 outweighed the vmap win); the compiled-cohort caches fixed that — cold
 runs hit the on-disk cache from the second process on, and warm runs
-never re-trace.
+never re-trace.  Smoke also runs the ISSUE-8 mixed-shape gate: a grid
+of four distinct (n, m) points under a ``bucketed`` StateLayout must
+compile once per bucket COHORT, not once per point.
+
+``--mesh`` (devices x points): re-times the warm sweep in subprocesses
+under ``XLA_FLAGS=--xla_force_host_platform_device_count={1,2,4}`` with
+a ``make_sweep_mesh`` scenario mesh, recording the scaling row per
+device count in BENCH_sweep.json (CPU virtual devices — the record is
+the scaling SHAPE, not a speedup claim).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 
 from repro.core import CostParams, SweepEngine, SweepPoint
+from repro.core.state_layout import StateLayout
 from repro.traces import paper_trace
 
 from .common import emit, save_json, t_cg_for
@@ -77,11 +89,108 @@ def assert_parity(pts, serial, swept) -> None:
                 (pt.tag, f, da[f], db[f])
 
 
+def state_bytes_telemetry(n: int, m: int) -> dict:
+    """Device state-buffer bytes per layout at (n, m) — the catalog-scale
+    memory record ISSUE 8 tracks across PRs alongside wall-clock."""
+    return {
+        "n_items": n, "n_servers": m,
+        "dense": StateLayout().state_bytes(n, m),
+        "bucketed": StateLayout(kind="bucketed").state_bytes(n, m),
+        "row_sharded_x4_per_device": StateLayout(
+            kind="row_sharded", shards=4).state_bytes_per_device(n, m),
+    }
+
+
+def mixed_shape_gate() -> dict:
+    """Bucketed-compilation contract on a mixed-(n, m) grid: compile
+    count (SCAN_TRACES delta) <= #bucket-cohorts, strictly < #points."""
+    from repro.core import engine_jax as ej
+    from repro.traces import SynthConfig, synth_trace
+
+    lay = StateLayout(kind="bucketed", row_bucket=64, col_bucket=32)
+    shapes = [(50, 20), (60, 25), (100, 40), (120, 48)]
+    pts = []
+    for seed, (n, m) in enumerate(shapes):
+        tr = synth_trace(SynthConfig(
+            kind="netflix", n_items=n, n_servers=m, n_requests=3000,
+            t_max=3.0, bundle_cover=1.0, bundle_zipf=0.7, seed=seed))
+        params = CostParams()
+        pts.append(SweepPoint(
+            "akpc", tr,
+            dict(params=params, t_cg=t_cg_for(tr, params), top_frac=1.0),
+            tag=f"n={n}/m={m}"))
+    cohorts = len({lay.state_dims(n, m) for n, m in shapes})
+    traces0 = ej.SCAN_TRACES
+    jax_res = SweepEngine(backend="jax", layout=lay).run(pts)
+    compiles = ej.SCAN_TRACES - traces0
+    ref = SweepEngine(backend="numpy").run(pts)
+    assert_parity(pts, ref, jax_res)
+    assert cohorts < len(pts), "gate grid must be mixed-shape"
+    assert compiles <= cohorts, (
+        f"bucketed mixed-shape sweep compiled {compiles}x for "
+        f"{cohorts} cohorts ({len(pts)} points)")
+    print(f"# mixed-shape gate: {len(pts)} points -> {cohorts} cohorts, "
+          f"{compiles} compiles, parity OK")
+    return {"points": len(pts), "cohorts": cohorts, "compiles": compiles,
+            "layout": {"tag": lay.tag, "row_bucket": lay.row_bucket,
+                       "col_bucket": lay.col_bucket}}
+
+
+def _mesh_worker() -> None:
+    """Subprocess body for --mesh: warm-time the sweep on THIS process's
+    device count under a scenario mesh, print one JSON line."""
+    import jax
+
+    from repro.launch.mesh import make_sweep_mesh
+
+    n = int(os.environ["REPRO_MESH_REQUESTS"])
+    n_alphas = int(os.environ["REPRO_MESH_ALPHAS"])
+    n_rhos = int(os.environ["REPRO_MESH_RHOS"])
+    trace = paper_trace("netflix", n_requests=n, seed=0)
+    pts = build_grid(trace, n_alphas, n_rhos)
+    eng = SweepEngine(backend="jax", mesh=make_sweep_mesh())
+    eng.run(pts)                       # compile / cache-hit pass
+    t0 = time.perf_counter()
+    eng.run(pts)
+    warm = time.perf_counter() - t0
+    print(json.dumps({"devices": len(jax.devices()),
+                      "points": len(pts), "warm_seconds": warm}))
+
+
+def bench_mesh(n: int, n_alphas: int, n_rhos: int) -> list[dict]:
+    """Devices x points scaling rows (1, 2, 4 virtual CPU devices)."""
+    rows = []
+    for d in (1, 2, 4):
+        env = dict(
+            os.environ,
+            XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                       f" --xla_force_host_platform_device_count={d}"),
+            REPRO_MESH_REQUESTS=str(n), REPRO_MESH_ALPHAS=str(n_alphas),
+            REPRO_MESH_RHOS=str(n_rhos),
+        )
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.sweep_bench",
+             "--mesh-worker"],
+            env=env, capture_output=True, text=True, check=True)
+        row = json.loads(out.stdout.strip().splitlines()[-1])
+        rows.append(row)
+        print(f"# mesh: {row['devices']} device(s) -> "
+              f"{row['warm_seconds']:.2f}s warm")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small CI run: parity + sweep must beat serial")
+    ap.add_argument("--mesh", action="store_true",
+                    help="record devices x points mesh scaling rows")
+    ap.add_argument("--mesh-worker", action="store_true",
+                    help=argparse.SUPPRESS)
     args, _ = ap.parse_known_args()
+    if args.mesh_worker:
+        _mesh_worker()
+        return
 
     if args.smoke:
         n = int(os.environ.get("REPRO_SWEEP_BENCH_REQUESTS", "60000"))
@@ -127,7 +236,7 @@ def main() -> None:
         ("sweep/speedup", round(speedup, 2), "x cold"),
         ("sweep/speedup_warm", round(speedup_warm, 2), "x warm"),
     ])
-    save_json("BENCH_sweep", {
+    payload = {
         "n_requests": n,
         "grid": {"alphas": n_alphas, "rhos": n_rhos, "points": len(pts)},
         "policy": "akpc",
@@ -142,7 +251,14 @@ def main() -> None:
         "points_per_second_serial": len(pts) / t_serial,
         "points_per_second_sweep": len(pts) / t_sweep,
         "points_per_second_sweep_warm": len(pts) / t_warm,
-    })
+        "state_layout": sweep_eng.layout.tag,
+        "state_bytes": state_bytes_telemetry(trace.n, trace.m),
+    }
+    if args.smoke:
+        payload["mixed_shape"] = mixed_shape_gate()
+    if args.mesh:
+        payload["mesh_scaling"] = bench_mesh(n, n_alphas, n_rhos)
+    save_json("BENCH_sweep", payload)
     if args.smoke:
         assert t_warm < t_serial, (
             f"warm vmapped sweep ({t_warm:.2f}s) no faster than the "

@@ -14,6 +14,9 @@ The smoke gates (each also runnable directly as
                           a theta x gamma x omega grid, zero host CGM calls
 * fig9_cliques_runtime  — vectorized CGM beats the scalar oracle;
                           records device-CGM timing in BENCH_cgm.json
+* fig8_scalability      — mixed-(n, m) grid through ONE bucketed-layout
+                          SweepEngine call: 1e-9 parity vs numpy,
+                          compile count <= #bucket-cohorts
 * fig10_heterogeneous   — heterogeneous cost-model smoke
 * serve_bench           — persistent live serving engine sustains more
                           req/s than the streamed numpy session at 1e-9
@@ -31,6 +34,7 @@ SMOKE_GATES = (
     "benchmarks.sweep_bench",
     "benchmarks.fig7_hyperparams",
     "benchmarks.fig9_cliques_runtime",
+    "benchmarks.fig8_scalability",
     "benchmarks.fig10_heterogeneous",
     "benchmarks.serve_bench",
 )

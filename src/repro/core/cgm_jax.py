@@ -826,10 +826,24 @@ if HAS_JAX:
 # host seam: carry init, execution, state/policy sync
 # ---------------------------------------------------------------------------
 def init_cgm_carry(state, prev_crm, win_prefix, *, n, m, uses_sizes,
-                   item_sizes):
-    """Numpy engine/policy state -> the device scan carry (one lane)."""
-    from .engine_jax import N_ACC, state_to_device
+                   item_sizes, layout=None):
+    """Numpy engine/policy state -> the device scan carry (one lane).
 
+    The fused scan's hot-space embed and install reductions are sized by
+    the carry shapes themselves (``of``: n slots, ``E``: (n+1, m)), so
+    only a StateLayout that is dense-equivalent at (n, m) may back the
+    carry — callers route bucketed/sharded catalogs to the generic
+    schedule path (`JaxReplayEngine.replay`, `SweepEngine._run_jax`).
+    """
+    from .engine_jax import N_ACC, state_to_device
+    from .state_layout import StateLayout
+
+    lay = StateLayout.resolve(layout)
+    if not lay.is_dense_for(n, m):
+        raise ValueError(
+            f"device CGM needs a dense-equivalent state layout at "
+            f"(n={n}, m={m}); {lay.kind!r} gives {lay.state_dims(n, m)} — "
+            "use the generic schedule path for this catalog")
     E0, a0 = state_to_device(state, n)
     of0 = np.asarray(state.partition.clique_of, np.int32)
     carry = {

@@ -130,6 +130,20 @@ class CacheState:
             m=m,
         )
 
+    @classmethod
+    def from_device(cls, partition: CliquePartition, E, anchor,
+                    m: int) -> "CacheState":
+        """Slice device-layout state arrays (any StateLayout: dense
+        ``(n+1, m)``, bucketed or row-sharded padding) back to the live
+        ``(k, m)`` host prefix — host state is dense under every layout."""
+        k = partition.k
+        return cls(
+            partition=partition,
+            E=np.asarray(E)[:k, :m].astype(np.float64, copy=True),
+            anchor=np.asarray(anchor)[:k].astype(np.int32, copy=True),
+            m=m,
+        )
+
     # -- aliveness ---------------------------------------------------------
     def is_alive(self, c: int, j: int, t: float) -> bool:
         if self.E[c, j] > t:

@@ -38,10 +38,17 @@ hyperparameters) point and ``vmap`` the compiled replay over stacked
 cost-model parameters and initial states — the grid sweep the paper's
 Figs. 5-10 need.
 
-State layout: the device ``E`` is ``(n + 1, m)`` — one row per POSSIBLE
-clique id (a partition of n items has k <= n cliques) plus a dump row
-``n`` that absorbs masked scatter writes and padding-event gathers; the
-NumPy engine's ``(k, m)`` state is the live prefix ``E[:k]``.
+State layout: by default the device ``E`` is ``(n + 1, m)`` — one row
+per POSSIBLE clique id (a partition of n items has k <= n cliques) plus
+a dump row that absorbs masked scatter writes and padding-event gathers;
+the NumPy engine's ``(k, m)`` state is the live prefix ``E[:k]``.  The
+geometry is owned by :class:`repro.core.state_layout.StateLayout`
+(``layout=`` on every entry point): ``bucketed`` rounds the state dims
+up to padding buckets so mixed-(n, m) sweeps compile per bucket cohort,
+``row_sharded`` distributes the state rows over a mesh axis.  The dump
+row is ALWAYS the last state row (``schedule.nrow - 1``); the scan body
+derives it from the carry shape, so one compiled scan serves every
+catalog sharing a bucket.
 """
 from __future__ import annotations
 
@@ -68,6 +75,7 @@ from .engine import (
     match_partitions,
     window_seed_servers,
 )
+from .state_layout import StateLayout
 
 try:  # the accelerator layer stays optional (pure-numpy containers)
     import jax
@@ -218,6 +226,18 @@ class ReplaySchedule:
     win_start: int              # open-window start index into the trace
     boundary_hit: bool          # did any Event-1 boundary fire in this trace
     next_cg: float | None       # T_CG boundary after the last request
+    # state geometry the index fills were built for (StateLayout.state_dims;
+    # dense default = (n + 1, m)); the dump row is always nrow - 1
+    nrow: int = 0
+    ncol: int = 0
+
+    @property
+    def state_rows(self) -> int:
+        return self.nrow if self.nrow else self.n + 1
+
+    @property
+    def state_cols(self) -> int:
+        return self.ncol if self.ncol else self.m
 
 
 def _bucket(x: int, step: int, floor: int) -> int:
@@ -257,6 +277,7 @@ def build_schedule(
     win_prefix: tuple[np.ndarray, np.ndarray] | None = None,
     lookup: Callable | None = None,
     progress: Callable[[int], None] | None = None,
+    layout: StateLayout | str | None = None,
 ) -> ReplaySchedule:
     """Walk the trace exactly as ``ReplayEngine.replay`` does and emit the
     padded event tensors + install records of every batch.
@@ -268,7 +289,9 @@ def build_schedule(
     from .engine import DEFAULT_BATCH_SIZE, _numpy_clique_lookup
 
     n, m = env.n, env.m
-    K = n                                       # dump row index
+    lay = StateLayout.resolve(layout)
+    nrow, ncol = lay.state_dims(n, m)
+    K = nrow - 1                                # dump row index (last row)
     bs = DEFAULT_BATCH_SIZE if batch_size is None else max(1, int(batch_size))
     lookup = lookup or _numpy_clique_lookup
     uses_sizes = bool(model.uses_sizes)
@@ -649,6 +672,7 @@ def build_schedule(
         partition0=partition0, final_partition=cur,
         win_start=win_start, boundary_hit=boundary_hit,
         next_cg=None if not use_cg or R == 0 else float(next_cg),
+        nrow=nrow, ncol=ncol,
     )
 
 
@@ -673,7 +697,7 @@ def pad_schedule(s: ReplaySchedule, dims: dict) -> ReplaySchedule:
     mine = schedule_dims(s)
     if mine == dims:
         return s
-    K = s.n
+    K = s.state_rows - 1
     old_ncr = mine["ncr"]
     fills = {
         "ev_c": K, "upd_c": K, "anc_c": K, "c_s": K,
@@ -912,6 +936,7 @@ def run_schedule(
     charge: CachingCharge = "requested",
     use_pallas: bool | None = None,
     block: bool = True,
+    layout: StateLayout | None = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Execute one schedule for one scenario; returns (E, anchor, acc).
 
@@ -921,6 +946,8 @@ def run_schedule(
     returns the device arrays without waiting — XLA keeps computing in the
     background while the caller builds the next group's schedule (the
     SweepEngine pipeline); materialize with ``np.asarray`` when needed.
+    A row-sharded ``layout`` commits the state rows to its mesh placement
+    before the scan, so GSPMD partitions the row gathers/scatters.
     """
     _require_jax()
     if use_pallas is None:
@@ -932,6 +959,10 @@ def run_schedule(
         statics, charge, schedule.const_dt, bool(use_pallas), vmapped)
     with enable_x64():
         acc_shape = (E0.shape[0], N_ACC) if vmapped else (N_ACC,)
+        if layout is not None and isinstance(E0, np.ndarray):
+            # host inputs get the layout's mesh placement here; arrays a
+            # caller (SweepEngine._shard) already committed keep theirs
+            E0, anchor0 = layout.place_state(E0, anchor0)
         init = (
             jnp.asarray(E0, jnp.float64),
             jnp.asarray(anchor0, jnp.int32),
@@ -955,6 +986,7 @@ def run_schedules(
     charge: CachingCharge = "requested",
     use_pallas: bool | None = None,
     block: bool = True,
+    layout: StateLayout | None = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Execute S schedules lane-for-lane: lane i replays ``schedules[i]``
     under spec lane i — the trace-shard axis of :mod:`repro.core.sweep`.
@@ -977,6 +1009,8 @@ def run_schedules(
     fn = _compiled_replay(
         statics, charge, s0.const_dt, bool(use_pallas), "xs")
     with enable_x64():
+        if layout is not None and isinstance(E0, np.ndarray):
+            E0, anchor0 = layout.place_state(E0, anchor0)
         init = (
             jnp.asarray(E0, jnp.float64),
             jnp.asarray(anchor0, jnp.int32),
@@ -991,18 +1025,42 @@ def run_schedules(
         return np.asarray(E), np.asarray(anchor), np.asarray(acc)
 
 
-def fresh_state_arrays(n: int, m: int) -> tuple[np.ndarray, np.ndarray]:
-    """Device-layout (n+1, m) expiries + (n+1,) anchors, all empty."""
-    return (np.zeros((n + 1, m), np.float64), np.full(n + 1, -1, np.int32))
+def fresh_state_arrays(
+    n: int, m: int, layout: StateLayout | str | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Device-layout expiries + anchors, all empty (dense: (n+1, m))."""
+    rows, cols = StateLayout.resolve(layout).state_dims(n, m)
+    return (np.zeros((rows, cols), np.float64), np.full(rows, -1, np.int32))
 
 
-def state_to_device(state: CacheState, n: int) -> tuple[np.ndarray, np.ndarray]:
+def state_to_device(
+    state: CacheState, n: int, layout: StateLayout | str | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
     """Numpy ``CacheState`` -> padded device-layout arrays."""
-    E0, a0 = fresh_state_arrays(n, state.m)
+    E0, a0 = fresh_state_arrays(n, state.m, layout)
     k = state.partition.k
-    E0[:k] = state.E
+    E0[:k, : state.m] = state.E
     a0[:k] = state.anchor
     return E0, a0
+
+
+def pad_spec_cols(spec: dict, ncol: int) -> dict:
+    """Pad the per-server spec arrays to a layout's column count.
+
+    Bucketed cohorts only share a compiled scan if EVERY input shape
+    matches — the state dims come from the layout, but ``dt``/``lam_j``/
+    ``mu_j`` are (m,) per scenario.  Edge-replicating them to ``ncol``
+    is free (padded entries are never gathered: every ``j`` index in the
+    schedule is < m) and lets two points with different real m share one
+    cohort."""
+    out = dict(spec)
+    for key in ("dt", "lam_j", "mu_j"):
+        a = np.asarray(spec[key])
+        w = ncol - a.shape[-1]
+        if a.ndim and w > 0:
+            out[key] = np.concatenate(
+                [a, np.repeat(a[..., -1:], w, axis=-1)], axis=-1)
+    return out
 
 
 def apply_acc(costs: CostBreakdown, schedule: ReplaySchedule,
@@ -1033,13 +1091,18 @@ class JaxReplayEngine:
     have produced (state float-for-float; cost sums at 1e-9).
     """
 
-    def __init__(self, *args, engine: ReplayEngine | None = None, **kwargs):
+    def __init__(self, *args, engine: ReplayEngine | None = None,
+                 layout: StateLayout | str | None = None, **kwargs):
         _require_jax()
         self.engine = engine if engine is not None else ReplayEngine(
             *args, **kwargs)
+        self.layout = StateLayout.resolve(layout)
         # fail fast on cost models the device hooks cannot express
         self._spec, self._statics = cost_spec(
             self.engine.model, self.engine.env)
+        ncol = self.layout.state_cols(self.engine.env.m)
+        if ncol != self.engine.env.m:
+            self._spec = pad_spec_cols(self._spec, ncol)
 
     # delegated views (the engine object stays the source of truth)
     @property
@@ -1084,7 +1147,12 @@ class JaxReplayEngine:
             if pol is not None:
                 from .cgm_jax import replay_cgm, wants_device_cgm
 
-                if wants_device_cgm(pol, trace, eng.model):
+                # the fused CGM scan derives its dump row from n (its
+                # carry holds (n, n) hot-space matrices), so it only
+                # engages when the layout is dense-equivalent at (n, m);
+                # bucketed/sharded catalogs take the generic schedule path
+                if wants_device_cgm(pol, trace, eng.model) \
+                        and self.layout.is_dense_for(eng.env.n, eng.env.m):
                     return replay_cgm(
                         self, pol, trace, t_cg=t_cg,
                         batch_size=batch_size, next_cg0=next_cg0,
@@ -1094,7 +1162,7 @@ class JaxReplayEngine:
             model=eng.model, env=eng.env, batch_size=batch_size,
             seed_new_cliques=eng.seed_new_cliques,
             next_cg0=next_cg0, win_prefix=win_prefix, lookup=eng._lookup,
-            progress=progress,
+            progress=progress, layout=self.layout,
         )
         # shape-stability ratchet: pad every chunk's tensors up to the
         # largest dims this engine has seen, so a streamed session (ragged
@@ -1107,14 +1175,12 @@ class JaxReplayEngine:
         self._dims = dims
         schedule = pad_schedule(schedule, dims)
         self.last_schedule = schedule
-        E0, a0 = state_to_device(eng.state, schedule.n)
+        E0, a0 = state_to_device(eng.state, schedule.n, self.layout)
         E, anchor, acc = run_schedule(
             schedule, self._spec, self._statics, E0, a0,
-            charge=eng.caching_charge)
+            charge=eng.caching_charge, layout=self.layout)
         part = schedule.final_partition
-        eng.state = CacheState(
-            partition=part, E=E[: part.k].copy(),
-            anchor=anchor[: part.k].copy(), m=eng.m)
+        eng.state = CacheState.from_device(part, E, anchor, eng.m)
         eng._set_partition_caches(part)
         apply_acc(eng.costs, schedule, acc)
         if keep_fn is not None:
@@ -1124,7 +1190,8 @@ class JaxReplayEngine:
         return eng.costs
 
 
-def run_policy_jax(policy, trace, *, batch_size=None, progress=None):
+def run_policy_jax(policy, trace, *, batch_size=None, progress=None,
+                   layout=None):
     """Offline driver on the JAX backend — ``run_policy(backend="jax")``.
 
     Mirrors :func:`repro.core.policy.run_policy` step for step (policy
@@ -1149,6 +1216,7 @@ def run_policy_jax(policy, trace, *, batch_size=None, progress=None):
         seed_new_cliques=getattr(policy, "seed_new_cliques", True),
         env=env,
         cost_model=getattr(policy, "cost_model", "table1"),
+        layout=layout,
     )
     part0 = (
         policy.initial_partition(trace)

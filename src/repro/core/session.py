@@ -98,10 +98,16 @@ class CacheSession:
         batch_size: int | None = None,
         env: CacheEnvironment | None = None,
         backend: str = "numpy",
+        layout=None,
     ):
+        from .state_layout import StateLayout
+
         if backend not in ("numpy", "jax"):
             raise ValueError(f"unknown replay backend {backend!r}")
         self.backend = backend
+        # device state geometry for jax-backed feeds; host state stays
+        # dense (k, m) under every layout, so snapshots carry only a tag
+        self.layout = StateLayout.resolve(layout)
         if isinstance(policy, str):
             policy = get_policy(policy)
         self.policy = policy
@@ -272,7 +278,8 @@ class CacheSession:
         # chunk shape instead of compiling a fresh scan
         jeng = getattr(self, "_jeng", None)
         if jeng is None:
-            jeng = self._jeng = JaxReplayEngine(engine=self.engine)
+            jeng = self._jeng = JaxReplayEngine(
+                engine=self.engine, layout=self.layout)
         win_prefix = self._window_arrays() if windowed and self._win else None
         jeng.replay(
             trace,
@@ -356,6 +363,12 @@ class CacheSession:
                 # validates; empty arrays = homogeneous defaults)
                 "cost_model": _tag_to_array(self.engine.model.name),
                 "model_config": self.engine.model.config_array(),
+                # device state layout this session replays under: host
+                # state is dense either way, so dense <-> bucketed
+                # snapshots interchange freely; a row-sharded restore
+                # validates the shard count against the session's mesh
+                "layout": _tag_to_array(self.layout.tag),
+                "layout_shards": np.int64(self.layout.row_shards),
                 "env": {
                     "lam_j": (env.lam_j.copy() if env.lam_j is not None
                               else np.zeros(0)),
@@ -405,6 +418,10 @@ class CacheSession:
                 raise ValueError(
                     f"snapshot was taken under cost model {want!r}, session "
                     f"runs {have!r}")
+        if "layout" in eng:       # pre-layout snapshots restore as dense
+            self.layout.check_restore(
+                _tag_from_array(eng["layout"]),
+                int(np.asarray(eng.get("layout_shards", 1)).item()))
         env = self.engine.env
         snap_env = eng.get("env", {})
         if "cost_mode" in snap_env and \

@@ -35,6 +35,7 @@ import numpy as np
 
 from .cost import CacheEnvironment, get_cost_model
 from .policy import RunResult, get_policy, run_policy
+from .state_layout import StateLayout
 
 #: registry policies whose clique-generation trajectory is fully determined
 #: by (trace, t_cg, top_frac, top_frac_of, theta, gamma, omega, split/merge
@@ -146,6 +147,7 @@ class SweepEngine:
         backend: str = "jax",
         batch_size: int | None = None,
         mesh=None,
+        layout: StateLayout | str | None = None,
     ):
         if backend not in ("jax", "numpy"):
             raise ValueError(f"unknown sweep backend {backend!r}")
@@ -160,6 +162,14 @@ class SweepEngine:
         self.backend = backend
         self.batch_size = batch_size
         self.mesh = mesh
+        layout = StateLayout.resolve(layout)
+        if (layout.kind == "row_sharded" and layout.mesh is None
+                and mesh is not None
+                and layout.row_axis in mesh.axis_names):
+            # a bare row_sharded layout adopts the engine's mesh (the
+            # make_sweep_mesh(..., state_rows=) two-axis form)
+            layout = dataclasses.replace(layout, mesh=mesh)
+        self.layout = layout
         #: wall seconds of the most recent :meth:`run` (schedules + device)
         self.last_wall = 0.0
         #: schedule-dedup stats of the most recent run
@@ -213,6 +223,11 @@ class SweepEngine:
             spec, statics = ej.cost_spec(model, env)
             dt = spec["dt"]
             const_dt = env.m == 0 or bool((dt == dt[0]).all())
+            ncol = self.layout.state_cols(env.m)
+            if ncol != env.m:
+                # bucketed columns: pad the per-server spec arrays so
+                # every point of one column bucket shares a compiled shape
+                spec = ej.pad_spec_cols(spec, ncol)
             bs = pt.batch_size or self.batch_size
             seed = getattr(policy, "seed_new_cliques", True)
             sizes_fp = (None if not model.uses_sizes
@@ -247,6 +262,9 @@ class SweepEngine:
             cfg = getattr(policy, "config", None)
             if (pr["shards"] is not None
                     or pt.policy not in SHAREABLE_POLICIES or cfg is None
+                    # the fused CGM carry is dense-(n, m)-shaped; bucketed
+                    # and sharded layouts use the generic schedule path
+                    or not self.layout.is_dense_for(pt.trace.n, pt.trace.m)
                     or not cgm_jax.wants_device_cgm(
                         policy, pt.trace, pr["model"])):
                 continue
@@ -284,7 +302,7 @@ class SweepEngine:
             schedule = ej.build_schedule(
                 part0, g0["pt"].trace, gen, policy.t_cg,
                 model=g0["model"], env=g0["env"], batch_size=g0["bs"],
-                seed_new_cliques=g0["seed"],
+                seed_new_cliques=g0["seed"], layout=self.layout,
             )
             schedules[skey] = {
                 "schedule": schedule,
@@ -303,8 +321,12 @@ class SweepEngine:
         cohorts: dict = {}
         for rec in schedules.values():
             s = rec["schedule"]
+            # cohorts key on the STATE geometry, not the raw (n, m): under
+            # a bucketed layout, points whose shapes round to the same
+            # bucket land in one cohort and share one compiled scan
             cohorts.setdefault(
-                (s.n, s.m, s.const_dt, s.uses_sizes), []).append(rec)
+                (s.state_rows, s.state_cols, s.const_dt, s.uses_sizes),
+                []).append(rec)
         for ckey, recs in cohorts.items():
             dims_list = [ej.schedule_dims(r["schedule"]) for r in recs]
             dims = {k: max(d[k] for d in dims_list) for k in dims_list[0]}
@@ -336,7 +358,7 @@ class SweepEngine:
                 schedule = ej.build_schedule(
                     part0, tr, gen, policy.t_cg,
                     model=g0["model"], env=g0["env"], batch_size=g0["bs"],
-                    seed_new_cliques=g0["seed"])
+                    seed_new_cliques=g0["seed"], layout=self.layout)
                 recs.append({
                     "schedule": schedule,
                     "n_windows": getattr(policy, "n_windows", 0),
@@ -347,7 +369,8 @@ class SweepEngine:
                 })
             n_shard_schedules += len(recs)
             s0 = recs[0]["schedule"]
-            ckey = (s0.n, s0.m, s0.const_dt, s0.uses_sizes, "xs")
+            ckey = (s0.state_rows, s0.state_cols, s0.const_dt,
+                    s0.uses_sizes, "xs")
             dims_list = [ej.schedule_dims(r["schedule"]) for r in recs]
             dims = {k: max(d[k] for d in dims_list) for k in dims_list[0]}
             cached = _COHORT_DIMS.get(ckey)
@@ -366,11 +389,14 @@ class SweepEngine:
                 for k in g0["spec"]
             }
             L = len(lanes)
-            E0 = np.zeros((L, s0.n + 1, s0.m), np.float64)
-            a0 = np.full((L, s0.n + 1), -1, np.int32)
+            E0 = np.zeros((L, s0.state_rows, s0.state_cols), np.float64)
+            a0 = np.full((L, s0.state_rows), -1, np.int32)
+            if self.mesh is not None:
+                spec, E0, a0 = self._shard(spec, E0, a0, L)
             t0 = _time.perf_counter()
             _, _, acc = ej.run_schedules(
-                lanes, spec, statics, E0, a0, charge=charge, block=False)
+                lanes, spec, statics, E0, a0, charge=charge, block=False,
+                layout=self.layout)
             sh_pending.append((idxs, recs, acc, t0))
             if progress is not None:
                 progress(f"shard group of {len(idxs)} scenario(s) x "
@@ -393,7 +419,7 @@ class SweepEngine:
             carry1 = cgm_jax.init_cgm_carry(
                 CacheState.fresh(CliquePartition.singletons(n), m_srv),
                 None, None, n=n, m=m_srv, uses_sizes=uses_sizes,
-                item_sizes=item_sizes)
+                item_sizes=item_sizes, layout=self.layout)
             S = len(idxs)
             spec = {
                 k: np.stack([prepared[i]["spec"][k] for i in idxs])
@@ -419,27 +445,72 @@ class SweepEngine:
                          f"({sched.nb} steps, {sched.boundary_steps.size} "
                          "windows on device)")
 
-        pending = []
+        # groups sharing (padded state geometry, statics, charge) stack as
+        # lanes of ONE run_schedules call, so a mixed-shape sweep compiles
+        # once per bucket COHORT — not once per (schedule, group-width)
+        # combination.  Single-group cohorts keep the run_schedule path:
+        # one shared schedule vmapped over S specs, no per-lane xs copies.
+        cohort_groups: dict = {}
         for (skey, statics, charge), idxs in groups.items():
-            g0 = prepared[idxs[0]]
-            rec = schedules[skey]
-            schedule = rec["schedule"]
-            S = len(idxs)
+            s = schedules[skey]["schedule"]
+            # the xs key SET is part of the compiled scan's signature
+            # (e.g. TTL's "nokeep" mask): only schedules carrying the
+            # same event tensors can share one lane-stacked call
+            cohort_groups.setdefault(
+                ((s.state_rows, s.state_cols, s.const_dt, s.uses_sizes),
+                 frozenset(s.xs), statics, charge),
+                []).append((skey, idxs))
+
+        pending = []
+        for (ckey, _xs_keys, statics, charge), members in \
+                cohort_groups.items():
+            g0 = prepared[members[0][1][0]]
+            if len(members) == 1:
+                skey, idxs = members[0]
+                rec = schedules[skey]
+                schedule = rec["schedule"]
+                S = len(idxs)
+                spec = {
+                    k: np.stack([prepared[i]["spec"][k] for i in idxs])
+                    for k in g0["spec"]
+                }
+                E0 = np.zeros(
+                    (S, schedule.state_rows, schedule.state_cols),
+                    np.float64)
+                a0 = np.full((S, schedule.state_rows), -1, np.int32)
+                if S == 1:       # no vmap lane for a singleton group
+                    spec = {k: v[0] for k, v in spec.items()}
+                    E0, a0 = E0[0], a0[0]
+                if self.mesh is not None:
+                    spec, E0, a0 = self._shard(spec, E0, a0, S)
+                t0 = _time.perf_counter()
+                _, _, acc = ej.run_schedule(
+                    schedule, spec, statics, E0, a0, charge=charge,
+                    block=False, layout=self.layout)
+                pending.append((idxs, [rec] * S, acc, t0))
+                continue
+            lane_idx, lanes, lane_recs = [], [], []
+            for skey, idxs in members:
+                rec = schedules[skey]
+                for i in idxs:
+                    lane_idx.append(i)
+                    lanes.append(rec["schedule"])
+                    lane_recs.append(rec)
             spec = {
-                k: np.stack([prepared[i]["spec"][k] for i in idxs])
+                k: np.stack([prepared[i]["spec"][k] for i in lane_idx])
                 for k in g0["spec"]
             }
-            E0 = np.zeros((S, schedule.n + 1, schedule.m), np.float64)
-            a0 = np.full((S, schedule.n + 1), -1, np.int32)
-            if S == 1:       # no vmap lane for a singleton group
-                spec = {k: v[0] for k, v in spec.items()}
-                E0, a0 = E0[0], a0[0]
+            L = len(lanes)
+            s0 = lanes[0]
+            E0 = np.zeros((L, s0.state_rows, s0.state_cols), np.float64)
+            a0 = np.full((L, s0.state_rows), -1, np.int32)
             if self.mesh is not None:
-                spec, E0, a0 = self._shard(spec, E0, a0, S)
+                spec, E0, a0 = self._shard(spec, E0, a0, L)
             t0 = _time.perf_counter()
-            _, _, acc = ej.run_schedule(
-                schedule, spec, statics, E0, a0, charge=charge, block=False)
-            pending.append((idxs, rec, acc, t0))
+            _, _, acc = ej.run_schedules(
+                lanes, spec, statics, E0, a0, charge=charge, block=False,
+                layout=self.layout)
+            pending.append((lane_idx, lane_recs, acc, t0))
         self.last_n_schedules = (len(schedules) + len(dev_pending)
                                  + n_shard_schedules)
 
@@ -500,7 +571,7 @@ class SweepEngine:
                     config=getattr(pr["policy"], "config", None),
                     shard_stats=_shard_stats(totals),
                 )
-        for idxs, rec, acc, t0 in pending:
+        for idxs, lane_recs, acc, t0 in pending:
             acc = np.atleast_2d(np.asarray(acc))
             wall = _time.perf_counter() - t0
             if progress is not None:
@@ -508,6 +579,7 @@ class SweepEngine:
                          f"in {wall:.2f}s")
             for lane, i in enumerate(idxs):
                 pr = prepared[i]
+                rec = lane_recs[lane]
                 costs = CostBreakdown(model=pr["statics"][0])
                 ej.apply_acc(costs, rec["schedule"], acc[lane])
                 results[i] = RunResult(
@@ -524,19 +596,35 @@ class SweepEngine:
 
     # ------------------------------------------------------------------
     def _shard(self, spec, E0, a0, S):
-        """Spread the scenario axis over ``self.mesh`` (no-op if it does
-        not divide evenly or the mesh has one device)."""
+        """Spread the lanes over ``self.mesh``: the scenario axis over the
+        mesh's first axis (no-op if it does not divide evenly or the mesh
+        axis has one device) and, under a row-sharded layout, the STATE
+        ROWS over the mesh's ``state_row`` axis — the two compose on a
+        2-D ``make_sweep_mesh(..., state_rows=)`` mesh."""
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         mesh = self.mesh
         axis = mesh.axis_names[0]
-        ndev = int(np.prod(list(mesh.shape.values())))
-        if ndev <= 1 or S % ndev != 0 or E0.ndim != 3:
+        lead = E0.ndim - 2               # 1 with a scenario axis, 0 squeezed
+        n_sc = int(mesh.shape[axis])
+        sc = axis if (lead and n_sc > 1 and S % n_sc == 0) else None
+        lay = self.layout
+        row = (lay.row_axis
+               if lay.kind == "row_sharded" and lay.mesh is mesh
+               and lay.row_axis in mesh.axis_names
+               and int(mesh.shape[lay.row_axis]) > 1 else None)
+        if sc is None and row is None:
             return spec, E0, a0
-        sh = NamedSharding(mesh, P(axis))
-        spec = {k: jax.device_put(v, sh) for k, v in spec.items()}
-        return spec, jax.device_put(E0, sh), jax.device_put(a0, sh)
+        from jax.experimental import enable_x64
+
+        pfx = (sc,) * lead
+        sh = NamedSharding(mesh, P(*pfx))
+        shE = NamedSharding(mesh, P(*pfx, row, None))
+        shA = NamedSharding(mesh, P(*pfx, row))
+        with enable_x64():    # keep f64 spec/state dtypes across the put
+            spec = {k: jax.device_put(v, sh) for k, v in spec.items()}
+            return spec, jax.device_put(E0, shE), jax.device_put(a0, shA)
 
 
 def sweep_points(
@@ -544,6 +632,7 @@ def sweep_points(
     backend: str | None = None,
     batch_size: int | None = None,
     mesh=None,
+    layout: StateLayout | str | None = None,
 ) -> list[RunResult]:
     """One-shot convenience: each grid entry is SweepPoint kwargs.
 
@@ -564,5 +653,6 @@ def sweep_points(
                     in engine_jax.JAX_COST_MODELS
                     for pt in pts):
                 backend = "numpy"
-    eng = SweepEngine(backend=backend, batch_size=batch_size, mesh=mesh)
+    eng = SweepEngine(backend=backend, batch_size=batch_size, mesh=mesh,
+                      layout=layout)
     return eng.run(pts)

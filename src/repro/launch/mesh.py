@@ -34,12 +34,24 @@ def make_test_mesh(n_devices: int | None = None):
     return jax.make_mesh((2, n // 2), ("data", "model"), **kw)
 
 
-def make_sweep_mesh(n_devices: int | None = None):
-    """1-D ("scenario",) mesh for SweepEngine grid sharding: each device
-    replays a slice of the stacked scenario axis (repro.core.sweep).
+def make_sweep_mesh(n_devices: int | None = None, state_rows: int = 1):
+    """Mesh for SweepEngine grid sharding (repro.core.sweep).
+
+    Default: 1-D ("scenario",) — each device replays a slice of the
+    stacked scenario axis.  ``state_rows > 1`` splits the devices into a
+    2-D ("scenario", "state_row") grid whose second axis carries the
+    row-sharded StateLayout: the (n+1, m) expiry/anchor rows of every
+    lane are distributed over ``state_rows`` devices — catalogs one chip
+    can't hold.  ``state_rows`` must divide the device count.
     On a single-device host this is a trivial mesh and sweeps stay local."""
     n = n_devices or len(jax.devices())
-    return jax.make_mesh((n,), ("scenario",), **_auto_axis_kwargs(1))
+    if state_rows <= 1:
+        return jax.make_mesh((n,), ("scenario",), **_auto_axis_kwargs(1))
+    if n % state_rows:
+        raise ValueError(
+            f"state_rows={state_rows} must divide the device count {n}")
+    return jax.make_mesh((n // state_rows, state_rows),
+                         ("scenario", "state_row"), **_auto_axis_kwargs(2))
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -177,13 +177,17 @@ class LiveServingEngine:
     """
 
     def __init__(self, policy, n, m, *, env=None, batch_size=None,
-                 chunk_size=32768, ring=4, headroom=2.0, cgm="auto"):
+                 chunk_size=32768, ring=4, headroom=2.0, cgm="auto",
+                 layout=None):
         if not HAS_JAX:  # pragma: no cover
             raise ImportError("LiveServingEngine requires jax")
         self.session = CacheSession(
-            policy, n, m, env=env, batch_size=batch_size)
+            policy, n, m, env=env, batch_size=batch_size, layout=layout)
+        #: device state geometry (dense / bucketed / row_sharded)
+        self.layout = self.session.layout
         # validates the cost model has device hooks, builds spec/statics
-        self._jeng = ej.JaxReplayEngine(engine=self.session.engine)
+        self._jeng = ej.JaxReplayEngine(
+            engine=self.session.engine, layout=self.layout)
         self.policy = self.session.policy
         self.n, self.m = n, m
         self.chunk_size = max(1, int(chunk_size))
@@ -222,7 +226,10 @@ class LiveServingEngine:
                        np.zeros(0, np.float64), n, m),
                 self.session.engine.model)
             has_kernels = default_cgm_hooks()[0] is not None
-            self._cgm = eligible and (has_kernels or cgm == "force")
+            # the fused CGM carry is dense-(n, m)-shaped (cgm_jax);
+            # bucketed/sharded layouts stream through the schedule path
+            self._cgm = (eligible and self.layout.is_dense_for(n, m)
+                         and (has_kernels or cgm == "force"))
         self._cgm_carry = None      # device carry dict (E..of..crm..pbin)
         self._cgm_dims = None       # fixed (nb, B, d) chunk shape
         self._cspec_j = None
@@ -402,7 +409,7 @@ class LiveServingEngine:
         if self._carry is not None:
             return
         eng = self.session.engine
-        E0, a0 = ej.state_to_device(eng.state, self.n)
+        E0, a0 = ej.state_to_device(eng.state, self.n, self.layout)
         c = eng.costs
         # accumulator seeded with ABSOLUTE totals: syncs assign rather
         # than add, and resumes are exact (f64 roundtrips bitwise)
@@ -414,6 +421,7 @@ class LiveServingEngine:
         self._host_nreq = 0
         self._host_nitem = 0
         with enable_x64():
+            E0, a0 = self.layout.place_state(E0, a0)
             self._carry = (
                 jnp.asarray(E0, jnp.float64),
                 jnp.asarray(a0, jnp.int32),
@@ -423,16 +431,26 @@ class LiveServingEngine:
                 k: jnp.asarray(v) for k, v in self._jeng._spec.items()}
 
     def _fix_dims(self, dims: dict) -> None:
-        """Fix (or ratchet) the compiled chunk shape with headroom."""
+        """Fix (or ratchet) the compiled chunk shape with headroom.
+
+        Bucket-aware: the install axes (changed rows/items per boundary)
+        scale with the catalog, so at bucketed 10^4-row layouts the
+        ratchet steps grow with ``layout.state_rows`` — otherwise a big
+        catalog would recompile dozens of times while the install width
+        creeps up in 32-slot steps.  Dense small catalogs (rows <= 1024)
+        keep the original step table bit-for-bit.
+        """
         h = self.headroom
+        rows = self.layout.state_rows(self.n)
+        scale = max(1, rows // 1024)
         grown = {
             "nb": ej._bucket(int(dims["nb"] * 2), 4, 4),
             "ne": ej._bucket(int(dims["ne"] * h), 1024, 1024),
             "nu": ej._bucket(int(dims["nu"] * h), 512, 512),
             "na": ej._bucket(int(dims["na"] * h), 256, 256),
-            "ncr": ej._bucket(int(dims["ncr"] * 2), 32, 32),
-            "nci": ej._bucket(int(dims["nci"] * 2), 64, 64),
-            "nmv": ej._bucket(int(dims["nmv"] * 2), 32, 32),
+            "ncr": ej._bucket(int(dims["ncr"] * 2), 32 * scale, 32),
+            "nci": ej._bucket(int(dims["nci"] * 2), 64 * scale, 64),
+            "nmv": ej._bucket(int(dims["nmv"] * 2), 32 * scale, 32),
         }
         if self._dims is None:
             self._dims = grown
@@ -557,6 +575,7 @@ class LiveServingEngine:
             win_prefix=(sess._window_arrays()
                         if windowed and sess._win else None),
             lookup=eng._lookup,
+            layout=self.layout,
         )
         # T_CG window bookkeeping — identical to CacheSession._feed_trace_jax
         if windowed:
@@ -627,12 +646,8 @@ class LiveServingEngine:
         if self._carry is None:
             return
         eng = self.session.engine
-        E = np.asarray(self._carry[0])
-        anchor = np.asarray(self._carry[1])
-        k = self._part.k
-        eng.state = CacheState(
-            partition=self._part, E=E[:k].copy(),
-            anchor=anchor[:k].copy(), m=self.m)
+        eng.state = CacheState.from_device(
+            self._part, self._carry[0], self._carry[1], self.m)
         eng._set_partition_caches(self._part)
         keep_fn = getattr(self.policy, "item_keep", None)
         if keep_fn is not None:
@@ -654,11 +669,8 @@ class LiveServingEngine:
         if self._cgm_bound:
             part = partition_from_of(
                 self.n, np.asarray(self._cgm_carry["of"]))
-        E = np.asarray(self._cgm_carry["E"])
-        anchor = np.asarray(self._cgm_carry["anchor"])
-        eng.state = CacheState(
-            partition=part, E=E[:part.k].copy(),
-            anchor=anchor[:part.k].copy(), m=self.m)
+        eng.state = CacheState.from_device(
+            part, self._cgm_carry["E"], self._cgm_carry["anchor"], self.m)
         eng._set_partition_caches(part)
         nbd = 0
         for bsteps, ofs in self._ofs:

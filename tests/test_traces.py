@@ -110,3 +110,20 @@ def test_unknown_load_profile_refused():
 
     with pytest.raises(ValueError):
         synth_trace(_cfg("tidal"))
+
+
+def test_large_catalog_generation_time_guard():
+    """ISSUE 8: trace generation at n_items = 10^4 must not be the
+    catalog-scale bottleneck.  The bundle-sizes accumulator used to
+    re-sum its list per draw (O(bundles^2)); with the running total the
+    build is sub-second — 5s is pure CI headroom, not a target."""
+    import time
+
+    t0 = time.perf_counter()
+    tr = synth_trace(SynthConfig(
+        kind="netflix", n_items=10_000, n_servers=600, n_requests=20_000,
+        t_max=10.0, bundle_cover=1.0, bundle_zipf=0.7, server_affinity=2,
+        seed=0))
+    elapsed = time.perf_counter() - t0
+    assert tr.n == 10_000 and tr.n_requests == 20_000
+    assert elapsed < 5.0, f"n=10^4 trace generation took {elapsed:.1f}s"
