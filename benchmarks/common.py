@@ -56,6 +56,7 @@ def method_policies(params: CostParams, t_cg: float, top_frac: float) -> dict:
     return {
         "no_packing": {},
         "ttl": dict(t_cg=t_cg),
+        "learned": dict(t_cg=t_cg),   # warm-start scorer (no trained params)
         "dp_greedy": dict(top_frac=top_frac),
         "packcache": dict(t_cg=t_cg, top_frac=top_frac),
         "akpc_base": dict(t_cg=t_cg, top_frac=top_frac),

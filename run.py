@@ -21,6 +21,11 @@ The smoke gates (each also runnable directly as
 * serve_bench           — persistent live serving engine sustains more
                           req/s than the streamed numpy session at 1e-9
                           cost parity; records BENCH_serve.json
+* fig11_stress_rank     — trained learned policy beats no_packing and a
+                          non-AKPC baseline on the regime-shift stress
+                          trace, numpy/jax parity 1e-9, bounded train
+                          compile count; full run records
+                          BENCH_learned.json
 """
 from __future__ import annotations
 
@@ -37,6 +42,7 @@ SMOKE_GATES = (
     "benchmarks.fig8_scalability",
     "benchmarks.fig10_heterogeneous",
     "benchmarks.serve_bench",
+    "benchmarks.fig11_stress_rank",
 )
 
 

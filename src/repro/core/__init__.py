@@ -17,7 +17,13 @@ from .baselines import (
     run_packcache2,
 )
 from .cliques import CliquePartition, generate_cliques
-from .competitive import adversarial_trace, per_request_ratio_check, replay_adversary
+from .competitive import (
+    adversarial_trace,
+    generalized_bound,
+    generalized_per_request_ratio_check,
+    per_request_ratio_check,
+    replay_adversary,
+)
 from .cost import (
     CacheEnvironment,
     CostBreakdown,
@@ -98,6 +104,8 @@ __all__ = [
     "competitive_bound",
     "competitive_bound_corrected",
     "competitive_bound_env",
+    "generalized_bound",
+    "generalized_per_request_ratio_check",
     "generate_cliques",
     "get_cost_model",
     "get_policy",

@@ -8,6 +8,12 @@
   request: AKPC's realised cost for r_i divided by the theorem's OPT model
   for r_i (one packed transfer of the S missed items; pure caching on full
   hits) never exceeds the bound.  Used by the hypothesis property tests.
+* ``generalized_bound`` / ``generalized_per_request_ratio_check`` are the
+  file-bundle generalisation (Qin & Etesami's optimal-online framework,
+  arXiv 2011.03212): both sides of the worst request are priced through the
+  registered CostModel HOOKS instead of the Table-I closed form, so the
+  bound follows per-server prices, item volumes and nonlinear (tiered)
+  transfer schedules with no per-model algebra.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ from .cost import (
     competitive_bound,
     competitive_bound_corrected,
     competitive_bound_env,
+    get_cost_model,
 )
 from .engine import ReplayEngine
 
@@ -105,6 +112,96 @@ def replay_adversary(
             tr.servers.astype(np.int64)).sum())
         bound = competitive_bound_env(eng.env, S, setup.omega)
     return akpc, opt, bound
+
+
+def generalized_bound(
+    env: CacheEnvironment,
+    S: int,
+    omega: int,
+    cost_model="table1",
+) -> float:
+    """File-bundle generalisation of the corrected Thm-1 bound, priced
+    through the registered CostModel hooks (Qin & Etesami, arXiv
+    2011.03212, adapted to the keep-while-rented cache of this paper).
+
+    Worst request at server j, S missed items: the online algorithm pays,
+    per missed item, at most one full omega-clique transfer of the
+    largest items plus the prepaid ``dt_j`` rent for the item itself —
+
+        C_on(j)  = S * [ T(omega, omega*s_max, j) + R(1, s_max, j)*dt_j ]
+
+    while the offline optimum's request model pays a single packed
+    transfer of the S missed items at the smallest volumes —
+
+        C_opt(j) = T(S, S*s_min, j)
+
+    with ``T``/``R`` the model's ``transfer_cost_batch``/``caching_rate``.
+    The bound is ``max_j C_on(j)/C_opt(j)``.  Under ``table1`` this
+    collapses to ``S*(1+(omega-1)*alpha+rho)/(1+(S-1)*alpha)`` — i.e.
+    ``competitive_bound_corrected`` at rho = 1 — and under
+    ``heterogeneous`` it reproduces ``competitive_bound_env`` exactly
+    (tests pin both reductions); for tiered schedules it yields a bound
+    no closed form covers.
+    """
+    if S < 1:
+        raise ValueError("S must be >= 1")
+    if omega < 1:
+        raise ValueError("omega must be >= 1")
+    model = get_cost_model(cost_model, env)
+    m = max(env.m, 1)
+    srv = np.arange(m, dtype=np.int64)
+    sizes = env.sizes()
+    s_max = float(sizes.max()) if sizes.size else 1.0
+    s_min = float(sizes.min()) if sizes.size else 1.0
+    dt_j = np.broadcast_to(
+        np.asarray(model.dt(), np.float64), (m,))
+    trans_on = np.asarray(model.transfer_cost_batch(
+        np.full(m, omega, np.int64), np.full(m, omega * s_max), srv),
+        np.float64)
+    rent_on = np.asarray(model.caching_rate(
+        np.ones(m, np.int64), np.full(m, s_max), srv), np.float64) * dt_j
+    c_on = S * (trans_on + rent_on)
+    c_opt = np.asarray(model.transfer_cost_batch(
+        np.full(m, S, np.int64), np.full(m, S * s_min), srv), np.float64)
+    return float(np.max(c_on / np.maximum(c_opt, 1e-300)))
+
+
+def generalized_per_request_ratio_check(
+    trace: Trace,
+    partition: CliquePartition,
+    params: CostParams,
+    env: CacheEnvironment | None = None,
+    cost_model="table1",
+) -> float:
+    """:func:`per_request_ratio_check` under the generalized bound: max
+    over requests of (realised miss cost / hook-priced OPT request model),
+    normalised by :func:`generalized_bound` at that request's S.  Returns
+    the worst slack ratio (<= 1.0 iff the generalized bound holds on this
+    trace under this cost model).
+    """
+    eng = ReplayEngine(trace.n, trace.m, params,
+                       caching_charge="requested", seed_new_cliques=False,
+                       env=env, cost_model=cost_model)
+    eng.install_partition(partition, now=0.0)
+    omega = max(len(c) for c in partition.cliques)
+    sizes = eng.env.sizes()
+    s_min = float(sizes.min()) if sizes.size else 1.0
+    bounds: dict[int, float] = {}
+    worst = 0.0
+    for i in range(trace.n_requests):
+        out = eng.handle_request(
+            trace.items[i], int(trace.servers[i]), float(trace.times[i]))
+        S = out.n_missed_items
+        if S == 0:
+            continue                       # cases 1.2/2.2: identical costs
+        cost_i = out.transfer + out.caching_miss
+        srv = np.array([int(trace.servers[i])], np.int64)
+        opt_i = float(eng.model.transfer_cost_batch(
+            np.array([S], np.int64), np.array([S * s_min]), srv)[0])
+        if S not in bounds:
+            bounds[S] = generalized_bound(eng.env, S, omega, eng.model)
+        worst = max(worst, (cost_i / opt_i) / bounds[S])
+    return worst
 
 
 def per_request_ratio_check(

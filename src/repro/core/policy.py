@@ -590,6 +590,16 @@ register_policy("akpc_base")(
 )
 
 
+def _learned_factory(**kw):
+    # deferred: repro.learned.policy imports this module
+    from ..learned.policy import LearnedPolicy
+
+    return LearnedPolicy(**kw)
+
+
+register_policy("learned")(_learned_factory)
+
+
 # ---------------------------------------------------------------------------
 # offline driver
 # ---------------------------------------------------------------------------

@@ -1,0 +1,148 @@
+"""Per-window, per-item feature extraction for the learned policy.
+
+The featurizer is the frozen seam between training and serving: the
+trainer (``learned.train``) and the serving policy (``learned.policy``)
+both build their inputs HERE, from the same running per-item stats and
+the same window summaries, so a model trained offline scores exactly the
+features the policy computes at a T_CG boundary.
+
+Two implementations of the same math:
+
+* :func:`features_np` — numpy float64, the CANONICAL path.  Keep/evict
+  decisions are made from these features on host for every backend
+  (numpy replay, jax replay, live serving), which is what makes
+  cross-backend cost parity exact — same idea as the cost specs that
+  ride the device schedule as data.
+* :func:`features_jnp` — a pure-``jnp`` twin (device-ready, used by the
+  jit'd training loop; numerically equal to the numpy path at f64,
+  tests/test_learned.py).
+
+``FEATURE_SCHEMA_VERSION`` tags trained parameter sets; a policy refuses
+params whose schema does not match the featurizer it would serve them
+with.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+#: frozen feature-schema tag, bumped on ANY change to FEATURE_NAMES or
+#: the formulas below; LearnedParams carry it and the policy checks it
+FEATURE_SCHEMA_VERSION = 1
+
+#: feature column names, in order (F = len(FEATURE_NAMES))
+FEATURE_NAMES = (
+    "log_window_count",   # log1p(#accesses in the window just ended)
+    "recency",            # (now - last-seen boundary) / t_cg, clipped
+    "co_degree",          # log1p(binary-CRM row degree in the window)
+    "log_size",           # log(item volume)
+    "clique_excess",      # log1p(current clique size - 1)
+    "gap_ratio",          # EMA inter-arrival estimate / dt, clipped
+    "log_total_count",    # log1p(lifetime access count)
+)
+
+#: EMA factor for the inter-arrival estimate (higher = more reactive)
+EMA_GAP = 0.3
+
+#: clip ceiling for the unbounded ratio features (recency, gap_ratio)
+RATIO_CLIP = 8.0
+
+
+def init_stats(n: int, dt: float) -> dict:
+    """Fresh running per-item stats for a catalog of ``n`` items.
+
+    ``last`` is the boundary time of the last window the item appeared
+    in (-inf = never seen), ``ema_gap`` an EMA estimate of the item's
+    inter-arrival time (seeded at the cache TTL ``dt`` — "unknown items
+    re-arrive right at the keep/evict break-even"), ``total`` the
+    lifetime access count.  All float64: these arrays travel through
+    policy snapshots and must restore bitwise.
+    """
+    return {
+        "last": np.full(n, -np.inf, dtype=np.float64),
+        "ema_gap": np.full(n, float(dt), dtype=np.float64),
+        "total": np.zeros(n, dtype=np.float64),
+    }
+
+
+def update_stats(stats: dict, counts: np.ndarray, now: float,
+                 t_cg: float) -> dict:
+    """Fold one finished window into the running stats (in place).
+
+    The window's mean inter-arrival is estimated as ``t_cg / count`` for
+    accessed items (count accesses spread over a t_cg-long window) and
+    EMA-merged; unaccessed items keep their previous estimate.
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    acc = counts > 0
+    gap_est = t_cg / np.maximum(counts, 1.0)
+    stats["ema_gap"] = np.where(
+        acc, (1.0 - EMA_GAP) * stats["ema_gap"] + EMA_GAP * gap_est,
+        stats["ema_gap"])
+    stats["last"] = np.where(acc, float(now), stats["last"])
+    stats["total"] = stats["total"] + counts
+    return stats
+
+
+def window_co_degree(crm, n: int) -> np.ndarray:
+    """(n,) f64 co-access degree from a window's binary CRM.
+
+    Items outside the CRM's hot set (or windows with no binary edges)
+    get degree 0 — the same "cold items carry no co-access signal" rule
+    the clique generator applies.
+    """
+    deg = np.zeros(n, dtype=np.float64)
+    if crm is not None and crm.hot_items.size:
+        deg[crm.hot_items] = crm.binary.sum(axis=1).astype(np.float64)
+    return deg
+
+
+def features_np(counts, co_deg, stats, sizes, clique_sizes, now: float,
+                dt: float, t_cg: float) -> np.ndarray:
+    """(n, F) float64 feature matrix — the canonical host path.
+
+    ``counts``/``co_deg`` summarise the window just ended, ``stats`` the
+    running history AFTER :func:`update_stats` folded that window in,
+    ``clique_sizes`` the per-item size of the item's CURRENT clique.
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    co_deg = np.asarray(co_deg, dtype=np.float64)
+    sizes = np.asarray(sizes, dtype=np.float64)
+    csz = np.asarray(clique_sizes, dtype=np.float64)
+    t_cg = max(float(t_cg), 1e-12)
+    dt = max(float(dt), 1e-12)
+    rec = np.clip((float(now) - stats["last"]) / t_cg, 0.0, RATIO_CLIP)
+    gap = np.clip(stats["ema_gap"] / dt, 0.0, RATIO_CLIP)
+    return np.stack([
+        np.log1p(counts),
+        rec,
+        np.log1p(co_deg),
+        np.log(np.maximum(sizes, 1e-12)),
+        np.log1p(np.maximum(csz - 1.0, 0.0)),
+        gap,
+        np.log1p(stats["total"]),
+    ], axis=1)
+
+
+def features_jnp(counts, co_deg, stats, sizes, clique_sizes, now,
+                 dt: float, t_cg: float):
+    """Pure-``jnp`` twin of :func:`features_np` (same math, same order).
+
+    Traceable: every input may be a traced array; ``dt``/``t_cg`` are
+    static floats.  Under x64 this matches the numpy path to f64
+    round-off (tests pin 1e-12 relative).
+    """
+    import jax.numpy as jnp
+
+    t_cg = max(float(t_cg), 1e-12)
+    dt = max(float(dt), 1e-12)
+    rec = jnp.clip((now - stats["last"]) / t_cg, 0.0, RATIO_CLIP)
+    gap = jnp.clip(stats["ema_gap"] / dt, 0.0, RATIO_CLIP)
+    return jnp.stack([
+        jnp.log1p(counts),
+        rec,
+        jnp.log1p(co_deg),
+        jnp.log(jnp.maximum(sizes, 1e-12)),
+        jnp.log1p(jnp.maximum(clique_sizes - 1.0, 0.0)),
+        gap,
+        jnp.log1p(stats["total"]),
+    ], axis=1)

@@ -24,11 +24,19 @@ class AdamWConfig:
     warmup_steps: int = 100
     total_steps: int = 10_000
     min_lr_frac: float = 0.1
+    #: lr fraction at step 0 of the warmup ramp: warmup runs linearly from
+    #: warmup_floor*lr to lr instead of from 0.  The default 0.0 preserves
+    #: the original schedule bitwise (adds 0.0, scales by 1.0); short runs
+    #: (e.g. policy training with warmup_steps ~ total_steps/10) set it so
+    #: the first steps are not wasted at near-zero lr.
+    warmup_floor: float = 0.0
 
 
 def cosine_schedule(cfg: AdamWConfig, step):
     step = step.astype(jnp.float32)
-    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    warm = cfg.warmup_floor + (1.0 - cfg.warmup_floor) * (
+        step / jnp.maximum(cfg.warmup_steps, 1)
+    )
     prog = (step - cfg.warmup_steps) / jnp.maximum(
         cfg.total_steps - cfg.warmup_steps, 1
     )

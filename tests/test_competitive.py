@@ -1,4 +1,5 @@
-"""Theorems 1 & 2: exact adversarial ratio + per-request bound property."""
+"""Theorems 1 & 2: exact adversarial ratio + per-request bound property,
+plus the generalized (hook-priced) file-bundle bound of Qin & Etesami."""
 import math
 
 import numpy as np
@@ -6,12 +7,19 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
+    CacheEnvironment,
     CliquePartition,
     CostParams,
     adversarial_trace,
     competitive_bound_corrected,
+    competitive_bound_env,
+    generalized_bound,
+    generalized_per_request_ratio_check,
+    get_policy,
+    opt_lower_bound,
     per_request_ratio_check,
     replay_adversary,
+    run_policy,
 )
 from repro.traces import paper_trace
 
@@ -43,4 +51,85 @@ def test_per_request_bound_on_random_traces(seed):
     part = CliquePartition.from_cliques(
         60, [tuple(range(i, i + 5)) for i in range(0, 60, 5)])
     worst = per_request_ratio_check(tr, part, params)
+    assert worst <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# generalized (hook-priced) bound — Qin & Etesami file-bundle framework
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,omega", [(1, 1), (1, 5), (2, 5), (5, 3)])
+def test_generalized_bound_reduces_to_corrected(S, omega):
+    """Under table1/rho=1/unit sizes the hook-priced bound collapses to
+    the corrected Thm-1 closed form."""
+    params = CostParams(rho=1.0)
+    env = CacheEnvironment(30, 6, params)
+    assert math.isclose(
+        generalized_bound(env, S, omega, "table1"),
+        competitive_bound_corrected(S, omega, params.alpha), rel_tol=1e-12)
+
+
+@pytest.mark.parametrize("S,omega", [(1, 3), (3, 3), (4, 1)])
+def test_generalized_bound_reduces_to_env_bound(S, omega):
+    """Under the heterogeneous model it reproduces competitive_bound_env
+    (per-server prices, size skew) with no closed-form algebra."""
+    params = CostParams(rho=2.5)
+    env = CacheEnvironment.skewed(
+        30, 6, params, price_sigma=0.7, size_sigma=0.4, seed=3)
+    assert math.isclose(
+        generalized_bound(env, S, omega, "heterogeneous"),
+        competitive_bound_env(env, S, omega), rel_tol=1e-12)
+
+
+def test_generalized_bound_rejects_degenerate_args():
+    env = CacheEnvironment(10, 2, CostParams())
+    with pytest.raises(ValueError):
+        generalized_bound(env, 0, 3)
+    with pytest.raises(ValueError):
+        generalized_bound(env, 2, 0)
+
+
+@pytest.mark.parametrize("kind", ["netflix", "spotify"])
+def test_akpc_empirical_ratio_under_generalized_bound(kind):
+    """AKPC's realised cost / OPT on the fig5 grid stays under the
+    generalized bound at the run's own (S_max, omega_max)."""
+    params = CostParams()
+    tr = paper_trace(kind, n_requests=4000)
+    env = CacheEnvironment.resolve(None, tr, params)
+    span = float(tr.times[-1] - tr.times[0])
+    res = run_policy(
+        get_policy("akpc", params=params, t_cg=span / 20, top_frac=1.0),
+        tr)
+    opt = opt_lower_bound(tr, params).total
+    S_max = tr.items.shape[1] if tr.items.ndim == 2 else 1
+    omega_max = int(res.clique_sizes.max())
+    bound = generalized_bound(env, S_max, omega_max, "table1")
+    assert res.total / opt <= bound + 1e-9
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 100))
+def test_generalized_per_request_bound_table1(seed):
+    """The generalized per-request check reproduces the Thm-1 property on
+    homogeneous table1 scenarios."""
+    params = CostParams()
+    tr = paper_trace("netflix", n_requests=1500, seed=seed)
+    part = CliquePartition.from_cliques(
+        60, [tuple(range(i, i + 5)) for i in range(0, 60, 5)])
+    worst = generalized_per_request_ratio_check(tr, part, params)
+    assert worst <= 1.0 + 1e-9
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 50))
+def test_generalized_per_request_bound_heterogeneous(seed):
+    """...and extends it to per-server prices + item sizes, where the
+    closed forms don't apply."""
+    params = CostParams()
+    tr = paper_trace("netflix", n_requests=1000, seed=seed)
+    env = CacheEnvironment.skewed(
+        tr.n, tr.m, params, price_sigma=0.6, size_sigma=0.3, seed=seed + 1)
+    part = CliquePartition.from_cliques(
+        60, [tuple(range(i, i + 5)) for i in range(0, 60, 5)])
+    worst = generalized_per_request_ratio_check(
+        tr, part, params, env=env, cost_model="heterogeneous")
     assert worst <= 1.0 + 1e-9

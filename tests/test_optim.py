@@ -56,6 +56,45 @@ def test_cosine_schedule_shape():
     assert lrs[3] < 1.0 and math.isclose(lrs[4], 0.1, rel_tol=1e-5)
 
 
+def test_cosine_schedule_warmup_floor_default_bitwise():
+    """warmup_floor=0.0 (the default) must preserve the original ramp
+    BITWISE: floor + (1-floor)*ramp literally adds 0.0 and scales by 1.0."""
+    cfg = AdamWConfig(lr=0.37, warmup_steps=13, total_steps=100,
+                      min_lr_frac=0.1)
+    assert cfg.warmup_floor == 0.0
+
+    def old_schedule(step):                  # the pre-floor formula, verbatim
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(cfg.warmup_steps, 1)
+        prog = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+    for s in range(0, 101, 7):
+        step = jnp.array(s)
+        assert float(cosine_schedule(cfg, step)) == float(old_schedule(step))
+
+
+def test_cosine_schedule_warmup_floor_semantics():
+    """With a floor f the warmup ramps linearly f*lr -> lr, and the
+    post-warmup cosine leg is untouched."""
+    f = 0.25
+    base = AdamWConfig(lr=2.0, warmup_steps=10, total_steps=100,
+                       min_lr_frac=0.1)
+    cfg = AdamWConfig(lr=2.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1, warmup_floor=f)
+    assert math.isclose(float(cosine_schedule(cfg, jnp.array(0))), f * cfg.lr)
+    mid = float(cosine_schedule(cfg, jnp.array(5)))
+    assert math.isclose(mid, (f + (1 - f) * 0.5) * cfg.lr, rel_tol=1e-6)
+    # floor applies only below warmup_steps
+    for s in (10, 55, 100):
+        assert float(cosine_schedule(cfg, jnp.array(s))) == float(
+            cosine_schedule(base, jnp.array(s)))
+
+
 def test_error_feedback_compression_reduces_error():
     rng = np.random.default_rng(0)
     g_true = {"w": jnp.array(rng.normal(size=(64,)), jnp.float32)}

@@ -40,7 +40,7 @@ from repro.traces import SynthConfig, synth_trace
 PARAMS = CostParams()
 T_CG = 0.73            # never divides the batch grid: windows split batches
 TOP_FRAC = 1.0
-ALL_POLICIES = ("no_packing", "ttl", "packcache", "dp_greedy",
+ALL_POLICIES = ("no_packing", "ttl", "learned", "packcache", "dp_greedy",
                 "akpc", "akpc_no_acm", "akpc_base")
 
 INT_FIELDS = ("n_requests", "n_item_requests", "n_misses", "n_hits",
@@ -59,7 +59,7 @@ def _kwargs(name, **extra):
     kw = {"params": PARAMS}
     if name in ("packcache", "akpc", "akpc_no_acm", "akpc_base"):
         kw.update(t_cg=T_CG, top_frac=TOP_FRAC)
-    if name == "ttl":                  # keep-or-not baseline: no packing knobs
+    if name in ("ttl", "learned"):     # keep-or-not policies: no packing knobs
         kw.update(t_cg=T_CG)
     if name == "dp_greedy":
         kw.update(top_frac=TOP_FRAC)
@@ -332,6 +332,40 @@ def test_sweep_shard_axis_numpy_backend_parity():
         [SweepPoint("akpc", shards[0],
                     dict(params=PARAMS, t_cg=T_CG, top_frac=TOP_FRAC))])[0]
     assert plain.shard_stats is None
+
+
+def _stress_trace(profile, seed, n_requests=1200):
+    return synth_trace(SynthConfig(
+        kind="netflix", n_items=60, n_servers=12, n_requests=n_requests,
+        t_max=30.0, bundle_cover=1.0, bundle_zipf=0.7, seed=seed,
+        load_profile=profile,
+        load_strength=4.0 if profile == "flash_crowd" else 0.8))
+
+
+@pytest.mark.parametrize("profile", ["diurnal", "flash_crowd"])
+def test_sweep_shard_axis_nonstationary_profiles(profile):
+    """Non-stationary traces through the shard axis: merged totals equal
+    the serial per-shard replays at 1e-9, and the shard-CI estimate
+    tightens as seed-replica shards are added (1/sqrt(n) scaling holds to
+    within the seed noise of these workloads)."""
+    seeds = (3, 4, 5, 6, 7, 8)
+    shards = [_stress_trace(profile, s) for s in seeds]
+    kw = dict(params=PARAMS, t_cg=T_CG, top_frac=TOP_FRAC)
+    got2, got6 = SweepEngine().run([
+        SweepPoint("akpc", shards[:2], kw),
+        SweepPoint("akpc", shards, kw),
+    ])
+    subs = [run_policy(get_policy("akpc", **kw), tr) for tr in shards]
+    merged = {f: sum(s.costs.as_dict()[f] for s in subs)
+              for f in INT_FIELDS + FLOAT_FIELDS}
+    assert_same_costs(merged, got6.costs)
+    np.testing.assert_allclose(
+        got6.shard_stats["totals"], [s.costs.total for s in subs],
+        rtol=1e-9)
+    # non-stationarity really moved the per-shard costs apart
+    assert got6.shard_stats["std"] > 0.0
+    # CI width shrinks with the shard count (same seeds prefix both points)
+    assert got6.shard_stats["ci95"] < got2.shard_stats["ci95"]
 
 
 def test_sweep_shard_axis_rejects_mismatched_shards():
