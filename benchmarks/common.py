@@ -29,10 +29,33 @@ from repro.traces import paper_trace
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "experiments/results")
 N_REQUESTS = int(os.environ.get("REPRO_BENCH_REQUESTS", "150000"))
 N_SWEEP = int(os.environ.get("REPRO_BENCH_SWEEP_REQUESTS", "40000"))
+#: >1 splits each figure's request budget over per-seed trace replicas
+#: (the SweepEngine trace-shard vmap axis) so figs report mean +- 95% CI
+N_SHARDS = int(os.environ.get("REPRO_BENCH_SHARDS", "1"))
 
 @functools.lru_cache(maxsize=8)
 def get_trace(kind: str, n_requests: int, seed: int = 0):
     return paper_trace(kind, n_requests=n_requests, seed=seed)
+
+
+@functools.lru_cache(maxsize=8)
+def get_trace_shards(kind: str, n_requests: int, shards: int | None = None,
+                     seed0: int = 0):
+    """The figure workload as a trace-shard tuple (or one trace).
+
+    ``shards`` defaults to ``REPRO_BENCH_SHARDS``; above 1 the request
+    budget splits across per-seed replicas that replay as extra vmap
+    lanes of one sweep call (``SweepPoint`` shard axis), so every
+    ``run_method_grid`` entry gains ``shard_stats`` (mean +- 95% CI of
+    the per-shard totals) at near-zero marginal device cost.  At the
+    default 1 this IS ``get_trace`` — figure payloads stay bitwise."""
+    k = N_SHARDS if shards is None else int(shards)
+    if k <= 1:
+        return get_trace(kind, n_requests, seed0)
+    return tuple(
+        paper_trace(kind, n_requests=max(1, n_requests // k),
+                    seed=seed0 + i)
+        for i in range(k))
 
 
 def t_cg_for(trace, params: CostParams | None = None,
@@ -76,11 +99,17 @@ def _result_entry(res) -> dict:
     }
     if (res.clique_sizes > 1).any():
         entry["clique_sizes"] = np.bincount(res.clique_sizes).tolist()
+    if getattr(res, "shard_stats", None):
+        entry["shard_stats"] = res.shard_stats
     return entry
 
 
 def _maybe_add_opt(out: dict, trace, params, env, cost_model, methods) -> None:
-    """Attach the OPT lower bound when requested and valid for the model."""
+    """Attach the OPT lower bound when requested and valid for the model.
+
+    For a trace-shard tuple the bound is the SUM of per-shard bounds —
+    the same aggregation ``SweepEngine`` applies to the policy costs, so
+    opt-relative numbers stay comparable under sharding."""
     if methods is not None and "opt" not in methods:
         return
     from repro.core.baselines import OPT_BOUND_MODELS
@@ -90,11 +119,15 @@ def _maybe_add_opt(out: dict, trace, params, env, cost_model, methods) -> None:
         # compare against no_packing instead
         return
     t0 = time.perf_counter()
-    costs = opt_lower_bound(trace, params, env=env, cost_model=cost_model)
+    shards = trace if isinstance(trace, (list, tuple)) else (trace,)
+    totals = np.zeros(3, np.float64)
+    for tr in shards:
+        costs = opt_lower_bound(tr, params, env=env, cost_model=cost_model)
+        totals += (costs.total, costs.transfer, costs.caching)
     out["opt"] = {
-        "total": costs.total,
-        "transfer": costs.transfer,
-        "caching": costs.caching,
+        "total": float(totals[0]),
+        "transfer": float(totals[1]),
+        "caching": float(totals[2]),
         "seconds": round(time.perf_counter() - t0, 2),
     }
 
@@ -163,13 +196,16 @@ def run_method_grid(grid: list[dict], backend: str | None = None,
     pts, slots, resolved = [], [], []
     for gi, g in enumerate(grid):
         trace = g["trace"]
+        # a tuple/list of traces is the shard axis (get_trace_shards):
+        # scenario resolution reads the representative first shard
+        tr0 = trace[0] if isinstance(trace, (list, tuple)) else trace
         params = g.get("params") or CostParams()
-        env = CacheEnvironment.resolve(g.get("env"), trace, params)
+        env = CacheEnvironment.resolve(g.get("env"), tr0, params)
         cost_model = g.get("cost_model", "table1")
         methods = g.get("methods")
         t_cg = g.get("t_cg")
         if t_cg is None:
-            t_cg = t_cg_for(trace, params, env=env, cost_model=cost_model)
+            t_cg = t_cg_for(tr0, params, env=env, cost_model=cost_model)
         resolved.append((trace, params, env, cost_model, methods))
         for name, kw in method_policies(
                 params, t_cg, g.get("top_frac", 1.0)).items():

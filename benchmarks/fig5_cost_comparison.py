@@ -8,7 +8,8 @@ replays.
 from __future__ import annotations
 
 from .common import (
-    N_REQUESTS, emit, get_trace, relative_to_opt, run_method_grid, save_json,
+    N_REQUESTS, emit, get_trace_shards, relative_to_opt, run_method_grid,
+    save_json,
 )
 from repro.core import CostParams
 
@@ -17,9 +18,10 @@ KINDS = ("netflix", "spotify")
 
 def main() -> list[tuple]:
     params = CostParams()                     # Table II base values
-    # the paper's scenario == the registry's default "table1" model
+    # the paper's scenario == the registry's default "table1" model;
+    # REPRO_BENCH_SHARDS > 1 adds the trace-shard axis (mean +- CI)
     grid = [
-        {"trace": get_trace(kind, N_REQUESTS), "params": params,
+        {"trace": get_trace_shards(kind, N_REQUESTS), "params": params,
          "cost_model": "table1"}
         for kind in KINDS
     ]

@@ -9,7 +9,8 @@ every schedule group replays as one vmapped device scan.
 from __future__ import annotations
 
 from .common import (
-    N_SWEEP, emit, get_trace, relative_to_opt, run_method_grid, save_json,
+    N_SWEEP, emit, get_trace_shards, relative_to_opt, run_method_grid,
+    save_json,
 )
 from repro.core import CostParams
 
@@ -22,7 +23,7 @@ KINDS = ("netflix", "spotify")
 def main() -> list[tuple]:
     grid, keys = [], []
     for kind in KINDS:
-        tr = get_trace(kind, N_SWEEP)
+        tr = get_trace_shards(kind, N_SWEEP)
         for a in ALPHAS:
             grid.append({"trace": tr, "params": CostParams(alpha=a),
                          "methods": METHODS, "cost_model": "table1"})

@@ -22,9 +22,10 @@ from repro.traces import SynthConfig, synth_trace
 RUNTIME_ITEMS = [100, 1000, 4000, 10000]
 SMOKE_ITEMS = [1000, 4000]
 
-#: catalog sizes for the device-resident CGM timing (BENCH_cgm.json) —
-#: capped by cgm_jax.MAX_DEVICE_CGM_N (the auto-routing ceiling)
-DEVICE_CGM_ITEMS = [64, 192]
+#: catalog sizes for the device-resident CGM timing (BENCH_cgm.json).
+#: The compact hot-space carry (DESIGN.md §15) lifted the old 256-item
+#: auto-routing ceiling, so this sweep now reaches fig9-scale catalogs.
+DEVICE_CGM_ITEMS = [64, 1000, 4000]
 
 #: wall seconds of this same sweep under the pre-vectorization (scalar)
 #: CGM, recorded before PR 3 on the reference container — the regression
@@ -177,19 +178,32 @@ def main(smoke: bool = False) -> list[tuple]:
 
     # device-resident CGM timing (PR 6): the windowed replay with clique
     # generation inside the scan vs the host-CGM jax path, per catalog size
-    cgm_payload = {"trace": "spotify/8000req", "items": {}}
+    cgm_items = {}
     for n in DEVICE_CGM_ITEMS:
         row = _time_device_cgm(n)
         if row is None:
             break
-        cgm_payload["items"][n] = row
+        cgm_items[n] = row
         rows.append((
             f"bench_cgm/items={n}", int(row["device_seconds"] * 1e6),
             f"device={row['device_seconds']}s;"
             f"host_jax={row['host_jax_seconds']}s;"
             f"windows={row['n_windows']};"
             f"us_per_window={row['device_us_per_window']}"))
-    if cgm_payload["items"]:
+    if cgm_items:
+        # merge-write: fig7's compact_vs_dense_vs_host breakdown lives in
+        # the same file, so preserve whatever keys are already there
+        import json
+        import os
+
+        from .common import RESULTS_DIR
+
+        cgm_payload = {}
+        path = os.path.join(RESULTS_DIR, "BENCH_cgm.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                cgm_payload = json.load(f)
+        cgm_payload.update({"trace": "spotify/8000req", "items": cgm_items})
         save_json("BENCH_cgm", cgm_payload)
 
     save_json("fig9_cliques_runtime", payload)

@@ -1,44 +1,54 @@
 """Device-resident clique generation: the CGM inside the jit'd scan.
 
 PR 5 moved the replay *state* recurrence on device but left the Clique
-Generation Module (Alg. 2-4) on host, so ``build_schedule`` still calls
-``policy.on_window`` per T_CG boundary and ships partition-dependent
-event tensors.  This module re-cuts that seam (DESIGN.md §11): the host
-ships only RAW request tensors (items / servers / times, sliced so no
-scan step straddles a T_CG boundary) and the scan carry grows the full
-CGM state — window CRM accumulator, hot-set counters, seed counters,
-the item->clique slot map and the previous window's binarised CRM.  At
-each boundary step a ``lax.cond`` branch runs, entirely on device:
+Generation Module (Alg. 2-4) on host; PR 6 re-cut that seam (DESIGN.md
+§11) so the host ships only RAW request tensors and the scan carry
+grows the full CGM state.  This revision re-expresses every boundary
+tensor in a COMPACT HOT SPACE (DESIGN.md §15): the paper's CGM only
+ever reasons over the window hot set — a ``top_frac`` slice of the
+window's distinct items (§V.A) — so the carry holds an ``(h, h)`` CRM
+workspace plus an ``(h,)`` hot->catalog index map, with ``h`` the
+padded hot-set capacity derived from ``top_frac`` and the window size
+(typically ≪ n).  Requests are buffered per window (``wbuf``) and the
+CRM is built ONCE per boundary as a rank-``wcap`` update over the hot
+incidence — there is no per-step (n, n) matmul and no (n, n) carry at
+all.  At each boundary step a ``lax.cond`` branch runs, entirely on
+device:
 
-* Alg. 2 — hot set (stable rank of window counts), min-max normalise,
-  binarise at theta; the window CRM itself was accumulated step by step
-  as the rank-B update ``CRM += H^T H`` (``kernels/crm_update.py`` on
-  TPU, a jnp matmul elsewhere);
-* Alg. 4 — the edge diff vs the previous window's binary CRM, then the
+* Alg. 2 — hot set (stable rank of window counts), the ``(h, h)`` CRM
+  via ``H^T H`` over the buffered window (``kernels/crm_update.py`` on
+  TPU, a fused jnp contraction elsewhere), min-max normalise, binarise
+  at theta;
+* Alg. 4 — the edge diff vs the previous window's binary CRM via
+  cross-space index luts (each side stays ``(h, h)``), then the
   removed-edge splits / added-edge merges as bounded ``fori_loop``s
-  over fixed-capacity slot buffers;
-* Alg. 3 — oversized-clique splits as a LIFO worklist (bounded
-  ``fori``+``while``) over member masks, and the approximate merge as a
-  ``lax.while_loop`` over the thresholded density matrix using the
-  incremental ``X = M A M^T`` patch algebra of PR 3 (one row/col patch
-  per merge, ``kernels/merge_step.py`` builds the initial D on TPU);
+  over the global slot map with ``(h,)`` side-weight accumulators;
+* Alg. 3 — oversized-clique splits as a LIFO worklist over
+  fixed-capacity MEMBER LISTS (``gcap`` ≤ a few × omega, not n), and
+  the approximate merge as a ``lax.while_loop`` over the thresholded
+  density matrix in an ``(S_h, S_h)`` act-compacted slot space using
+  the incremental ``X = M A M^T`` patch algebra of PR 3
+  (``kernels/merge_step.py`` builds the initial D on TPU);
 * the partition install (``install_partition``) as segment reductions
   over the old slot map — matching, member-wise expiry min, Alg.-1
   window seeding.
 
-Because events are now CONSTRUCTED in-scan (dedup, sort orders, lags —
-the ``batch_events`` pipeline as jnp sorts/segment-sums), the schedule
-is partition-free: theta / gamma / omega / top_frac are runtime scalars
+Because events are CONSTRUCTED in-scan (dedup, sort orders, lags — the
+``batch_events`` pipeline as jnp sorts/segment-sums), the schedule is
+partition-free: theta / gamma / omega / top_frac are runtime scalars
 (``cgm_spec``) and a fig7 hyperparameter grid vmaps over them sharing
-ONE schedule and ONE host->device transfer per trace.
+ONE schedule and ONE host->device transfer per trace (``h`` is sized
+by the MAX hot dimension over the vmapped lanes).
 
 Parity bar: the host path (``core/cliques.py`` + the ``cliques_ref``
 oracle) stays frozen; device partitions are element-for-element equal
 across chained windows and costs match the numpy engine at 1e-9.  The
-proof obligations (op-for-op float semantics, stable-sort tie-breaking,
-slot-order vs list-order equivalence) are documented inline at each
-step.  The f32 CRM / X counters are exact integers below 2**24 — the
-eligibility gate (``wants_device_cgm``) enforces the bound.
+proof obligations (op-for-op float semantics, stable-sort
+tie-breaking, compact-space vs list-order equivalence) are documented
+inline at each step.  The f32 CRM / X counters are exact integers
+below 2**24 — ``_window_crm_device`` raises if the window capacity
+could overflow that bound, and the eligibility gate
+(``wants_device_cgm``) sizes ``h`` before routing.
 """
 from __future__ import annotations
 
@@ -48,7 +58,7 @@ import os
 import numpy as np
 
 from .cliques import CliquePartition
-from .crm import WindowCRM, cooccurrence_counts
+from .crm import WindowCRM
 from .engine import CacheState
 from .engine_jax import (
     HAS_JAX,
@@ -70,11 +80,45 @@ else:  # pragma: no cover - jax-less containers never import the scan path
     jax = None
     import functools
 
-#: device CGM is gated to catalogs whose n^2 carries and f32 counters
-#: stay cheap and exact; larger catalogs keep the host CGM path
-MAX_DEVICE_CGM_N = 256
+#: device CGM is gated on the PADDED HOT CAPACITY h, not the catalog
+#: size — the (h, h) workspace and (2h, 2h) merge matrices stay cheap
+#: and the f32 edge counters stay exact for any h below this bound
+MAX_DEVICE_CGM_HOT = 2048
 #: f32 exactness bound for the CRM / X integer counters
 _F32_EXACT = 1 << 24
+
+
+def hot_capacity(n: int, max_slots: int, hot_dims) -> int:
+    """Padded hot-set capacity for a window of ``max_slots`` item slots.
+
+    ``hot_dims`` is a list of ``(top_frac, of_catalog)`` pairs — one per
+    vmapped scenario lane; the capacity is the max over lanes.  The hot
+    set requires a positive window count, so it can never exceed the
+    window's distinct support (≤ ``max_slots``) even when ``top_frac``
+    is taken of the catalog; the bucket keeps recompiles rare.
+    """
+    need = 1
+    for frac, of_catalog in hot_dims:
+        base = n if of_catalog else min(n, int(max_slots))
+        need = max(need, min(n, int(max_slots),
+                             max(1, int(round(base * float(frac))))))
+    return min(n, _bucket(need, 32, 32))
+
+
+def _max_window_requests(trace, t_cg: float) -> int:
+    """Upper bound on request rows in any one T_CG window.
+
+    Every window's requests lie inside a half-open span of length
+    ``t_cg`` starting at a request time (boundaries fire at request
+    times and the grid advances by ``t_cg``), so the sliding-window
+    count over request-aligned starts dominates all real windows —
+    including the open tail window.
+    """
+    times = np.asarray(trace.times, np.float64)
+    if times.size == 0:
+        return 0
+    ends = np.searchsorted(times, times + float(t_cg), side="left")
+    return int((ends - np.arange(times.size)).max())
 
 
 # ---------------------------------------------------------------------------
@@ -89,6 +133,9 @@ class CGMSchedule:
     derived ON DEVICE.  ``xs`` leading axis is nb (scan steps); a step
     never straddles a T_CG boundary, and a step whose window begins a
     new T_CG period carries ``cg=True`` + the boundary evaluation time.
+    ``h`` / ``wcap`` size the compact boundary workspace: padded hot
+    capacity and the window request-row buffer (``win_rows`` /
+    ``win_slots`` record the raw per-window maxima they derive from).
     """
 
     n: int
@@ -105,6 +152,10 @@ class CGMSchedule:
     win_start: int              # open-window start index into the trace
     boundary_hit: bool
     next_cg: float | None
+    h: int                      # padded hot-set capacity
+    wcap: int                   # window request-row buffer capacity
+    win_rows: int               # max request rows in any one window
+    win_slots: int              # max item slots in any one window (≤ n)
 
 
 def build_cgm_schedule(
@@ -114,6 +165,9 @@ def build_cgm_schedule(
     uses_sizes: bool,
     batch_size: int | None = None,
     next_cg0: float | None = None,
+    hot_dims=None,
+    prefix_rows: int = 0,
+    prefix_slots: int = 0,
 ) -> CGMSchedule:
     """Cut the trace into boundary-aligned request batches.
 
@@ -122,6 +176,12 @@ def build_cgm_schedule(
     lies at/after ``next_cg``, is evaluated at that request's time, and
     empty periods are skipped with a single firing.  No clique
     generation happens here — the boundary merely flags the step.
+
+    ``hot_dims`` is the ``(top_frac, of_catalog)`` list over the lanes
+    that will share this schedule (default: a full-support lane, the
+    conservative ``h`` = window support); ``prefix_rows`` /
+    ``prefix_slots`` account a session's already-open window so the
+    head window's buffer capacity covers it.
     """
     times, servers, items = trace.times, trace.servers, trace.items
     R = int(times.shape[0])
@@ -159,6 +219,28 @@ def build_cgm_schedule(
     nb_raw = max(1, len(slices))
     nb = _bucket(nb_raw, 4, 4)
     B = _bucket(max((s - p for p, s, _ in slices), default=1), 32, 32)
+
+    # per-window row/slot accounting: a boundary slice CLOSES the window
+    # accumulated so far (head window includes the session prefix; the
+    # tail window stays open but still occupies the buffer)
+    cur_rows, cur_slots = int(prefix_rows), int(prefix_slots)
+    max_rows, max_slots = cur_rows, cur_slots
+    for p, s, cg_now in slices:
+        if cg_now is not None:
+            cur_rows, cur_slots = 0, 0
+        cur_rows += s - p
+        cur_slots += (s - p) * d
+        max_rows = max(max_rows, cur_rows)
+        max_slots = max(max_slots, cur_slots)
+    win_slots = min(trace.n, max_slots)
+    # +B headroom: a step writes its whole padded block at offset wlen
+    # before the validity mask trims it, so the buffer must absorb one
+    # full batch past the worst window
+    wcap = _bucket(max_rows + B, 64, 64)
+    if hot_dims is None:
+        hot_dims = [(1.0, False)]
+    h = hot_capacity(trace.n, win_slots, hot_dims)
+
     t_pad = float(times[-1]) if R else 0.0
     xs = {
         "items": np.full((nb, B, d), -1, np.int32),
@@ -166,6 +248,7 @@ def build_cgm_schedule(
         "times": np.full((nb, B), t_pad, np.float64),
         "cg": np.zeros(nb, bool),
         "now": np.zeros(nb, np.float64),
+        "nreq": np.zeros(nb, np.int32),
     }
     boundary_steps = []
     for b, (p, s, cg_now) in enumerate(slices):
@@ -174,6 +257,7 @@ def build_cgm_schedule(
         xs["servers"][b, :w] = servers[p:s]
         xs["times"][b, :w] = times[p:s]
         xs["times"][b, w:] = times[s - 1]
+        xs["nreq"][b] = w
         if cg_now is not None:
             xs["cg"][b] = True
             xs["now"][b] = cg_now
@@ -186,7 +270,51 @@ def build_cgm_schedule(
         boundary_steps=np.asarray(boundary_steps, np.int32),
         win_start=win_start, boundary_hit=boundary_hit,
         next_cg=None if R == 0 else float(next_cg),
+        h=h, wcap=wcap, win_rows=max_rows, win_slots=win_slots,
     )
+
+
+def pad_cgm_schedule(schedule: CGMSchedule, dims: dict) -> CGMSchedule:
+    """Pad a CGM schedule's xs + capacities up to shared ``dims``.
+
+    The device-CGM analogue of ``engine_jax.pad_schedule`` — cohort
+    alignment (sweep) and the live ratchet reuse ONE compiled scan
+    across schedules by padding to the running max dims ``{"nb", "B",
+    "d", "h", "W"}``.  Growing B also grows the per-step block write,
+    so ``wcap`` is re-derived to keep ``win_rows + B <= wcap``.
+    """
+    s = schedule
+    nb = max(dims.get("nb", s.nb), s.nb)
+    B = max(dims.get("B", s.B), s.B)
+    d = max(dims.get("d", s.d), s.d)
+    h = max(dims.get("h", s.h), s.h)
+    wcap = max(dims.get("W", s.wcap), s.wcap,
+               _bucket(s.win_rows + B, 64, 64))
+    if (nb, B, d) == (s.nb, s.B, s.d) and (h, wcap) == (s.h, s.wcap):
+        return s
+    xs0 = s.xs
+    if (nb, B, d) != (s.nb, s.B, s.d):
+        t_pad = float(xs0["times"][-1, -1]) if s.nb else 0.0
+        items = np.full((nb, B, d), -1, np.int32)
+        items[: s.nb, : s.B, : s.d] = xs0["items"]
+        servers = np.zeros((nb, B), np.int32)
+        servers[: s.nb, : s.B] = xs0["servers"]
+        times = np.full((nb, B), t_pad, np.float64)
+        times[: s.nb, : s.B] = xs0["times"]
+        # padded request slots reuse the step's last real time so the
+        # in-scan dedup keys stay inert
+        times[: s.nb, s.B:] = xs0["times"][:, -1:]
+        cg = np.zeros(nb, bool)
+        cg[: s.nb] = xs0["cg"]
+        now = np.zeros(nb, np.float64)
+        now[: s.nb] = xs0["now"]
+        nreq = np.zeros(nb, np.int32)
+        nreq[: s.nb] = xs0["nreq"]
+        xs = dict(items=items, servers=servers, times=times, cg=cg,
+                  now=now, nreq=nreq)
+    else:
+        xs = xs0
+    return dataclasses.replace(s, nb=nb, B=B, d=d, xs=xs, h=h, wcap=wcap)
 
 
 def cgm_spec(cfg, params, n: int) -> dict:
@@ -211,12 +339,15 @@ def cgm_spec(cfg, params, n: int) -> dict:
 # ---------------------------------------------------------------------------
 # device: window accumulation (Alg. 2 running state)
 # ---------------------------------------------------------------------------
-def _accumulate_window(carry, x, *, n, m, use_kernels):
-    """Fold one request batch into the open window's CGM counters.
+def _accumulate_window(carry, x, *, n, m):
+    """Fold one request batch into the open window's buffers.
 
-    * ``crm``  (n, n) f32 — co-occurrence counts via ``CRM += H^T H``
-      with H the 0/1 incidence (in-request duplicates dedup to 1, same
-      as the host's pair scatter); counts are exact integers in f32.
+    * ``wbuf`` (wcap, dbuf) i32 — the window's raw request rows; the
+      whole padded block lands at offset ``wlen`` and ``wlen`` advances
+      by the step's VALID row count only, so pad rows are overwritten
+      by the next step and anything at/after ``wlen`` is stale by
+      construction.  The CRM is built from this buffer ONCE per
+      boundary (no per-step (n, n) matmul).
     * ``wcnt`` (n+1,) i32 — per-item access counts WITH duplicates
       (the host hot-set bincount does not dedup within a request).
     * ``seed`` (n+1, m) i32 — (item, server) counts WITH duplicates
@@ -224,39 +355,135 @@ def _accumulate_window(carry, x, *, n, m, use_kernels):
     """
     items = x["items"]                              # (B, d) i32
     B, d = items.shape
+    dbuf = carry["wbuf"].shape[1]
+    if d < dbuf:
+        items_b = jnp.pad(items, ((0, 0), (0, dbuf - d)),
+                          constant_values=-1)
+    else:
+        items_b = items
+    wbuf = jax.lax.dynamic_update_slice(
+        carry["wbuf"], items_b, (carry["wlen"], jnp.int32(0)))
+    wlen = carry["wlen"] + x["nreq"]
     valid = items >= 0
     col = jnp.where(valid, items, n)                # invalid -> dump col n
-    row = jax.lax.broadcasted_iota(jnp.int32, (B, d), 0)
-    H = jnp.zeros((B, n + 1), jnp.float32).at[row, col].set(1.0)
-    Hv = H[:, :n]
-    if use_kernels:
-        from ..kernels.crm_update import crm_update
-        from ..kernels.ops import INTERPRET
-
-        upd = crm_update(Hv, interpret=INTERPRET)   # (n, n) f32, zero diag
-    else:
-        upd = Hv.T @ Hv     # f32 0/1 contraction: exact integer counts
-    crm = carry["crm"] + upd
     wcnt = carry["wcnt"].at[col.reshape(-1)].add(1)[: n + 1]
     seed = carry["seed"].at[col, x["servers"][:, None]].add(
         valid.astype(jnp.int32))
-    return dict(carry, crm=crm, wcnt=wcnt, seed=seed)
+    return dict(carry, wbuf=wbuf, wlen=wlen, wcnt=wcnt, seed=seed)
 
 
 # ---------------------------------------------------------------------------
-# device: Alg. 3/4 primitives on full-n masks
+# device: compact-space primitives
 # ---------------------------------------------------------------------------
-def _split_sides(W, member, u, v, n):
-    """``split_clique_on_edge`` on a member mask: True = right side (v's).
+def _compact_indices(mask, size):
+    """Ascending indices of True entries, padded with ``len(mask)``.
 
-    Bit-exact vs the host: the f64 side-weight accumulators are updated
-    in ascending item order (the host iterates submatrix columns, whose
-    order IS ascending member id), and the tie ``wl[p] >= wr[p]`` sends
-    p left exactly as the host does.
+    The cumsum/scatter form of ``jnp.nonzero(mask, size=size,
+    fill_value=len(mask))`` — nonzero's static-size lowering sorts the
+    whole mask (O(n log n) per call, ~260us at n=4096 on CPU), which
+    dominates when called inside the per-edge adjust loops; this stays
+    O(n).  Entries past ``size`` collapse onto the scatter dump slot.
     """
-    wl0 = W[:, u]
-    wr0 = W[:, v]
-    right0 = jnp.zeros(n, bool).at[v].set(True)
+    n = mask.shape[0]
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    idx = jnp.where(mask & (pos < size), pos, size)
+    return jnp.full(size + 1, n, jnp.int32).at[idx].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")[:size]
+
+
+def _capped_true_indices(mask, cap, bs=128):
+    """Flat indices of the first ``cap`` True entries (pads = len(mask)).
+
+    Gather-based two-level stream compaction: per-block popcounts pick
+    each target's block by vectorized binary search, then a (cap, bs)
+    row gather ranks within the block — O(n + cap*bs) elementwise work
+    with NO large scatter (XLA CPU scatter runs ~55ns/element, which
+    makes ``_compact_indices`` over an (h, h) mask cost ~80ms at
+    h~1200; this path is ~2ms).  Targets past the population count pad
+    with ``len(mask)``.
+    """
+    n = mask.shape[0]
+    nb = -(-n // bs)
+    pad = nb * bs - n
+    if pad:
+        mask = jnp.concatenate([mask, jnp.zeros(pad, bool)])
+    blk = mask.reshape(nb, bs).astype(jnp.int32)
+    coff = jnp.cumsum(blk.sum(axis=1))               # (nb,) inclusive
+    k = jnp.arange(1, cap + 1, dtype=jnp.int32)      # 1-based targets
+    b = jnp.searchsorted(coff, k, side="left").astype(jnp.int32)
+    bc = jnp.minimum(b, nb - 1)
+    t = k - jnp.where(bc > 0, coff[jnp.maximum(bc - 1, 0)], 0)
+    rcs = jnp.cumsum(blk[bc], axis=1)                # (cap, bs)
+    pos = (rcs < t[:, None]).sum(axis=1).astype(jnp.int32)
+    return jnp.where(b < nb, bc * bs + pos, n)
+
+
+def _true_indices(mask, size, cap):
+    """``_compact_indices(mask, size)`` with a fast common case.
+
+    ``cap`` is a static bound on the EXPECTED population count: within
+    it, the gather-based capped compaction fills the (size,) buffer; a
+    rare overflow falls back (``lax.cond``, so only the taken branch
+    runs) to the exact O(n)-scatter form.  Returns ``(indices, count)``.
+    """
+    n = mask.shape[0]
+    cnt = mask.sum().astype(jnp.int32)
+    if cap >= size:
+        return _compact_indices(mask, size), cnt
+    idx = jax.lax.cond(
+        cnt > cap,
+        lambda: _compact_indices(mask, size),
+        lambda: jnp.full(size, n, jnp.int32).at[:cap].set(
+            _capped_true_indices(mask, cap)))
+    return idx, cnt
+
+
+def _member_lists(of, n, gcap):
+    """(n+1, gcap) member lists of every group: ascending ids, pads = n.
+
+    One stable argsort + rank-in-run scatter builds ALL lists at once —
+    the per-edge adjust loops then gather a (gcap,) row in O(gcap)
+    instead of recomputing ``of == g`` compactions per edge (each of
+    which pays an O(n) scatter, ~250us at n=4096 on CPU).  Groups wider
+    than ``gcap`` cannot exist here (the ``_split_oversized`` invariant);
+    their overflow updates drop defensively.  Row ``n`` stays all-pads —
+    the dump row for predicated in-loop updates.
+    """
+    order = jnp.argsort(of).astype(jnp.int32)        # stable: ids ascend
+    og = of[order]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    newrun = jnp.concatenate([jnp.ones(1, bool), og[1:] != og[:-1]])
+    start = jax.lax.cummax(jnp.where(newrun, iota, 0))
+    return jnp.full((n + 1, gcap), n, jnp.int32).at[
+        og, iota - start].set(order, mode="drop")
+
+
+def _dense_rank(keys):
+    """Dense rank (0..k-1) of each entry by ascending key value."""
+    sk = jnp.sort(keys)
+    first = jnp.concatenate([jnp.ones(1, bool), sk[1:] != sk[:-1]])
+    rnk = (jnp.cumsum(first.astype(jnp.int32)) - 1).astype(jnp.int32)
+    pos = jnp.searchsorted(sk, keys)
+    return rnk[pos]
+
+
+def _split_sides_compact(W, member, u, v, cap):
+    """``split_clique_on_edge`` over a compact member mask: True = right.
+
+    ``W`` is a (cap, cap) weight matrix in the compact space (hot slots
+    or a member-list submatrix); ``u`` / ``v`` are compact indices and
+    may be -1 for an endpoint that is COLD in the current window (zero
+    weight column on the host's ``_CrmView``) — its side accumulator
+    starts at zero and, for ``v``, the caller re-seeds the right side
+    in global coordinates.  Bit-exact vs the host: the f64 side-weight
+    accumulators update in ascending compact order (ascending item id
+    in both spaces), the tie ``wl[p] >= wr[p]`` sends p left, and cold
+    members (zero column, zero accumulated weight) tie left with zero
+    contribution — the host's in-order no-op.
+    """
+    wl0 = jnp.where(u >= 0, W[:, jnp.maximum(u, 0)], 0.0)
+    wr0 = jnp.where(v >= 0, W[:, jnp.maximum(v, 0)], 0.0)
+    right0 = jnp.arange(cap, dtype=jnp.int32) == v
 
     def body(p, st):
         wl, wr, right = st
@@ -268,18 +495,27 @@ def _split_sides(W, member, u, v, n):
         wr = jnp.where(act & ~go_left, wr + colp, wr)
         return (wl, wr, right)
 
-    _, _, right = jax.lax.fori_loop(0, n, body, (wl0, wr0, right0))
+    _, _, right = jax.lax.fori_loop(0, cap, body, (wl0, wr0, right0))
     return right & member
 
 
-def _window_crm_device(carry, cspec, *, n):
-    """Alg. 2 at a boundary: hot set -> normalise -> binarise.
+def _window_crm_device(carry, cspec, *, n, h, wcap, use_kernels):
+    """Alg. 2 at a boundary: hot set -> compact CRM -> binarise.
 
-    Returns (hot (n,) bool, raw (n, n) f32 masked counts, norm (n, n)
-    f32, binary (n, n) bool) — all in GLOBAL item coordinates; the
-    host's compact hot space is an order-preserving re-index, so every
-    comparison below sees the same values in the same scan order.
+    Returns ``(hot_idx, valid_h, lut, raw, norm, binary)`` — the
+    ascending hot->catalog index map (pads = n), its validity mask, the
+    catalog->hot lut (cold/pad -> -1) and the (h, h) raw/norm/binary
+    CRM.  Ascending ``hot_idx`` IS the host's compact hot-space order,
+    so every comparison downstream sees the same values in the same
+    scan order.  Raw counts are exact f32 integers: each pair count is
+    bounded by the window row count ≤ wcap, guarded below.
     """
+    if wcap >= _F32_EXACT:
+        raise ValueError(
+            f"device CGM window capacity wcap={wcap} reaches the f32 "
+            f"exact-integer bound 2**24; co-occurrence counts could "
+            "silently lose exactness — route this trace to the host CGM "
+            "(or lower the clique-generation period t_cg)")
     counts = carry["wcnt"][:n]                       # (n,) i32
     support = (counts > 0).sum()
     base = jnp.where(cspec["of_catalog"], n, support).astype(jnp.float64)
@@ -291,73 +527,169 @@ def _window_crm_device(carry, cspec, *, n):
     rank = jnp.zeros(n, jnp.int32).at[order].set(
         jnp.arange(n, dtype=jnp.int32))
     hot = (rank < n_hot) & (counts > 0)
-    hm2 = hot[:, None] & hot[None, :]
-    eye = jnp.eye(n, dtype=bool)
-    raw = jnp.where(hm2 & ~eye, carry["crm"], 0.0)   # f32 exact ints
+    # ascending hot ids = the host hot_items order (sorted); capacity h
+    # dominates every real window by construction (hot_capacity)
+    hot_idx = _compact_indices(hot, h)
+    valid_h = hot_idx < n
+    lut = jnp.full(n + 1, -1, jnp.int32).at[hot_idx].set(
+        jnp.arange(h, dtype=jnp.int32)).at[n].set(-1)
+
+    # compact CRM from the buffered window: one rank-wcap update
+    wbuf = carry["wbuf"]                             # (wcap, dbuf) i32
+    dbuf = wbuf.shape[1]
+    rowi = jax.lax.broadcasted_iota(jnp.int32, (wcap, dbuf), 0)
+    live = (rowi < carry["wlen"]) & (wbuf >= 0)
+    hs = lut[jnp.where(live, wbuf, n)]               # hot slot or -1
+    hcol = jnp.where(hs >= 0, hs, h)                 # cold/stale -> dump col
+    if use_kernels:
+        from ..kernels.crm_update import crm_update_auto
+
+        H = jnp.zeros((wcap, h + 1), jnp.float32).at[rowi, hcol].set(1.0)
+        raw = crm_update_auto(H[:, :h])              # (h, h) f32, zero diag
+    elif h * h <= 1600 * dbuf * dbuf:
+        # small hot space: the dense H^T H contraction beats per-pair
+        # scatter updates (XLA CPU scatter runs ~55ns/element serial,
+        # SIMD matmul ~0.03ns/flop — crossover near h ~ 40 dbuf).  The
+        # equality broadcast dedups in-row repeats for free, and 0/1
+        # dots over <= wcap rows stay exact f32 integers.
+        Hf = (hcol[:, :, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, h), 2)).any(axis=1).astype(jnp.float32)
+        raw = Hf.T @ Hf
+        raw = raw * (1.0 - jnp.eye(h, dtype=jnp.float32))
+    else:
+        # pair-scatter form of the H^T H contraction: each request row
+        # holds <= dbuf items, so scattering its dbuf^2 hot pairs costs
+        # O(wcap d^2) instead of the O(wcap h^2) matmul — the big-h
+        # CPU/GPU fallback; the Mosaic kernel above keeps the
+        # MXU-shaped matmul.  In-row duplicates collapse to the dump
+        # column first (the H one-hot .set dedup), so counts stay the
+        # exact 0/1 contraction.
+        sc = jnp.sort(hcol, axis=1)
+        dup = jnp.concatenate(
+            [jnp.zeros((wcap, 1), bool), sc[:, 1:] == sc[:, :-1]], axis=1)
+        sc = jnp.where(dup | (sc >= h), h, sc)
+        raw = jnp.zeros((h + 1, h + 1), jnp.float32).at[
+            sc[:, :, None], sc[:, None, :]].add(1.0)[:h, :h]
+        raw = raw * (1.0 - jnp.eye(h, dtype=jnp.float32))
     hi = raw.max().astype(jnp.float64)
     # host minmax_normalise: lo is always 0 (zero diagonal), hi<=0 -> 0;
     # int64/int64 true-divide (f64) then cast f32 == f32->f64 exact here
     norm = jnp.where(
         hi > 0.0,
         (raw.astype(jnp.float64) / hi).astype(jnp.float32),
-        jnp.zeros((n, n), jnp.float32),
+        jnp.zeros((h, h), jnp.float32),
     )
-    binary = (norm > cspec["theta"]) & hm2 & ~eye
-    return hot, raw, norm, binary
+    hm2 = valid_h[:, None] & valid_h[None, :]
+    binary = (norm > cspec["theta"]) & hm2 & ~jnp.eye(h, dtype=bool)
+    return hot_idx, valid_h, lut, raw, norm, binary
 
 
-def _adjust_partition(of, gsize, binary, W, add_u, add_v, n_add,
-                      rem_u, rem_v, n_rem, cspec, *, n):
+# ---------------------------------------------------------------------------
+# device: Alg. 4 adjust + Alg. 3 split/merge in the compact hot space
+# ---------------------------------------------------------------------------
+def _adjust_partition(of, gsize, binary, W, hot_idx, valid_h, lut,
+                      addM, remM, rem_map, cspec, *, n, h, gcap):
     """Alg. 4 (``adjust_previous_cliques``) over slot buffers.
 
     Slot numbering mirrors the host list exactly: removed-edge splits
     keep the left side in the parent slot and append the right side at
     ``ngroups`` (the host's ``groups.append``); added-edge merges keep
-    ``min(cu, cv)`` and kill ``max`` (the host's keep/drop).  The final
-    compaction ranks alive slots ascending — the host's ``[g for g in
-    groups if g]`` order.
+    ``min(cu, cv)`` and kill ``max`` (the host's keep/drop).  Both loop
+    bodies stay O(n + h) per edge: splits run on the group's
+    fixed-capacity MEMBER LIST (``gcap`` bounds any group size here —
+    the ``_split_oversized`` invariant), and the merge probe reads a
+    clique-pair edge-count matrix built once after the removals and
+    folded row/col per accepted merge instead of re-reducing the (h, h)
+    CRM per edge.  Cold members have zero weight columns and tie left
+    (the host no-op); edge endpoints always sit in the member list, so
+    the right side seeds from ``v`` even when ``v`` went cold.  The
+    final compaction ranks alive slots ascending — the host's ``[g for
+    g in groups if g]`` order.
     """
     ngroups = (gsize > 0).sum().astype(jnp.int32)
+    ml = _member_lists(of, n, gcap)
+    pads_g = jnp.full(gcap, n, jnp.int32)
+    ecap = max(1, h * (h - 1) // 2)
+    dcap = min(ecap, _bucket(2 * h, 256, 256))
+
+    # EXACT no-op prefilter: during the rem phase groups only SPLIT, so
+    # an edge whose endpoints sit in different groups now can never be
+    # same-group when its turn comes — drop it before the sequential
+    # loop.  The host walks those edges too, as no-ops; the survivor
+    # subset keeps its lexicographic order, so state updates agree
+    # edge for edge.  Flat row-major compaction == nonzero's edge
+    # order; pathological diff churn falls back to the exact scatter
+    # compaction inside _true_indices.
+    og_p = of[jnp.clip(rem_map, 0, n - 1)]           # group per prev slot
+    remM = remM & (og_p[:, None] == og_p[None, :])
+    rem_f, n_rem = _true_indices(remM.reshape(-1), ecap, dcap)
 
     def rem_body(i, st):
-        of, gsize, ngroups = st
-        u = rem_u[i]
-        v = rem_v[i]
+        of, gsize, ngroups, ml = st
+        fi = rem_f[i]                                # flat (h, h) prev-edge
+        u = rem_map[fi // h]
+        v = rem_map[fi % h]
         cu = of[u]
         do = (cu == of[v]) & (gsize[cu] > 1)
-        member = (of == cu) & do
-        right = _split_sides(W, member, u, v, n)
-        nr = right.sum().astype(jnp.int32)
-        of = jnp.where(right, ngroups, of)
+        mem = ml[cu]                                 # (gcap,) ascending ids
+        gvalid = mem < n
+        gh = lut[mem]                                # hot slot or -1
+        ghc = jnp.maximum(gh, 0)
+        okw = (gh >= 0)[:, None] & (gh >= 0)[None, :]
+        Wsub = jnp.where(okw, W[ghc][:, ghc], 0.0)
+        pu = jnp.argmax(mem == u).astype(jnp.int32)
+        pv = jnp.argmax(mem == v).astype(jnp.int32)
+        right_g = _split_sides_compact(Wsub, gvalid, pu, pv, gcap) & do
+        nr = right_g.sum().astype(jnp.int32)
+        of = of.at[jnp.where(right_g, mem, n)].set(ngroups, mode="drop")
         g2 = gsize.at[cu].add(-nr).at[ngroups].set(nr)
         gsize = jnp.where(do, g2, gsize)
+        lit = jnp.sort(jnp.where(gvalid & ~right_g, mem, n))
+        rit = jnp.sort(jnp.where(right_g, mem, n))
+        ml = ml.at[jnp.where(do, cu, n)].set(lit)
+        ml = ml.at[jnp.where(do, ngroups, n)].set(rit)
         ngroups = ngroups + do.astype(jnp.int32)
-        return (of, gsize, ngroups)
+        return (of, gsize, ngroups, ml)
 
-    of, gsize, ngroups = jax.lax.fori_loop(
-        0, n_rem, rem_body, (of, gsize, ngroups))
+    of, gsize, ngroups, ml = jax.lax.fori_loop(
+        0, n_rem, rem_body, (of, gsize, ngroups, ml))
+
+    # mirror prefilter for adds: the add phase only MERGES, so an edge
+    # whose endpoints already share a group AFTER the rem phase stays
+    # same-group forever — a guaranteed no-op on the host walk too
+    og_c = of[jnp.clip(hot_idx, 0, n - 1)]           # group per cur slot
+    addM = addM & (og_c[:, None] != og_c[None, :])
+    add_f, n_add = _true_indices(addM.reshape(-1), ecap, dcap)
 
     def add_body(i, st):
-        of, gsize = st
-        u = add_u[i]
-        v = add_v[i]
+        of, gsize, ml = st
+        fi = add_f[i]                                # flat (h, h) cur-edge
+        u = hot_idx[fi // h]
+        v = hot_idx[fi % h]
         cu = of[u]
         cv = of[v]
         g = gsize[cu] + gsize[cv]
-        um = (of == cu) | (of == cv)
-        # fully_connected: the union's in-edge count must be C(g, 2);
-        # cold members contribute no edges, so this also rejects unions
-        # with cold items — exactly the host probe semantics
-        ne = (binary & um[:, None] & um[None, :]).sum() // 2
+        # fully_connected: the union's in-edge count must be C(g, 2),
+        # probed over the union's MEMBER LISTS (<= 2 gcap slots) in the
+        # (h, h) hot space; cold members contribute no edges (lut -> -1
+        # rows mask out), so this also rejects unions with cold items —
+        # exactly the host probe semantics
+        mem = jnp.concatenate([ml[cu], ml[cv]])      # (2 gcap,)
+        mh = lut[mem]                                # hot slot or -1
+        mhc = jnp.maximum(mh, 0)
+        okm = (mh >= 0)[:, None] & (mh >= 0)[None, :]
+        ne = (binary[mhc][:, mhc] & okm).sum() // 2
         do = (cu != cv) & (g <= cspec["omega"]) & (ne == g * (g - 1) // 2)
         keep = jnp.minimum(cu, cv)
         drop = jnp.maximum(cu, cv)
-        of = jnp.where(do & um, keep, of)
+        of = of.at[jnp.where(do, mem, n)].set(keep, mode="drop")
         g2 = gsize.at[keep].set(g).at[drop].set(0)
         gsize = jnp.where(do, g2, gsize)
-        return (of, gsize)
+        ml = ml.at[jnp.where(do, keep, n)].set(jnp.sort(mem)[:gcap])
+        ml = ml.at[jnp.where(do, drop, n)].set(pads_g)
+        return (of, gsize, ml)
 
-    of, gsize = jax.lax.fori_loop(0, n_add, add_body, (of, gsize))
+    of, gsize, _ = jax.lax.fori_loop(0, n_add, add_body, (of, gsize, ml))
 
     alive = gsize > 0
     newid = (jnp.cumsum(alive.astype(jnp.int32)) - 1).astype(jnp.int32)
@@ -367,113 +699,170 @@ def _adjust_partition(of, gsize, binary, W, add_u, add_v, n_add,
     return of, gsize
 
 
-def _split_oversized(of, gsize, W, cspec, *, n):
+def _split_oversized(of, gsize, W, lut, cspec, *, n, h, gcap):
     """Alg. 3 splits (``split_oversized``) as a bounded LIFO worklist.
 
-    Every slot runs the worklist (non-oversized slots emit themselves on
-    the first pop, reproducing the host's pass-through).  Pieces keep
-    the host's IN-PLACE order via the key ``slot * (n+1) + emit_idx``;
-    the closed-form hot_count<=1 peel is subsumed by the generic
-    weakest-edge split: with an all-zero weight submatrix the first-min
-    edge is (g[0], g[1]) and every tie goes left, which peels exactly
-    the host's ``(g[0],) + g[p+1:]`` then ``g[p] .. g[1]`` singletons.
+    Only oversized slots run the worklist; every other slot keeps its
+    pass-through key.  The worklist carries fixed-capacity MEMBER LISTS
+    (ascending item ids, pads = n) of width ``gcap`` — an invariant
+    bound on any group size at this point (≤ max(initial partition,
+    omega) by induction: adjust merges are omega-capped and splits only
+    shrink).  Pieces keep the host's IN-PLACE order via the key
+    ``slot * (gcap+1) + emit_idx``; the closed-form hot_count<=1 peel
+    is subsumed by the generic weakest-edge split: with an all-zero
+    weight submatrix the first-min edge is (g[0], g[1]) and every tie
+    goes left, which peels exactly the host's ``(g[0],) + g[p+1:]``
+    then ``g[p] .. g[1]`` singletons.
     """
-    triu = jnp.triu(jnp.ones((n, n), bool), k=1)
-    of_key0 = jnp.zeros(n, jnp.int32)
+    KW = gcap + 1
+    triu_g = jnp.triu(jnp.ones((gcap, gcap), bool), k=1)
+    over = gsize > cspec["omega"]
+    os_idx = _compact_indices(over, n)
+    n_os = over.sum()
+    ml = _member_lists(of, n, gcap)
+    of_key0 = jnp.concatenate(
+        [of * KW, jnp.zeros(1, jnp.int32)])          # (n+1,): pass-through
 
-    def slot_body(s, of_key):
-        stack0 = jnp.zeros((n + 1, n), bool).at[0].set(of == s)
-        sp0 = (gsize[s] > 0).astype(jnp.int32)
+    def slot_body(i, of_key):
+        s = os_idx[i]
+        mem0 = ml[s]
+        stack0 = jnp.full((gcap + 1, gcap), n, jnp.int32).at[0].set(mem0)
 
         def cond(st):
             return st[0] > 0
 
         def wbody(st):
             sp, stack, ofk, emit = st
-            g = stack[sp - 1]
+            g = stack[sp - 1]                        # (gcap,) ascending ids
             sp = sp - 1
-            small = g.sum() <= cspec["omega"]
-            ofk = jnp.where(small & g, s * (n + 1) + emit, ofk)
+            gvalid = g < n
+            small = gvalid.sum() <= cspec["omega"]
+            tgt = jnp.where(gvalid & small, g, n)
+            ofk = ofk.at[tgt].set(s * KW + emit)
             emit = emit + small.astype(jnp.int32)
             # weakest edge: first row-major minimum over member pairs —
-            # the same scan order as the host's submatrix argmin (member
-            # ids ascend in both index spaces)
-            gm2 = g[:, None] & g[None, :] & triu
-            P = jnp.where(gm2, W, jnp.inf)
+            # the member list ascends in item id, so this is the host's
+            # submatrix argmin scan order; cold members weigh 0
+            gh = lut[g]                              # hot slot or -1
+            ghc = jnp.maximum(gh, 0)
+            okw = (gh >= 0)[:, None] & (gh >= 0)[None, :]
+            Wsub = jnp.where(okw, W[ghc][:, ghc], 0.0)
+            pairm = gvalid[:, None] & gvalid[None, :] & triu_g
+            P = jnp.where(pairm, Wsub, jnp.inf)
             f = jnp.argmin(P.reshape(-1)).astype(jnp.int32)
-            u = f // n
-            v = f % n
-            right = _split_sides(W, g, u, v, n)
-            left = g & ~right
-            stack = stack.at[sp].set(jnp.where(small, stack[sp], right))
+            u = f // gcap
+            v = f % gcap
+            right = _split_sides_compact(Wsub, gvalid, u, v, gcap)
+            rit = jnp.sort(jnp.where(right, g, n))
+            lit = jnp.sort(jnp.where(gvalid & ~right, g, n))
+            stack = stack.at[sp].set(jnp.where(small, stack[sp], rit))
             stack = stack.at[sp + 1].set(
-                jnp.where(small, stack[sp + 1], left))
+                jnp.where(small, stack[sp + 1], lit))
             sp = sp + jnp.where(small, 0, 2)
             return (sp, stack, ofk, emit)
 
         _, _, of_key, _ = jax.lax.while_loop(
-            cond, wbody, (sp0, stack0, of_key, jnp.int32(0)))
+            cond, wbody, (jnp.int32(1), stack0, of_key, jnp.int32(0)))
         return of_key
 
-    of_key = jax.lax.fori_loop(0, n, slot_body, of_key0)
+    of_key = jax.lax.fori_loop(0, n_os, slot_body, of_key0)
     # dense-rank the (slot, emit) keys -> pieces in host list order
-    sk = jnp.sort(of_key)
-    firstk = jnp.concatenate(
-        [jnp.ones(1, bool), sk[1:] != sk[:-1]])
-    rnk = (jnp.cumsum(firstk.astype(jnp.int32)) - 1).astype(jnp.int32)
-    pos = jnp.searchsorted(sk, of_key)
-    return rnk[pos]
+    return _dense_rank(of_key[:n])
 
 
-def _approx_merge(of, binary, hot, W, cspec, *, n, use_kernels):
+def _approx_merge(of, binary, hot_idx, valid_h, cspec, *, n, h,
+                  use_kernels, full_merge):
     """Alg. 3 approximate merge (``approximate_merge``) as a while_loop.
 
-    Slots 0..k-1 hold the adjusted/split groups (host list order);
-    merged groups take tail slots k, k+1, ... — ascending slot order
-    stays the host's compact act-matrix order at every iteration, so
-    the row-major first-argmax over D breaks ties identically.  D uses
-    the sentinel -2.0 for dead / non-act / diagonal entries (the host
-    simply has no such rows; any value < 0 is equivalent under the
-    ``max < 0 -> stop`` rule).  X is patched incrementally: one
-    row/col per merge (the PR-3 algebra), with the f32 add order of the
-    host (``(X[ai,ai] + X[aj,aj]) + 2.0 * X[ai,aj]``).
+    The merge works in an ACT-COMPACTED slot space of capacity ``scap``:
+    act groups (the host's candidate set with a live hot member) take
+    slots 0..n_act-1 in input order, merged groups take tail slots —
+    ascending slot order stays the host's compact act-matrix order at
+    every iteration, so the row-major first-argmax over D breaks ties
+    identically.  Under the pruning regime (omega > 2 and gamma above
+    the density bar) at most h groups can be act, so ``scap = 2h``;
+    lanes that can fall outside it (the w/o-CS ablation) compile with
+    ``full_merge`` -> ``scap = 2n``.  D uses the sentinel -2.0 for
+    dead / non-act / diagonal entries; X is patched incrementally, one
+    row/col per merge (the PR-3 algebra), with the f32 add order of
+    the host (``(X[ai,ai] + X[aj,aj]) + 2.0 * X[ai,aj]``).
     """
-    S = 2 * n
-    slot = jnp.arange(S, dtype=jnp.int32)
-    sizes = jnp.zeros(S, jnp.int32).at[of].add(1)
-    alive = sizes > 0
+    if h * (h - 1) // 2 >= _F32_EXACT:
+        raise ValueError(
+            f"device CGM hot capacity h={h} puts the pairwise edge "
+            f"count h*(h-1)/2 at/above 2**24; the f32 X counters would "
+            "lose exactness — route this trace to the host CGM")
+    scap = 2 * n if full_merge else 2 * h
+    slot = jnp.arange(scap, dtype=jnp.int32)
+    hot_c = jnp.clip(hot_idx, 0, n - 1)
+    hot_of = of[hot_c]                               # (h,) group per hot slot
+    sizes_n = jnp.zeros(n + 1, jnp.int32).at[of].add(1)[:n]
+    alive_n = sizes_n > 0
     # host _mergeable_split: the hot filter only engages above the
     # density bar (omega > 2 and gamma > (omega-2)/omega)
     prune = (cspec["omega"] > 2) & (
         cspec["gamma"] > (cspec["omega_f"] - 2.0) / cspec["omega_f"])
-    hot_i = hot.astype(jnp.int32)
-    has_hot = jax.ops.segment_max(hot_i, of, num_segments=S) > 0
-    live_item = hot & binary.any(axis=1)
-    has_live = jax.ops.segment_max(
-        live_item.astype(jnp.int32), of, num_segments=S) > 0
-    is_rest = alive & prune & ~has_hot
-    act = alive & jnp.where(prune, has_live, True) & ~is_rest
+    has_hot = (jnp.zeros(n + 1, jnp.int32).at[
+        jnp.where(valid_h, hot_of, n)].add(1)[:n]) > 0
+    live_h = valid_h & binary.any(axis=1)
+    has_live = (jnp.zeros(n + 1, jnp.int32).at[
+        jnp.where(live_h, hot_of, n)].add(1)[:n]) > 0
+    is_rest = alive_n & prune & ~has_hot
+    act_n = alive_n & jnp.where(prune, has_live, True) & ~is_rest
 
-    # X = M A M^T over hot membership (f32 exact integer counts)
-    M = jnp.zeros((S, n), jnp.float32).at[
-        of, jnp.arange(n, dtype=jnp.int32)].set(hot.astype(jnp.float32))
+    # act groups -> merge slots 0..n_act-1 (input order preserved)
+    msl_n = (jnp.cumsum(act_n.astype(jnp.int32)) - 1).astype(jnp.int32)
+    n_act0 = act_n.sum().astype(jnp.int32)
+    slot_of_m = _compact_indices(act_n, scap)
+    # non-act groups park at scap+slot: inert to the loop, recovered in
+    # the final ranking
+    of2 = jnp.where(act_n[of], msl_n[of], scap + of)
+    sizes_pad = jnp.concatenate([sizes_n, jnp.zeros(1, jnp.int32)])
+    sizes = sizes_pad[jnp.clip(slot_of_m, 0, n)]     # (scap,) pads -> 0
+    alive = slot < n_act0
+    act = alive
+
+    # X = M A M^T over hot membership (f32 exact integer counts);
+    # M maps merge slots x hot slots (cold members carry no edges)
+    hs = jnp.where(valid_h & act_n[hot_of], msl_n[hot_of], scap)
     A = binary.astype(jnp.float32)
     if use_kernels:
-        from ..kernels.clique_density import clique_pair_edges
-        from ..kernels.ops import INTERPRET
+        from ..kernels.clique_density import clique_pair_edges_auto
 
-        X = clique_pair_edges(M, A, interpret=INTERPRET)
+        M = jnp.zeros((scap + 1, h), jnp.float32).at[
+            hs, jnp.arange(h, dtype=jnp.int32)].set(1.0)[:scap]
+        X = clique_pair_edges_auto(M, A)
     else:
-        X = M @ A @ M.T
+        # edge-scatter form of M A M^T: only binary's TRUE entries
+        # scatter (O(h) edges in practice vs h^2 pair updates — XLA CPU
+        # scatter is per-element serial, so the full-pair form costs
+        # ~80ms at h~1200); dense windows take the exact full-pair
+        # fallback.  Identical exact-integer f32 counts either way
+        # (every true (k, l) lands on (hs[k], hs[l]); zeros add zero).
+        eb_cap = min(h * h, _bucket(4 * h, 1024, 1024))
+        ne2 = binary.sum().astype(jnp.int32)
+
+        def x_sparse():
+            ef = _capped_true_indices(binary.reshape(-1), eb_cap)
+            ok = ef < h * h
+            efc = jnp.minimum(ef, h * h - 1)
+            sa = jnp.where(ok, hs[efc // h], scap)
+            sb = jnp.where(ok, hs[efc % h], scap)
+            return jnp.zeros((scap + 1, scap + 1), jnp.float32).at[
+                sa, sb].add(jnp.where(ok, 1.0, 0.0))
+
+        def x_dense():
+            return jnp.zeros((scap + 1, scap + 1), jnp.float32).at[
+                hs[:, None], hs[None, :]].add(A)
+
+        X = jax.lax.cond(ne2 > eb_cap, x_dense, x_sparse)[:scap, :scap]
     e_max = (cspec["omega_f"] * (cspec["omega_f"] - 1.0) / 2.0).astype(
         jnp.float32)
-    eyeS = jnp.eye(S, dtype=bool)
+    eyeS = jnp.eye(scap, dtype=bool)
     if use_kernels:
-        from ..kernels.merge_step import merge_density
-        from ..kernels.ops import INTERPRET
+        from ..kernels.merge_step import merge_density_auto
 
-        D = merge_density(
-            X, sizes, cspec["omega"], cspec["gamma32"], interpret=INTERPRET)
+        D = merge_density_auto(X, sizes, cspec["omega"], cspec["gamma32"])
     else:
         within = jnp.diag(X) / 2.0
         e_u = (within[:, None] + within[None, :]) + X
@@ -483,8 +872,7 @@ def _approx_merge(of, binary, hot, W, cspec, *, n, use_kernels):
     actp = act[:, None] & act[None, :] & ~eyeS
     D = jnp.where(actp, D, -2.0)
 
-    tail0 = alive.sum().astype(jnp.int32)
-    n_act0 = act.sum().astype(jnp.int32)
+    tail0 = n_act0
 
     def cond(st):
         D = st[1]
@@ -492,14 +880,14 @@ def _approx_merge(of, binary, hot, W, cspec, *, n, use_kernels):
         return (n_act >= 2) & (D.max() >= 0.0)
 
     def body(st):
-        X, D, of, sizes, act, alive, tail, n_act = st
+        X, D, of2, sizes, act, alive, tail, n_act = st
         f = jnp.argmax(D.reshape(-1)).astype(jnp.int32)
-        ai = f // S
-        aj = f % S
+        ai = f // scap
+        aj = f % scap
         ai, aj = jnp.minimum(ai, aj), jnp.maximum(ai, aj)
         t = tail
-        mm = (of == ai) | (of == aj)
-        of = jnp.where(mm, t, of)
+        mm = (of2 == ai) | (of2 == aj)
+        of2 = jnp.where(mm, t, of2)
         row = X[ai, :] + X[aj, :]
         dg = (X[ai, ai] + X[aj, aj]) + 2.0 * X[ai, aj]
         X = X.at[t, :].set(row).at[:, t].set(row).at[t, t].set(dg)
@@ -520,20 +908,25 @@ def _approx_merge(of, binary, hot, W, cspec, *, n, use_kernels):
         D = D.at[ai, :].set(-2.0).at[:, ai].set(-2.0)
         D = D.at[aj, :].set(-2.0).at[:, aj].set(-2.0)
         D = D.at[t, :].set(dr).at[:, t].set(dr).at[t, t].set(-2.0)
-        return (X, D, of, sizes, act, alive, t + 1, n_act - 1)
+        return (X, D, of2, sizes, act, alive, t + 1, n_act - 1)
 
-    _, _, of, _, _, alive, _, _ = jax.lax.while_loop(
-        cond, body, (X, D, of, sizes, act, alive, tail0, n_act0))
+    _, _, of2, _, _, alive, _, _ = jax.lax.while_loop(
+        cond, body, (X, D, of2, sizes, act, alive, tail0, n_act0))
 
-    # host output order: cand (act-universe, originals then merged) first,
-    # rest groups after, both in slot order
-    is_rest_s = is_rest                              # tail slots: never rest
-    okey = jnp.where(
-        alive, slot + jnp.where(is_rest_s, S, 0), 2 * S)
-    order = jnp.argsort(okey)
-    rnk = jnp.zeros(S, jnp.int32).at[order].set(
-        jnp.arange(S, dtype=jnp.int32))
-    return rnk[of]
+    # host output order: cand-universe groups first (act survivors and
+    # untouched non-act cand in INPUT position, merged appended in
+    # creation order), rest groups after, both ascending.  Keys over the
+    # extended id space [0, scap+n): original merge slot -> its n-slot,
+    # merged tail slot ms -> n+ms, parked non-act -> n-slot (cand) or
+    # n+scap+slot (rest); distinct groups never collide.
+    ms = jnp.arange(scap, dtype=jnp.int32)
+    key_m = jnp.where(
+        ms < n_act0, slot_of_m, (n + ms).astype(jnp.int32))
+    key_p = jnp.where(
+        is_rest, (n + scap) + jnp.arange(n, dtype=jnp.int32),
+        jnp.arange(n, dtype=jnp.int32))
+    keys = jnp.concatenate([key_m, key_p])           # (scap + n,)
+    return _dense_rank(keys[of2])
 
 
 def _install_partition_device(carry, of_new, now, dt, *, n, seed_new):
@@ -579,50 +972,60 @@ def _install_partition_device(carry, of_new, now, dt, *, n, seed_new):
     return E_new, a_new, cnt_new
 
 
-def _cgm_boundary(carry, now, cspec, dt, item_sizes, *, n, m, uses_sizes,
-                  enable_split, enable_acm, seed_new, use_kernels):
+def _cgm_boundary(carry, now, cspec, dt, item_sizes, *, n, m, h, wcap,
+                  uses_sizes, enable_split, enable_acm, seed_new,
+                  use_kernels, gcap, full_merge):
     """One T_CG boundary, fully on device: Alg. 2 -> 4 -> 3 -> install.
 
     Mirrors ``AKPCPolicy.on_window`` + ``generate_cliques`` + the
     engine's ``install_partition``, then resets the window counters and
-    rolls the binary CRM into the prev-CRM carry slots.
+    rolls the compact binary CRM + hot index map into the prev-CRM
+    carry slots.  All boundary tensors are (h, h) / (scap, scap) —
+    nothing n^2 is ever materialised.
     """
-    hot, raw, norm, binary = _window_crm_device(carry, cspec, n=n)
+    hot_idx, valid_h, lut, raw, norm, binary = _window_crm_device(
+        carry, cspec, n=n, h=h, wcap=wcap, use_kernels=use_kernels)
     W = norm.astype(jnp.float64)
 
-    # -- Alg. 4 edge diff vs the previous window (u < v, row-major =
-    # the lexicographic order the host oracle iterates its edges in)
+    # -- Alg. 4 edge diff vs the previous window, per compact space:
+    # removed edges live in the PREV hot space, added edges in the
+    # CURRENT one; both index maps ascend in item id, so row-major
+    # nonzero order IS the host's lexicographic global edge order
+    p_idx = carry["p_idx"]                           # (h,) prev hot -> item
     pbin = carry["pbin"]
-    triu = jnp.triu(jnp.ones((n, n), bool), k=1)
-    remM = pbin & ~binary & triu
-    addM = binary & ~pbin & triu
-    ecap = max(1, n * (n - 1) // 2)
-    rem_u, rem_v = jnp.nonzero(remM, size=ecap, fill_value=0)
-    add_u, add_v = jnp.nonzero(addM, size=ecap, fill_value=0)
-    n_rem = remM.sum()
-    n_add = addM.sum()
-
+    lut_prev = jnp.full(n + 1, -1, jnp.int32).at[p_idx].set(
+        jnp.arange(h, dtype=jnp.int32)).at[n].set(-1)
+    ci = lut_prev[hot_idx]                           # cur slot -> prev slot
+    pc = lut[p_idx]                                  # prev slot -> cur slot
+    pcv = pc >= 0
+    pcc = jnp.maximum(pc, 0)
+    cur_in_prev = binary[pcc][:, pcc] & pcv[:, None] & pcv[None, :]
+    civ = ci >= 0
+    cic = jnp.maximum(ci, 0)
+    prev_in_cur = pbin[cic][:, cic] & civ[:, None] & civ[None, :]
+    triu_h = jnp.triu(jnp.ones((h, h), bool), k=1)
+    remM = pbin & ~cur_in_prev & triu_h
+    addM = binary & ~prev_in_cur & triu_h
     of = carry["of"]
     gsize = carry["cnt"][:n].astype(jnp.int32)
     of, gsize = _adjust_partition(
-        of, gsize, binary, W,
-        add_u.astype(jnp.int32), add_v.astype(jnp.int32), n_add,
-        rem_u.astype(jnp.int32), rem_v.astype(jnp.int32), n_rem,
-        cspec, n=n)
+        of, gsize, binary, W, hot_idx, valid_h, lut,
+        addM, remM, p_idx, cspec, n=n, h=h, gcap=gcap)
     if enable_split:
-        of = _split_oversized(of, gsize, W, cspec, n=n)
+        of = _split_oversized(of, gsize, W, lut, cspec, n=n, h=h, gcap=gcap)
     if enable_acm:
         of = _approx_merge(
-            of, binary, hot, W, cspec, n=n, use_kernels=use_kernels)
+            of, binary, hot_idx, valid_h, cspec, n=n, h=h,
+            use_kernels=use_kernels, full_merge=full_merge)
 
     E_new, a_new, cnt_new = _install_partition_device(
         carry, of, now, dt, n=n, seed_new=seed_new)
     out = dict(
         carry, E=E_new, anchor=a_new, of=of, cnt=cnt_new,
-        crm=jnp.zeros((n, n), jnp.float32),
+        wlen=jnp.zeros((), jnp.int32),
         wcnt=jnp.zeros(n + 1, jnp.int32),
         seed=jnp.zeros((n + 1, m), jnp.int32),
-        pbin=binary, praw=raw, pnorm=norm, phot=hot,
+        p_idx=hot_idx, pbin=binary, praw=raw, pnorm=norm,
     )
     if uses_sizes:
         out["vol"] = jnp.zeros(n + 1, jnp.float64).at[of].add(item_sizes)
@@ -775,11 +1178,13 @@ SCAN_TRACES = 0
 
 def _cgm_replay_impl(spec, cspec, init, xs, item_sizes, *, kind, charge,
                      uses_sizes, enable_split, enable_acm, seed_new,
-                     use_kernels):
+                     use_kernels, gcap, full_merge):
     global SCAN_TRACES
     SCAN_TRACES += 1
     n = init["of"].shape[0]
     m = init["E"].shape[1]
+    h = init["p_idx"].shape[0]
+    wcap = init["wbuf"].shape[0]
     dt = spec["dt"]
 
     def step(carry, x):
@@ -790,14 +1195,14 @@ def _cgm_replay_impl(spec, cspec, init, xs, item_sizes, *, kind, charge,
         carry = jax.lax.cond(
             x["cg"],
             lambda c: _cgm_boundary(
-                c, x["now"], cspec, dt, item_sizes, n=n, m=m,
-                uses_sizes=uses_sizes, enable_split=enable_split,
-                enable_acm=enable_acm, seed_new=seed_new,
-                use_kernels=use_kernels),
+                c, x["now"], cspec, dt, item_sizes, n=n, m=m, h=h,
+                wcap=wcap, uses_sizes=uses_sizes,
+                enable_split=enable_split, enable_acm=enable_acm,
+                seed_new=seed_new, use_kernels=use_kernels, gcap=gcap,
+                full_merge=full_merge),
             lambda c: c,
             carry)
-        carry = _accumulate_window(
-            carry, x, n=n, m=m, use_kernels=use_kernels)
+        carry = _accumulate_window(carry, x, n=n, m=m)
         carry = _event_step(
             carry, x, spec, kind=kind, charge=charge,
             uses_sizes=uses_sizes, item_sizes=item_sizes, n=n, m=m)
@@ -809,12 +1214,13 @@ def _cgm_replay_impl(spec, cspec, init, xs, item_sizes, *, kind, charge,
 if HAS_JAX:
     @functools.lru_cache(maxsize=64)
     def _compiled_cgm_replay(kind, charge, uses_sizes, enable_split,
-                             enable_acm, seed_new, use_kernels, vmapped):
+                             enable_acm, seed_new, use_kernels, gcap,
+                             full_merge, vmapped):
         f = functools.partial(
             _cgm_replay_impl, kind=kind, charge=charge,
             uses_sizes=uses_sizes, enable_split=enable_split,
             enable_acm=enable_acm, seed_new=seed_new,
-            use_kernels=use_kernels)
+            use_kernels=use_kernels, gcap=gcap, full_merge=full_merge)
         if vmapped:
             # scenarios vmap over spec / cgm spec / carry; the schedule
             # tensors and item sizes are shared unbatched
@@ -826,24 +1232,39 @@ if HAS_JAX:
 # host seam: carry init, execution, state/policy sync
 # ---------------------------------------------------------------------------
 def init_cgm_carry(state, prev_crm, win_prefix, *, n, m, uses_sizes,
-                   item_sizes, layout=None):
+                   item_sizes, layout=None, schedule=None, h=None,
+                   wcap=None, dbuf=None):
     """Numpy engine/policy state -> the device scan carry (one lane).
 
-    The fused scan's hot-space embed and install reductions are sized by
-    the carry shapes themselves (``of``: n slots, ``E``: (n+1, m)), so
-    only a StateLayout that is dense-equivalent at (n, m) may back the
-    carry — callers route bucketed/sharded catalogs to the generic
-    schedule path (`JaxReplayEngine.replay`, `SweepEngine._run_jax`).
+    The carry is ALWAYS dense-n (``of``: n slots, ``E``: (n+1, m)) —
+    a StateLayout only has to keep rows unsharded for the in-scan
+    segment reductions to see the whole state; bucketed catalogs are
+    fine because the carry is built independently of the generic
+    schedule geometry.  The compact workspace dims come from the
+    ``schedule`` (or explicit ``h`` / ``wcap`` for the live ratchet);
+    ``h`` is bumped to fit a restored previous-window CRM.
     """
     from .engine_jax import N_ACC, state_to_device
     from .state_layout import StateLayout
 
     lay = StateLayout.resolve(layout)
-    if not lay.is_dense_for(n, m):
+    if not lay.supports_device_cgm(n, m):
         raise ValueError(
-            f"device CGM needs a dense-equivalent state layout at "
-            f"(n={n}, m={m}); {lay.kind!r} gives {lay.state_dims(n, m)} — "
-            "use the generic schedule path for this catalog")
+            f"device CGM needs row-unsharded state at (n={n}, m={m}); "
+            f"{lay.kind!r} shards rows across devices — use the generic "
+            "schedule path for this catalog")
+    if schedule is not None:
+        h = schedule.h if h is None else h
+        wcap = schedule.wcap if wcap is None else wcap
+        dbuf = schedule.d if dbuf is None else dbuf
+    if h is None or wcap is None:
+        raise ValueError(
+            "init_cgm_carry needs a CGM schedule or explicit h/wcap")
+    dbuf = 1 if dbuf is None else int(dbuf)
+    prev_nh = int(prev_crm.hot_items.size) if prev_crm is not None else 0
+    if prev_nh:
+        h = min(n, max(h, _bucket(prev_nh, 32, 32)))
+
     E0, a0 = state_to_device(state, n)
     of0 = np.asarray(state.partition.clique_of, np.int32)
     carry = {
@@ -852,29 +1273,42 @@ def init_cgm_carry(state, prev_crm, win_prefix, *, n, m, uses_sizes,
         "acc": np.zeros(N_ACC, np.float64),
         "of": of0,
         "cnt": np.bincount(of0, minlength=n + 1).astype(np.float64),
-        "crm": np.zeros((n, n), np.float32),
+        "wbuf": np.full((wcap, dbuf), -1, np.int32),
+        "wlen": np.zeros((), np.int32),
         "wcnt": np.zeros(n + 1, np.int32),
         "seed": np.zeros((n + 1, m), np.int32),
-        "pbin": np.zeros((n, n), bool),
-        "praw": np.zeros((n, n), np.float32),
-        "pnorm": np.zeros((n, n), np.float32),
-        "phot": np.zeros(n, bool),
+        "p_idx": np.full(h, n, np.int32),
+        "praw": np.zeros((h, h), np.float32),
+        "pnorm": np.zeros((h, h), np.float32),
+        "pbin": np.zeros((h, h), bool),
     }
     if uses_sizes:
         vol = np.zeros(n + 1, np.float64)
         np.add.at(vol, of0, np.asarray(item_sizes, np.float64))
         carry["vol"] = vol
-    if prev_crm is not None and prev_crm.hot_items.size:
-        hot, raw, norm, binary = prev_crm.embed(n)
-        carry["phot"], carry["praw"] = hot, raw
-        carry["pnorm"], carry["pbin"] = norm, binary
+    if prev_nh:
+        # the previous window's CRM in its compact coordinates: hot ids
+        # ascend on the host, matching the device's nonzero order
+        carry["p_idx"][:prev_nh] = np.asarray(prev_crm.hot_items, np.int32)
+        carry["praw"][:prev_nh, :prev_nh] = np.asarray(
+            prev_crm.raw, np.float32)
+        carry["pnorm"][:prev_nh, :prev_nh] = prev_crm.norm
+        carry["pbin"][:prev_nh, :prev_nh] = prev_crm.binary
     if win_prefix is not None:
         p_it, p_sv = win_prefix
         p_it = np.atleast_2d(np.asarray(p_it))
-        if p_it.shape[0]:
-            # the open window's already-fed requests (session feed):
-            # deduped co-occurrence, duplicate-counting item/seed tallies
-            carry["crm"] = cooccurrence_counts(p_it, n).astype(np.float32)
+        R0 = int(p_it.shape[0])
+        if R0:
+            # the open window's already-fed requests (session feed) go
+            # straight into the buffer; duplicate-counting item/seed
+            # tallies mirror the host window bookkeeping
+            if R0 > wcap or p_it.shape[1] > dbuf:
+                raise ValueError(
+                    f"window prefix ({R0} x {p_it.shape[1]}) exceeds the "
+                    f"carry buffer ({wcap} x {dbuf}); build the schedule "
+                    "with prefix_rows/prefix_slots")
+            carry["wbuf"][:R0, : p_it.shape[1]] = p_it
+            carry["wlen"] = np.asarray(R0, np.int32)
             flat = p_it.reshape(-1)
             carry["wcnt"] = np.bincount(
                 np.where(flat >= 0, flat, n), minlength=n + 1,
@@ -885,6 +1319,30 @@ def init_cgm_carry(state, prev_crm, win_prefix, *, n, m, uses_sizes,
             np.add.at(seed, (flat[ok], sv[ok]), 1)
             carry["seed"] = seed.astype(np.int32)
     return carry
+
+
+def cgm_loop_statics(cspec, carry0, *, enable_split, enable_acm):
+    """The two compile-time loop capacities derived from runtime spec.
+
+    * ``gcap`` — member-list width for the split worklist AND the
+      adjust-phase group lists: no group can exceed max(initial
+      partition, omega) (adjust merges are omega-capped; splits only
+      shrink), maxed over vmapped lanes and bucketed to keep recompiles
+      rare.  ``cgm_spec`` sets omega = n for no-split lanes, so the
+      bound stays an invariant there too.
+    * ``full_merge`` — True when ANY lane can run the approximate merge
+      OUTSIDE the pruning regime (the w/o-CS ablation: omega = n), so
+      the act space must hold all n groups (scap = 2n) instead of 2h.
+    """
+    om = np.atleast_1d(np.asarray(cspec["omega"], np.int64))
+    gam = np.atleast_1d(np.asarray(cspec["gamma"], np.float64))
+    omf = om.astype(np.float64)
+    prune = (om > 2) & (gam > (omf - 2.0) / omf)
+    full_merge = bool(enable_acm) and not bool(prune.all())
+    cnt_max = int(np.asarray(carry0["cnt"]).max())
+    gcap = _bucket(max(int(om.max()), cnt_max, 2), 8, 8)
+    del enable_split
+    return gcap, full_merge
 
 
 def run_cgm_schedule(schedule, spec, statics, cspec, carry0, item_sizes, *,
@@ -901,9 +1359,12 @@ def run_cgm_schedule(schedule, spec, statics, cspec, carry0, item_sizes, *,
 
         use_kernels = default_cgm_hooks()[0] is not None
     vmapped = carry0["E"].ndim == 3
+    gcap, full_merge = cgm_loop_statics(
+        cspec, carry0, enable_split=enable_split, enable_acm=enable_acm)
     fn = _compiled_cgm_replay(
         statics, charge, "vol" in carry0, bool(enable_split),
-        bool(enable_acm), bool(seed_new), bool(use_kernels), vmapped)
+        bool(enable_acm), bool(seed_new), bool(use_kernels), gcap,
+        full_merge, vmapped)
     with enable_x64():
         spec_j = {k: jnp.asarray(v) for k, v in spec.items()}
         cspec_j = {k: jnp.asarray(v) for k, v in cspec.items()}
@@ -939,8 +1400,15 @@ def sync_policy_from_run(policy, schedule, ofs, final, part) -> None:
         policy.size_history.append(sizes[sizes > 1])
     policy.n_windows += nbd
     policy._partition = part
-    policy._prev_crm = WindowCRM.from_full(
-        final["phot"], final["praw"], final["pnorm"], final["pbin"])
+    policy._prev_crm = WindowCRM.from_compact(
+        final["p_idx"], final["praw"], final["pnorm"], final["pbin"],
+        n=schedule.n)
+
+
+def policy_hot_dims(policy) -> list:
+    """The ``(top_frac, of_catalog)`` hot-capacity dims of one policy."""
+    cfg = policy.config
+    return [(float(cfg.top_frac), cfg.top_frac_of == "catalog")]
 
 
 def replay_cgm(jeng, policy, trace, *, t_cg, batch_size=None, next_cg0=None,
@@ -951,15 +1419,22 @@ def replay_cgm(jeng, policy, trace, *, t_cg, batch_size=None, next_cg0=None,
     eng = jeng.engine
     uses_sizes = bool(eng.model.uses_sizes)
     item_sizes = eng.env.sizes() if uses_sizes else None
+    prefix_rows = prefix_slots = 0
+    if win_prefix is not None:
+        p_it = np.atleast_2d(np.asarray(win_prefix[0]))
+        prefix_rows = int(p_it.shape[0])
+        prefix_slots = prefix_rows * max(1, int(p_it.shape[1]))
     schedule = build_cgm_schedule(
         trace, t_cg, uses_sizes=uses_sizes, batch_size=batch_size,
-        next_cg0=next_cg0)
+        next_cg0=next_cg0, hot_dims=policy_hot_dims(policy),
+        prefix_rows=prefix_rows, prefix_slots=prefix_slots)
     jeng.last_schedule = schedule
     cfg = policy.config
     cspec = cgm_spec(cfg, cfg.params, trace.n)
     carry0 = init_cgm_carry(
         eng.state, getattr(policy, "_prev_crm", None), win_prefix,
-        n=trace.n, m=trace.m, uses_sizes=uses_sizes, item_sizes=item_sizes)
+        n=trace.n, m=trace.m, uses_sizes=uses_sizes, item_sizes=item_sizes,
+        layout=getattr(jeng, "layout", None), schedule=schedule)
     final, ofs = run_cgm_schedule(
         schedule, jeng._spec, jeng._statics, cspec, carry0, item_sizes,
         charge=eng.caching_charge,
@@ -987,9 +1462,15 @@ def wants_device_cgm(policy, trace, model) -> bool:
 
     ``REPRO_JAX_CGM`` = ``force`` / ``off`` / ``auto`` (default).  Auto
     requires an unmodified AKPC-family policy (the on-device merge/split
-    mirrors ``AKPCPolicy.on_window`` exactly), a uniform keepalive dt,
-    no custom CRM hooks, and a catalog small enough that the n^2 carry
-    is cheap and the f32 co-occurrence counters stay exact integers.
+    mirrors ``AKPCPolicy.on_window`` exactly), a uniform keepalive dt
+    and no custom CRM hooks.  The CATALOG size no longer gates the path
+    — the boundary workspace is sized by the padded hot capacity ``h``
+    (window working set x ``top_frac``), so auto admits any catalog
+    whose ``h`` stays under ``MAX_DEVICE_CGM_HOT`` and whose window
+    request counts keep the f32 co-occurrence counters exact.  Lanes
+    that run the approximate merge OUTSIDE the pruning regime (the
+    w/o-CS ablation) still need a (2n, 2n) merge space, so those stay
+    small-catalog only.
     """
     mode = os.environ.get("REPRO_JAX_CGM", "auto").strip().lower()
     if mode in ("off", "0"):
@@ -1005,7 +1486,8 @@ def wants_device_cgm(policy, trace, model) -> bool:
     if not isinstance(policy, AKPCPolicy) \
             or type(policy).on_window is not AKPCPolicy.on_window:
         return False
-    if getattr(policy, "t_cg", None) is None:
+    t_cg = getattr(policy, "t_cg", None)
+    if t_cg is None:
         return False
     if cfg.crm_matmul is not None or cfg.pair_edges is not None:
         return False
@@ -1014,5 +1496,17 @@ def wants_device_cgm(policy, trace, model) -> bool:
         return False
     if mode in ("force", "1"):
         return True
-    return (trace.n <= MAX_DEVICE_CGM_N
-            and trace.n_requests * max(1, trace.d_max) < _F32_EXACT)
+    wmax = _max_window_requests(trace, t_cg)
+    if wmax + NE_TARGET >= _F32_EXACT:
+        return False
+    d_max = max(1, int(getattr(trace, "d_max", 1)))
+    smax = min(trace.n, wmax * d_max)
+    if hot_capacity(trace.n, smax, policy_hot_dims(policy)) \
+            > MAX_DEVICE_CGM_HOT:
+        return False
+    if cfg.enable_approx_merge:
+        omega = int(cfg.params.omega) if cfg.enable_split else int(trace.n)
+        prune = omega > 2 and float(cfg.params.gamma) > (omega - 2) / omega
+        if not prune and trace.n > 256:
+            return False
+    return True

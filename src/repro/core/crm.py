@@ -87,6 +87,26 @@ class WindowCRM:
             binary=np.asarray(binary)[ix].astype(bool),
         )
 
+    @classmethod
+    def from_compact(cls, p_idx, raw, norm, binary, *, n: int) -> "WindowCRM":
+        """Device compact carry -> host ``WindowCRM``.
+
+        ``p_idx`` is the padded (h,) hot->catalog index map (ascending
+        real ids first, pads = n); ``raw``/``norm``/``binary`` are the
+        (h, h) workspace matrices.  Trims the pad tail — the device
+        keeps pad rows/cols zeroed, so the leading (nh, nh) block IS the
+        host hot-space CRM (raw counts are exact f32 integers, restored
+        to int64 here).
+        """
+        p_idx = np.asarray(p_idx)
+        nh = int((p_idx < n).sum())
+        return cls(
+            hot_items=p_idx[:nh].astype(np.int32),
+            raw=np.asarray(raw)[:nh, :nh].astype(np.int64),
+            norm=np.asarray(norm)[:nh, :nh].astype(np.float32),
+            binary=np.asarray(binary)[:nh, :nh].astype(bool),
+        )
+
 
 def incidence_matrix(items: np.ndarray, n: int) -> np.ndarray:
     """One-hot request/item incidence H (B, n) from padded item ids.

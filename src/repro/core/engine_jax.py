@@ -676,8 +676,15 @@ def build_schedule(
     )
 
 
-def schedule_dims(s: ReplaySchedule) -> dict:
-    """The padded axis sizes of a schedule (for cross-schedule alignment)."""
+def schedule_dims(s) -> dict:
+    """The padded axis sizes of a schedule (for cross-schedule alignment).
+
+    Accepts either a generic :class:`ReplaySchedule` or a CGM schedule
+    (``core.cgm_jax.CGMSchedule``, duck-typed on ``boundary_steps``) so
+    streamed sessions can ratchet both kinds through one dims dict.
+    """
+    if hasattr(s, "boundary_steps"):
+        return {"nb": s.nb, "B": s.B, "d": s.d, "h": s.h, "W": s.wcap}
     d = {"nb": s.nb, "ne": s.ne,
          "nu": s.xs["upd_c"].shape[1], "na": s.xs["anc_c"].shape[1],
          "ncr": s.xs["inst_chg_rows"].shape[1],
@@ -686,14 +693,18 @@ def schedule_dims(s: ReplaySchedule) -> dict:
     return d
 
 
-def pad_schedule(s: ReplaySchedule, dims: dict) -> ReplaySchedule:
+def pad_schedule(s, dims: dict):
     """Pad a schedule's tensors up to ``dims`` (a superset of its own).
 
     SweepEngine aligns every schedule of one sweep call to common shapes so
     the device scan compiles exactly ONCE per (n, m, path) — padded steps
     and slots are inert by the same masking rules as intra-schedule
-    padding.
+    padding.  CGM schedules delegate to ``cgm_jax.pad_cgm_schedule``.
     """
+    if hasattr(s, "boundary_steps"):
+        from .cgm_jax import pad_cgm_schedule
+
+        return pad_cgm_schedule(s, dims)
     mine = schedule_dims(s)
     if mine == dims:
         return s
@@ -1147,12 +1158,14 @@ class JaxReplayEngine:
             if pol is not None:
                 from .cgm_jax import replay_cgm, wants_device_cgm
 
-                # the fused CGM scan derives its dump row from n (its
-                # carry holds (n, n) hot-space matrices), so it only
-                # engages when the layout is dense-equivalent at (n, m);
-                # bucketed/sharded catalogs take the generic schedule path
+                # the fused CGM scan keeps a dense-n carry of its own
+                # regardless of the session layout (compact (h, h) CRM
+                # workspace + (n+1,)-row state it builds via
+                # ``state_to_device``), so any single-shard layout —
+                # dense or bucketed — may take the device path
                 if wants_device_cgm(pol, trace, eng.model) \
-                        and self.layout.is_dense_for(eng.env.n, eng.env.m):
+                        and self.layout.supports_device_cgm(
+                            eng.env.n, eng.env.m):
                     return replay_cgm(
                         self, pol, trace, t_cg=t_cg,
                         batch_size=batch_size, next_cg0=next_cg0,

@@ -143,9 +143,22 @@ class StateLayout:
 
     def is_dense_for(self, n: int, m: int) -> bool:
         """True iff this layout reproduces the dense geometry bitwise at
-        (n, m) — the eligibility condition for paths (device CGM) whose
-        scan derives its dump row from ``n`` rather than the carry."""
+        (n, m) — the eligibility condition for paths whose scan derives
+        its dump row from ``n`` rather than the carry."""
         return self.row_shards == 1 and self.state_dims(n, m) == (n + 1, m)
+
+    def supports_device_cgm(self, n: int, m: int) -> bool:
+        """True iff the device-resident CGM may back an (n, m) catalog.
+
+        The CGM carry is built DENSE-n regardless of this layout (its
+        hot-space embeds and install reductions size themselves from the
+        carry, not from the schedule geometry), so any single-shard
+        layout qualifies — including ``bucketed``, whose padded generic
+        schedules never reach the CGM path.  Row-sharded state does not:
+        the in-scan segment reductions need the whole slot map on one
+        device."""
+        del n, m
+        return self.row_shards == 1
 
     def state_bytes(self, n: int, m: int) -> int:
         """Device bytes of one scenario's state (f64 E + i32 anchor)."""

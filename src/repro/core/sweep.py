@@ -262,9 +262,11 @@ class SweepEngine:
             cfg = getattr(policy, "config", None)
             if (pr["shards"] is not None
                     or pt.policy not in SHAREABLE_POLICIES or cfg is None
-                    # the fused CGM carry is dense-(n, m)-shaped; bucketed
-                    # and sharded layouts use the generic schedule path
-                    or not self.layout.is_dense_for(pt.trace.n, pt.trace.m)
+                    # the fused CGM carry is dense-n on its own, whatever
+                    # the session layout — only row-sharded state (which
+                    # splits the slot maps across devices) falls back
+                    or not self.layout.supports_device_cgm(
+                        pt.trace.n, pt.trace.m)
                     or not cgm_jax.wants_device_cgm(
                         policy, pt.trace, pr["model"])):
                 continue
@@ -411,15 +413,27 @@ class SweepEngine:
             cfg0 = g0["policy"].config
             uses_sizes = bool(g0["model"].uses_sizes)
             item_sizes = g0["env"].sizes() if uses_sizes else None
+            hot_dims = [cgm_jax.policy_hot_dims(prepared[i]["policy"])[0]
+                        for i in idxs]
             sched = cgm_jax.build_cgm_schedule(
                 trace, cfg0.t_cg, uses_sizes=uses_sizes,
-                batch_size=g0["bs"])
+                batch_size=g0["bs"], hot_dims=hot_dims)
+            # compact-workspace cohort: repeated sweep calls over the same
+            # catalog ratchet (nb, B, d, h, W) through _COHORT_DIMS so the
+            # CGM scan compiles once per cohort, not once per call shape
+            ckey_cgm = ("cgm", n, m_srv, sched.uses_sizes)
+            dims = ej.schedule_dims(sched)
+            cached = _COHORT_DIMS.get(ckey_cgm)
+            if cached is not None:
+                dims = {k: max(dims[k], cached[k]) for k in dims}
+            _COHORT_DIMS[ckey_cgm] = dims
+            sched = ej.pad_schedule(sched, dims)
             from .engine import CacheState
 
             carry1 = cgm_jax.init_cgm_carry(
                 CacheState.fresh(CliquePartition.singletons(n), m_srv),
                 None, None, n=n, m=m_srv, uses_sizes=uses_sizes,
-                item_sizes=item_sizes, layout=self.layout)
+                item_sizes=item_sizes, layout=self.layout, schedule=sched)
             S = len(idxs)
             spec = {
                 k: np.stack([prepared[i]["spec"][k] for i in idxs])

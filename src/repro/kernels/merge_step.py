@@ -92,3 +92,26 @@ def merge_density(X, sizes, omega, gamma32, *, bm: int = 128,
         om, gm, em,
     )
     return out[:S, :S]
+
+
+@jax.jit
+def merge_density_jnp(X, sizes, omega, gamma32):
+    """Fused-jnp fallback with ``core.cliques._densities`` float32 op
+    order — bit-identical to the Mosaic kernel."""
+    S = X.shape[0]
+    within = jnp.diag(X) / 2.0
+    e_u = (within[:, None] + within[None, :]) + X
+    om_f = jnp.asarray(omega, jnp.float64)
+    e_max = (om_f * (om_f - 1.0) / 2.0).astype(jnp.float32)
+    eyeS = jnp.eye(S, dtype=bool)
+    okp = ((sizes[:, None] + sizes[None, :])
+           == jnp.asarray(omega, jnp.int32)) & ~eyeS
+    dens = jnp.where(okp, e_u / e_max, -1.0)
+    return jnp.where(dens >= jnp.asarray(gamma32, jnp.float32), dens, -1.0)
+
+
+def merge_density_auto(X, sizes, omega, gamma32, **kw):
+    """Mosaic on TPU, fused jnp elsewhere (replaces interpret mode)."""
+    if jax.default_backend() == "tpu":
+        return merge_density(X, sizes, omega, gamma32, **kw)
+    return merge_density_jnp(X, sizes, omega, gamma32)

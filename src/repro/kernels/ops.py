@@ -1,16 +1,19 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-On this CPU-only container the kernels run with interpret=True (the Pallas
-body executed in Python, validating logic + BlockSpecs); on a real TPU the
-same call sites compile to Mosaic.  ``INTERPRET`` flips automatically.
+On a real TPU the CGM matmul hooks compile to Mosaic; on every other
+backend they dispatch to fused-jnp twins (bit-identical — exact fp32
+integer counts — and XLA-native fast, replacing the old interpret-mode
+fallback that executed the Pallas body in Python).  The segment-reduce
+and lookup kernels keep ``INTERPRET`` off-TPU: their scan-shaped bodies
+have no faster jnp twin at the hook seam.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from .clique_density import clique_pair_edges
-from .crm_update import crm_update
+from .clique_density import clique_pair_edges_auto
+from .crm_update import crm_update_auto
 from .packed_lookup import packed_lookup, unpacked_lookup
 from .segment_reduce import seg_running_argmax, seg_running_max
 
@@ -20,13 +23,13 @@ INTERPRET = jax.default_backend() != "tpu"
 def crm_matmul(H):
     """Accelerated CRM accumulation hook for repro.core.crm.build_window_crm:
     H (B, n) one-hot -> (n, n) counts (zero diagonal)."""
-    return np.asarray(crm_update(H, interpret=INTERPRET))
+    return np.asarray(crm_update_auto(H))
 
 
 def pair_edges(M, A):
     """Accelerated merge-score hook for repro.core.cliques.merge_scores:
     membership (k, h) x binary CRM (h, h) -> (k, k) union edge counts."""
-    return np.asarray(clique_pair_edges(M, A, interpret=INTERPRET))
+    return np.asarray(clique_pair_edges_auto(M, A))
 
 
 def seg_max(values, starts):

@@ -104,19 +104,23 @@ def _compiled_live_step(statics, charge, const_dt, use_pallas):
 
 @functools.lru_cache(maxsize=None)
 def _compiled_cgm_live_step(statics, charge, uses_sizes, enable_split,
-                            enable_acm, seed_new, use_kernels):
+                            enable_acm, seed_new, use_kernels, gcap,
+                            full_merge):
     """jit'd fused CGM+replay scan step with a DONATED carry dict.
 
     The per-step clique slot maps (``ofs``) double as the ring probe:
     they are a regular (non-donated) output, so the host can block on
     them, and they feed ``policy.size_history`` at sync time.
+    ``gcap`` / ``full_merge`` are the compile-time loop capacities from
+    ``cgm_jax.cgm_loop_statics``, fixed at carry creation.
     """
     from ..core import cgm_jax
 
     base = functools.partial(
         cgm_jax._cgm_replay_impl, kind=statics, charge=charge,
         uses_sizes=uses_sizes, enable_split=enable_split,
-        enable_acm=enable_acm, seed_new=seed_new, use_kernels=use_kernels)
+        enable_acm=enable_acm, seed_new=seed_new, use_kernels=use_kernels,
+        gcap=gcap, full_merge=full_merge)
 
     def step(spec, cspec, carry, xs, sizes):
         return base(spec, cspec, carry, xs, sizes)
@@ -168,12 +172,14 @@ class LiveServingEngine:
         ``compiles``); default 2.0 keeps steady-state streams on a
         single compile.
     cgm : ``"auto"`` (default) fuses clique generation into the device
-        scan when the policy/catalog pass ``wants_device_cgm`` (PR 6)
-        AND accelerator CGM kernels are wired — the host then ships only
-        raw request tensors and pays zero clique-generation calls.  On
-        kernel-less backends (CPU) auto resolves to the host-CGM packing
-        path, whose in-scan event math is far cheaper there; ``"force"``
-        overrides the backend check, ``"off"`` disables fusion.
+        scan when the policy/catalog pass ``wants_device_cgm`` — the
+        host then ships only raw request tensors and pays zero
+        clique-generation calls.  The compact hot-space boundary
+        (DESIGN.md §15) made this the winning path on EVERY backend:
+        CPU lanes run the same fused scan through jnp twins of the
+        Mosaic kernels, so auto no longer falls back off-TPU.
+        ``"force"`` keeps its meaning (assert fusion, error if
+        ineligible via the carry checks); ``"off"`` disables fusion.
     """
 
     def __init__(self, policy, n, m, *, env=None, batch_size=None,
@@ -218,20 +224,21 @@ class LiveServingEngine:
         self._cgm = False
         if cgm != "off":
             from ..core.cgm_jax import wants_device_cgm
-            from ..kernels.autowire import default_cgm_hooks
 
             eligible = wants_device_cgm(
                 self.policy,
                 _Chunk(np.zeros((0, 1), np.int64), np.zeros(0, np.int64),
                        np.zeros(0, np.float64), n, m),
                 self.session.engine.model)
-            has_kernels = default_cgm_hooks()[0] is not None
-            # the fused CGM carry is dense-(n, m)-shaped (cgm_jax);
-            # bucketed/sharded layouts stream through the schedule path
-            self._cgm = (eligible and self.layout.is_dense_for(n, m)
-                         and (has_kernels or cgm == "force"))
+            # the fused CGM carry is dense-n on its own whatever the
+            # session layout; only row-sharded state falls back — and
+            # the compact workspace means NO backend check: CPU fuses
+            # through the jnp kernel twins (DESIGN.md §15)
+            self._cgm = (eligible
+                         and self.layout.supports_device_cgm(n, m))
         self._cgm_carry = None      # device carry dict (E..of..crm..pbin)
-        self._cgm_dims = None       # fixed (nb, B, d) chunk shape
+        self._cgm_dims = None       # ratcheted (nb, B, d, h, W) chunk shape
+        self._cgm_statics = None    # (gcap, full_merge) loop capacities
         self._cspec_j = None
         self._sz_j = None
         self._ofs: list[tuple] = []  # (boundary_steps, ofs_dev) per chunk
@@ -457,10 +464,12 @@ class LiveServingEngine:
         else:
             self._dims = {k: max(self._dims[k], grown[k]) for k in grown}
 
-    def _ensure_cgm_carry(self) -> None:
+    def _ensure_cgm_carry(self, sched) -> None:
+        """Seed the CGM carry (once) with the compact dims of ``sched``."""
         if self._cgm_carry is not None:
             return
-        from ..core.cgm_jax import cgm_spec, init_cgm_carry
+        from ..core.cgm_jax import (
+            cgm_loop_statics, cgm_spec, init_cgm_carry)
         from ..kernels.autowire import default_cgm_hooks
 
         eng = self.session.engine
@@ -471,7 +480,7 @@ class LiveServingEngine:
             eng.state, getattr(pol, "_prev_crm", None),
             self.session._window_arrays() if self.session._win else None,
             n=self.n, m=self.m, uses_sizes=uses_sizes,
-            item_sizes=item_sizes)
+            item_sizes=item_sizes, layout=self.layout, schedule=sched)
         c = eng.costs
         # absolute-total accumulator seed, as in _ensure_carry
         carry0["acc"] = np.array([
@@ -487,32 +496,95 @@ class LiveServingEngine:
             uses_sizes, bool(cfg.enable_split),
             bool(cfg.enable_approx_merge), bool(eng.seed_new_cliques),
             default_cgm_hooks()[0] is not None)
+        cspec = cgm_spec(cfg, cfg.params, self.n)
+        self._cgm_statics = cgm_loop_statics(
+            cspec, carry0, enable_split=cfg.enable_split,
+            enable_acm=cfg.enable_approx_merge)
         with enable_x64():
             self._cgm_carry = {
                 k: jnp.asarray(v) for k, v in carry0.items()}
             self._spec_j = {
                 k: jnp.asarray(v) for k, v in self._jeng._spec.items()}
-            self._cspec_j = {
-                k: jnp.asarray(v)
-                for k, v in cgm_spec(cfg, cfg.params, self.n).items()}
+            self._cspec_j = {k: jnp.asarray(v) for k, v in cspec.items()}
             self._sz_j = (
                 jnp.asarray(item_sizes, jnp.float64)
                 if item_sizes is not None
                 else jnp.ones(self.n, jnp.float64))
 
+    def _grow_cgm_carry(self, h: int, wcap: int, dbuf: int) -> None:
+        """Re-embed the carry into a larger compact workspace (ratchet).
+
+        Blocks the ring (the donated carry must settle), zero-pads the
+        previous-CRM workspace / -1-pads the window buffer, and ships
+        the result back.  Costs one recompile, exactly like the generic
+        path's dims ratchet."""
+        self._block()
+        c = {k: np.asarray(v) for k, v in self._cgm_carry.items()}
+        oh = int(c["p_idx"].shape[0])
+        ow, od = (int(x) for x in c["wbuf"].shape)
+        h, wcap, dbuf = max(h, oh), max(wcap, ow), max(dbuf, od)
+        if h > oh:
+            p_idx = np.full(h, self.n, np.int32)
+            p_idx[:oh] = c["p_idx"]
+            c["p_idx"] = p_idx
+            for k, dt in (("praw", np.float32), ("pnorm", np.float32),
+                          ("pbin", bool)):
+                a = np.zeros((h, h), dt)
+                a[:oh, :oh] = c[k]
+                c[k] = a
+        if wcap > ow or dbuf > od:
+            wbuf = np.full((wcap, dbuf), -1, np.int32)
+            wbuf[:ow, :od] = c["wbuf"]
+            c["wbuf"] = wbuf
+        with enable_x64():
+            self._cgm_carry = {k: jnp.asarray(v) for k, v in c.items()}
+
     def _dispatch_cgm(self, items, servers, times) -> None:
         """Raw-tensor chunk dispatch: clique generation runs in-scan."""
         from ..core import cgm_jax
 
-        self._ensure_cgm_carry()
         sess = self.session
         eng = sess.engine
         R = times.shape[0]
         if sess._next_cg is None:
             sess._next_cg = float(times[0]) + sess._t_cg
+        # the open window's rows already live in the device buffer; the
+        # chunk schedule's head-window capacity must account for them
+        pre_rows = pre_slots = 0
+        for w_it, _w_sv in sess._win:
+            r = int(w_it.shape[0])
+            wd = int(w_it.shape[1]) if w_it.ndim == 2 else 1
+            pre_rows += r
+            pre_slots += r * wd
         sched = cgm_jax.build_cgm_schedule(
             _Chunk(items, servers, times, self.n, self.m), sess._t_cg,
-            uses_sizes=self._cgm_flags[0], next_cg0=sess._next_cg)
+            uses_sizes=bool(eng.model.uses_sizes), next_cg0=sess._next_cg,
+            hot_dims=cgm_jax.policy_hot_dims(self.policy),
+            prefix_rows=pre_rows, prefix_slots=pre_slots)
+        dims = ej.schedule_dims(sched)
+        if self._cgm_dims is None or any(
+                dims[k] > self._cgm_dims[k] for k in dims):
+            grown = {"nb": ej._bucket(int(dims["nb"] * 2), 4, 4),
+                     "B": ej._bucket(int(dims["B"] * 2), 32, 32),
+                     "d": dims["d"],
+                     "h": min(self.n,
+                              ej._bucket(int(dims["h"] * 2), 32, 32)),
+                     "W": ej._bucket(int(dims["W"] * 2), 64, 64)}
+            self._cgm_dims = (grown if self._cgm_dims is None else {
+                k: max(self._cgm_dims[k], grown[k]) for k in grown})
+        sched = ej.pad_schedule(sched, self._cgm_dims)
+        # growing B re-derives wcap; fold it back into the ratchet
+        self._cgm_dims["W"] = max(self._cgm_dims["W"], sched.wcap)
+        # carry creation reads the PRE-chunk open window (sess._win)
+        self._ensure_cgm_carry(sched)
+        cw, cd = (int(x) for x in self._cgm_carry["wbuf"].shape)
+        ch = int(self._cgm_carry["p_idx"].shape[0])
+        if ch < sched.h or cw < sched.wcap or cd < sched.d:
+            self._grow_cgm_carry(sched.h, sched.wcap, sched.d)
+        elif ch > sched.h:
+            # a restored previous-window CRM bumped the carry's h past
+            # the schedule's; ratchet the dims so they stay aligned
+            self._cgm_dims["h"] = max(self._cgm_dims["h"], ch)
         if sched.next_cg is not None:
             sess._next_cg = sched.next_cg
         if sched.boundary_hit:
@@ -529,20 +601,12 @@ class LiveServingEngine:
         self._host_nreq += sched.n_requests
         self._host_nitem += sched.n_item_requests
         self._dispatched_total += R
-        dims = {"nb": sched.nb, "B": sched.B, "d": sched.d}
-        if self._cgm_dims is None or any(
-                dims[k] > self._cgm_dims[k] for k in dims):
-            grown = {"nb": ej._bucket(int(dims["nb"] * 2), 4, 4),
-                     "B": ej._bucket(int(dims["B"] * 2), 32, 32),
-                     "d": dims["d"]}
-            self._cgm_dims = (grown if self._cgm_dims is None else {
-                k: max(self._cgm_dims[k], grown[k]) for k in grown})
-        xs = _pad_cgm_xs(sched, self._cgm_dims)
         fn = _compiled_cgm_live_step(
-            self._jeng._statics, eng.caching_charge, *self._cgm_flags)
+            self._jeng._statics, eng.caching_charge, *self._cgm_flags,
+            *self._cgm_statics)
         before = cgm_jax.SCAN_TRACES
         with enable_x64():
-            xs_j = {k: jnp.asarray(v) for k, v in xs.items()}
+            xs_j = {k: jnp.asarray(v) for k, v in sched.xs.items()}
             self._cgm_carry, ofs = fn(
                 self._spec_j, self._cspec_j, self._cgm_carry, xs_j,
                 self._sz_j)
@@ -684,42 +748,12 @@ class LiveServingEngine:
         pol.n_windows += nbd
         if self._cgm_bound:
             pol._partition = part
-            pol._prev_crm = WindowCRM.from_full(
-                np.asarray(self._cgm_carry["phot"]),
+            pol._prev_crm = WindowCRM.from_compact(
+                np.asarray(self._cgm_carry["p_idx"]),
                 np.asarray(self._cgm_carry["praw"]),
                 np.asarray(self._cgm_carry["pnorm"]),
-                np.asarray(self._cgm_carry["pbin"]))
+                np.asarray(self._cgm_carry["pbin"]), n=self.n)
         self._part = part
-
-
-def _pad_cgm_xs(sched, dims: dict) -> dict:
-    """Pad a ``CGMSchedule``'s tensors up to fixed (nb, B, d) dims.
-
-    Padded request slots carry item -1 (-> dump clique K: no events, no
-    window counts); padded steps additionally carry ``cg=False`` so no
-    boundary fires — the same masking that makes intra-schedule padding
-    inert (``cgm_jax._event_step`` / ``_accumulate_window``).
-    """
-    onb, oB, od = sched.nb, sched.B, sched.d
-    nb, B, d = dims["nb"], dims["B"], dims["d"]
-    if (onb, oB, od) == (nb, B, d):
-        return sched.xs
-    xs = sched.xs
-    items = np.full((nb, B, d), -1, np.int32)
-    items[:onb, :oB, :od] = xs["items"]
-    servers = np.zeros((nb, B), np.int32)
-    servers[:onb, :oB] = xs["servers"]
-    times = np.zeros((nb, B), np.float64)
-    times[:onb, :oB] = xs["times"]
-    # pad times with each step's last real value (inert but tidy)
-    if oB < B:
-        times[:onb, oB:] = xs["times"][:, -1:]
-    cg = np.zeros(nb, bool)
-    cg[:onb] = xs["cg"]
-    now = np.zeros(nb, np.float64)
-    now[:onb] = xs["now"]
-    return {"items": items, "servers": servers, "times": times,
-            "cg": cg, "now": now}
 
 
 def _cat_items(chunks: list) -> np.ndarray:

@@ -60,12 +60,12 @@ def _kw(theta, gamma, omega, **extra):
 
 
 def _oracle_trajectory(trace, theta, gamma, omega, *, enable_split=True,
-                       enable_acm=True):
+                       enable_acm=True, t_cg=T_CG):
     """The frozen-oracle partition at every T_CG boundary, walking the
     trace exactly as ``ReplayEngine.replay`` / ``build_cgm_schedule`` do."""
     times = trace.times
     R = times.shape[0]
-    next_cg = float(times[0]) + T_CG
+    next_cg = float(times[0]) + t_cg
     win_start = pos = 0
     prev = prev_crm = None
     parts = []
@@ -83,7 +83,7 @@ def _oracle_trajectory(trace, theta, gamma, omega, *, enable_split=True,
             prev_crm = crm
             win_start = pos
             while next_cg <= t:
-                next_cg += T_CG
+                next_cg += t_cg
             continue
         pos = cut
     return parts
@@ -115,7 +115,7 @@ def test_device_partitions_match_oracle_fig7_grid(trace):
     S = len(combos)
     carry1 = cgm_jax.init_cgm_carry(
         jeng.engine.state, None, None, n=trace.n, m=trace.m,
-        uses_sizes=False, item_sizes=None)
+        uses_sizes=False, item_sizes=None, schedule=sched)
     carry0 = {k: np.stack([v] * S) for k, v in carry1.items()}
     spec = {k: np.stack([v] * S) for k, v in jeng._spec.items()}
     final, ofs = cgm_jax.run_cgm_schedule(
@@ -190,7 +190,7 @@ def test_escape_hatch_forces_host_path(trace, monkeypatch):
     assert np.isclose(got.costs.total, ref.costs.total, rtol=1e-9)
 
 
-def test_wants_device_cgm_gating(trace):
+def test_wants_device_cgm_gating(trace, monkeypatch):
     pol = get_policy("akpc", **_kw(0.2, 0.85, 4))
     pol.bind(trace.n, trace.m)
     env = CacheEnvironment.resolve(None, trace, pol.params)
@@ -208,20 +208,29 @@ def test_wants_device_cgm_gating(trace):
                                       crm_matmul=lambda H: H.T @ H))
     hooked.bind(trace.n, trace.m)
     assert not cgm_jax.wants_device_cgm(hooked, trace, model)
-    # oversized catalogs fall back in auto mode, but force overrides
+    # the catalog size no longer gates the path — only the padded hot
+    # capacity does; big-catalog traces are admitted as long as their
+    # window working set keeps h under MAX_DEVICE_CGM_HOT
     big = synth_trace(SynthConfig(
-        kind="netflix", n_items=cgm_jax.MAX_DEVICE_CGM_N + 8, n_servers=4,
+        kind="netflix", n_items=4 * 256 + 8, n_servers=4,
         n_requests=40, t_max=2.0, seed=0))
     big_env = CacheEnvironment.resolve(None, big, pol.params)
     big_model = get_cost_model("table1", big_env)
+    assert cgm_jax.wants_device_cgm(pol, big, big_model)
+    # ... but an oversized hot capacity falls back in auto mode
+    monkeypatch.setattr(cgm_jax, "MAX_DEVICE_CGM_HOT", 8)
     assert not cgm_jax.wants_device_cgm(pol, big, big_model)
-    import os
-
-    os.environ["REPRO_JAX_CGM"] = "force"
-    try:
-        assert cgm_jax.wants_device_cgm(pol, big, big_model)
-    finally:
-        os.environ.pop("REPRO_JAX_CGM", None)
+    monkeypatch.setenv("REPRO_JAX_CGM", "force")
+    assert cgm_jax.wants_device_cgm(pol, big, big_model)
+    monkeypatch.delenv("REPRO_JAX_CGM")
+    monkeypatch.undo()
+    # non-prune approximate-merge lanes still need the (2n, 2n) merge
+    # space, so they stay small-catalog only (w/o-CS ablation regime)
+    soft = get_policy("akpc", **_kw(0.2, 0.4, 4))
+    soft.bind(big.n, big.m)
+    assert not cgm_jax.wants_device_cgm(soft, big, big_model)
+    soft.bind(trace.n, trace.m)
+    assert cgm_jax.wants_device_cgm(soft, trace, model)
 
 
 def test_merge_density_kernel_matches_jnp_interpret():
@@ -263,7 +272,7 @@ def test_device_cgm_with_kernels_interpret(trace):
     cspec = cgm_jax.cgm_spec(pol.config, pol.config.params, trace.n)
     carry0 = cgm_jax.init_cgm_carry(
         jeng.engine.state, None, None, n=trace.n, m=trace.m,
-        uses_sizes=False, item_sizes=None)
+        uses_sizes=False, item_sizes=None, schedule=sched)
     final, _ = cgm_jax.run_cgm_schedule(
         sched, jeng._spec, jeng._statics, cspec, carry0, None,
         use_kernels=True)
@@ -275,3 +284,113 @@ def test_device_cgm_with_kernels_interpret(trace):
     assert np.isclose(acc[0], d["transfer"], rtol=1e-9)
     assert np.isclose(acc[1], d["caching"], rtol=1e-9)
     assert int(acc[3]) == d["n_misses"]
+
+
+# ---------------------------------------------------------------------------
+# compact hot space beyond the old 256-item cap (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+N_BIG = 4096
+T_CG_BIG = 2.0
+
+
+@pytest.fixture(scope="module")
+def big_trace():
+    return synth_trace(SynthConfig(
+        kind="spotify", n_items=N_BIG, n_servers=12, n_requests=1500,
+        t_max=8.0, bundle_cover=1.0, bundle_zipf=0.7, seed=3))
+
+
+def test_big_catalog_chained_parity_vs_oracle(big_trace):
+    """n=4096 — far beyond the old MAX_DEVICE_CGM_N = 256 cap: the
+    compact hot-space boundary reproduces the cliques_ref oracle
+    element-for-element at every chained window."""
+    trace = big_trace
+    pol = get_policy("akpc", params=CostParams(theta=0.2, gamma=0.85,
+                                               omega=4),
+                     t_cg=T_CG_BIG, top_frac=TOP_FRAC)
+    pol.bind(trace.n, trace.m)
+    env = CacheEnvironment.resolve(None, trace, pol.params)
+    jeng = JaxReplayEngine(trace.n, trace.m, pol.params, env=env)
+    sched = cgm_jax.build_cgm_schedule(
+        trace, T_CG_BIG, uses_sizes=False,
+        hot_dims=cgm_jax.policy_hot_dims(pol))
+    assert sched.boundary_steps.size >= 3          # chained windows
+    assert sched.h < trace.n                       # genuinely compact
+    cspec = cgm_jax.cgm_spec(pol.config, pol.config.params, trace.n)
+    carry0 = cgm_jax.init_cgm_carry(
+        jeng.engine.state, None, None, n=trace.n, m=trace.m,
+        uses_sizes=False, item_sizes=None, schedule=sched)
+    final, ofs = cgm_jax.run_cgm_schedule(
+        sched, jeng._spec, jeng._statics, cspec, carry0, None)
+    want = _oracle_trajectory(trace, 0.2, 0.85, 4, t_cg=T_CG_BIG)
+    assert len(want) == sched.boundary_steps.size
+    for w, (b, ref_of) in enumerate(zip(sched.boundary_steps, want)):
+        assert np.array_equal(ofs[int(b)], ref_of), f"window={w}"
+    assert np.array_equal(final["of"], want[-1])
+
+
+@pytest.mark.parametrize("layout_kind", ["dense", "bucketed"])
+def test_big_catalog_layouts_route_device(big_trace, layout_kind):
+    """run_policy_jax keeps the CGM on device at n=4096 under both the
+    dense and the bucketed StateLayout, and the final partition still
+    matches the frozen oracle."""
+    from repro.core.state_layout import StateLayout
+
+    layout = None if layout_kind == "dense" else StateLayout(
+        kind="bucketed")
+    trace = big_trace
+    pol = get_policy("akpc", params=CostParams(theta=0.2, gamma=0.85,
+                                               omega=4),
+                     t_cg=T_CG_BIG, top_frac=TOP_FRAC)
+    before = cliques_mod.CGM_CALLS
+    got = run_policy_jax(pol, trace, layout=layout)
+    assert cliques_mod.CGM_CALLS == before          # zero host CGM calls
+    want = _oracle_trajectory(trace, 0.2, 0.85, 4, t_cg=T_CG_BIG)
+    assert np.array_equal(
+        got.clique_sizes, np.bincount(want[-1]).astype(np.int64))
+
+
+def test_wants_device_cgm_accepts_ten_k_catalog():
+    """The ISSUE-10 acceptance bar: auto-routing admits 10^4 items."""
+    from repro.core.cost import get_cost_model
+
+    big = synth_trace(SynthConfig(
+        kind="netflix", n_items=10_000, n_servers=8, n_requests=60,
+        t_max=2.0, seed=0))
+    pol = get_policy("akpc", **_kw(0.2, 0.85, 4))
+    pol.bind(big.n, big.m)
+    env = CacheEnvironment.resolve(None, big, pol.params)
+    model = get_cost_model("table1", env)
+    assert cgm_jax.wants_device_cgm(pol, big, model)
+
+
+def test_window_crm_f32_exact_guard():
+    """Co-occurrence counts live in f32: a window capacity at 2**24
+    must be refused BEFORE any tracing (counts could silently lose
+    integer exactness), while wcap just below the bound traces fine —
+    checked abstractly so no (2**24, d) buffer is ever allocated."""
+    import jax.numpy as jnp
+
+    with pytest.raises(ValueError, match="f32"):
+        cgm_jax._window_crm_device(
+            None, None, n=8, h=4, wcap=cgm_jax._F32_EXACT,
+            use_kernels=False)
+
+    n, h, dbuf = 8, 4, 2
+    wcap = cgm_jax._F32_EXACT - 1
+    carry = {
+        "wcnt": jax.ShapeDtypeStruct((n + 1,), jnp.int32),
+        "wbuf": jax.ShapeDtypeStruct((wcap, dbuf), jnp.int32),
+        "wlen": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    cspec = {
+        "theta": jax.ShapeDtypeStruct((), jnp.float32),
+        "top_frac": jax.ShapeDtypeStruct((), jnp.float64),
+        "of_catalog": jax.ShapeDtypeStruct((), jnp.bool_),
+    }
+    out = jax.eval_shape(
+        lambda c, s: cgm_jax._window_crm_device(
+            c, s, n=n, h=h, wcap=wcap, use_kernels=False),
+        carry, cspec)
+    assert out[3].shape == (h, h)                  # raw CRM
+    assert out[5].shape == (h, h)                  # binary CRM

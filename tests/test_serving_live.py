@@ -259,3 +259,32 @@ def test_live_cgm_force_matches_offline():
     sess.feed_trace(trace)
     assert eng.partition.canonical() == sess.partition.canonical()
     assert eng.policy.n_windows == ref.n_windows
+
+
+def test_live_cgm_auto_routes_device_on_cpu():
+    """DESIGN.md §15: ``cgm="auto"`` fuses clique generation into the
+    serving scan on EVERY backend — the compact hot space removed the
+    accelerator-kernel requirement, so plain CPU routes device too.
+    Row-sharded state is the one remaining fallback."""
+    import jax
+
+    from repro.core.state_layout import StateLayout
+
+    trace = _trace(n_requests=1500)
+    assert jax.default_backend() == "cpu"    # the lane this gate is about
+    eng = LiveServingEngine(_policy(), trace.n, trace.m, chunk_size=512)
+    assert eng._cgm                          # auto flipped ON, no kernels
+    _stream(eng, trace)
+    eng.drain()
+    ref = run_policy(_policy(), trace)
+    assert_same_costs(ref.costs, eng.costs)
+    assert eng.policy.n_windows == ref.n_windows
+
+    # explicit off and ineligible policies still fall back to the host
+    assert not LiveServingEngine(_policy(), trace.n, trace.m,
+                                 cgm="off")._cgm
+    assert not LiveServingEngine(_policy("ttl"), trace.n, trace.m)._cgm
+    # row-sharded state: the in-scan reductions need unsharded rows
+    sharded = StateLayout(kind="row_sharded", shards=3)
+    assert not LiveServingEngine(_policy(), trace.n, trace.m,
+                                 layout=sharded)._cgm

@@ -109,15 +109,23 @@ def test_state_bytes_telemetry():
         9999, 600)
 
 
-def test_device_cgm_refuses_non_dense_layouts():
+def test_device_cgm_layout_gating():
+    """The compact CGM carry is dense-n regardless of layout, so any
+    row-unsharded layout qualifies (bucketed included); row-sharded
+    state is refused — the in-scan segment reductions need every slot
+    on one device."""
     from repro.core import cgm_jax
     from repro.core.engine import CacheState, CliquePartition
 
     st = CacheState.fresh(CliquePartition.singletons(8), 4)
+    carry = cgm_jax.init_cgm_carry(st, None, None, n=8, m=4,
+                                   uses_sizes=False, item_sizes=None,
+                                   layout=BUCKETED, h=4, wcap=64)
+    assert carry["of"].shape == (8,)                # dense-n carry
     with pytest.raises(ValueError):
         cgm_jax.init_cgm_carry(st, None, None, n=8, m=4,
                                uses_sizes=False, item_sizes=None,
-                               layout=BUCKETED)
+                               layout=SHARDED3, h=4, wcap=64)
 
 
 # ---------------------------------------------------------------------------
